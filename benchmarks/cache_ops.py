@@ -1,0 +1,93 @@
+"""Paper §6 Figures 4-6: cache add / lookup latency vs cache size, and the
+operation-overhead breakdown (embedding dominates).
+
+Mirrors the paper's methodology on SQuAD-scale workloads: adds and lookups
+are measured on the cache data path (vectors precomputed) exactly as Figs
+4-5 plot them; Fig 6 adds the per-query embedding cost on top.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_it
+from repro.core import NgramHashEmbedder, get_embedder
+from repro.core.vector_store import InMemoryVectorStore
+
+DIM = 256
+SIZES = [1_000, 10_000, 50_000, 130_000]  # paper: up to 130k SQuAD pairs
+
+
+def _random_unit(n, dim, seed=0):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=(n, dim)).astype(np.float32)
+    return v / np.linalg.norm(v, axis=1, keepdims=True)
+
+
+def bench_add():
+    """Fig 4: average ms to add a query-result pair, from an empty cache."""
+    for n in SIZES:
+        store = InMemoryVectorStore(DIM, capacity=n)
+        vecs = _random_unit(n, DIM)
+        import time
+
+        t0 = time.perf_counter()
+        for i in range(n):
+            store.add(vecs[i], f"q{i}", f"a{i}")
+        dt = (time.perf_counter() - t0) / n
+        emit(f"fig4_add_avg_n{n}", dt * 1e6, f"ms_per_add={dt*1e3:.4f}")
+
+
+def bench_lookup():
+    """Fig 5: average ms per lookup at several cache sizes (flat in N)."""
+    for n in SIZES:
+        store = InMemoryVectorStore(DIM, capacity=n)
+        vecs = _random_unit(n, DIM)
+        for i in range(n):
+            store.add(vecs[i], f"q{i}", f"a{i}")
+        probes = _random_unit(32, DIM, seed=1)
+        i = [0]
+
+        def one():
+            store.search(probes[i[0] % 32], k=4)
+            i[0] += 1
+
+        dt = time_it(one, repeats=20, warmup=5)
+        emit(f"fig5_lookup_avg_n{n}", dt * 1e6, f"ms_per_lookup={dt*1e3:.4f}")
+
+
+def bench_breakdown():
+    """Fig 6: embedding vs add vs lookup overheads."""
+    emb = get_embedder("contriever-msmarco")
+    q = "What is an application-level denial of service attack?"
+    dt_embed = time_it(lambda: emb.embed_one(q), repeats=5, warmup=2)
+    emit("fig6_embed_contriever", dt_embed * 1e6, f"ms={dt_embed*1e3:.2f}")
+
+    for n in (1_000, 130_000):
+        store = InMemoryVectorStore(DIM, capacity=n)
+        vecs = _random_unit(n, DIM)
+        import time
+
+        t0 = time.perf_counter()
+        for i in range(n):
+            store.add(vecs[i], f"q{i}", f"a{i}")
+        dt_add = (time.perf_counter() - t0) / n
+        probes = _random_unit(16, DIM, seed=2)
+        k = [0]
+
+        def one():
+            store.search(probes[k[0] % 16], k=4)
+            k[0] += 1
+
+        dt_lookup = time_it(one, repeats=20, warmup=5)
+        emit(f"fig6_add_n{n}", dt_add * 1e6, f"ms={dt_add*1e3:.4f}")
+        emit(f"fig6_lookup_n{n}", dt_lookup * 1e6, f"ms={dt_lookup*1e3:.4f}")
+
+
+def main():
+    bench_add()
+    bench_lookup()
+    bench_breakdown()
+
+
+if __name__ == "__main__":
+    main()

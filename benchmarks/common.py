@@ -1,0 +1,26 @@
+"""Benchmark helpers: timing + CSV rows."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_it(fn: Callable, *, repeats: int = 5, warmup: int = 1) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]

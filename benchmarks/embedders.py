@@ -1,0 +1,38 @@
+"""Paper §6 Figure 7: average embedding time across five models.
+
+The two local models run as real JAX encoders; the three OpenAI endpoints
+are simulated with their relative latency profile (remote RTT + per-token
+cost), reproducing the paper's ordering: local models are fastest and free.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, time_it
+from repro.core import get_embedder
+from repro.data.synthetic import squad_like_qa
+
+MODELS = [
+    "contriever-msmarco",
+    "e5-large-v2",
+    "text-embedding-ada-002",
+    "text-embedding-3-small",
+    "text-embedding-3-large",
+]
+
+
+def main():
+    questions = [q for q, _, _ in squad_like_qa(8, 4)][:16]
+    for name in MODELS:
+        emb = get_embedder(name)
+        i = [0]
+
+        def one():
+            emb.embed_one(questions[i[0] % len(questions)])
+            i[0] += 1
+
+        dt = time_it(one, repeats=5, warmup=2)
+        cost = getattr(emb, "usd_per_mtok", 0.0)
+        emit(f"fig7_embed_{name}", dt * 1e6, f"ms={dt*1e3:.2f};usd_per_mtok={cost}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,223 @@
+"""§Perf hillclimbing (assignment): baseline -> change -> re-lower -> measure,
+for the three selected cells + the paper-technique cache-lookup cell.
+
+Each experiment lowers the SAME cell with and without one change and reports
+the roofline-term deltas from the compiled artifacts. Run after the dry-run:
+
+  PYTHONPATH=src python -m benchmarks.perf_iterations
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.dryrun import extrapolate_costs
+from repro.launch.hlo_analysis import parse_collective_bytes
+from repro.launch.mesh import make_production_mesh
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+RESULTS = []
+
+
+def terms(ext):
+    return {
+        "compute_s": ext["flops"] / PEAK,
+        "memory_s": ext["bytes_accessed"] / HBM,
+        "collective_s": ext["collectives"].get("total", 0.0) / LINK,
+    }
+
+
+def record(name, hypothesis, before, after):
+    row = {"experiment": name, "hypothesis": hypothesis, "before": before, "after": after}
+    for key in before:
+        b, a = before[key], after[key]
+        row[f"delta_{key}"] = (a - b) / b if b else 0.0
+    RESULTS.append(row)
+    print(f"\n=== {name}")
+    print(f"    {hypothesis}")
+    for key in before:
+        print(f"    {key}: {before[key]:.4e} -> {after[key]:.4e} "
+              f"({(after[key]-before[key])/max(before[key],1e-12)*100:+.1f}%)")
+
+
+def exp_qwen3_prefill_tp_params(mesh):
+    """Most collective-bound cell: qwen3-8b prefill_32k.
+
+    Hypothesis: the collective term is dominated by per-layer FSDP weight
+    all-gathers (ZeRO-3 kept at inference). Params are ~1 GB/chip at TP=16,
+    so replicating them over `data` removes those all-gathers: expected
+    collective-bytes drop of roughly params_bytes x (per layer re-gather) —
+    >= 70% of the term — for +15x resident param bytes (still fits HBM).
+    """
+    base = extrapolate_costs("qwen3-8b", "prefill_32k", mesh)
+    cfg = dataclasses.replace(get_config("qwen3-8b"), infer_params_tp_only=True)
+    opt = extrapolate_costs("qwen3-8b", "prefill_32k", mesh, cfg=cfg)
+    record("qwen3-8b x prefill_32k: TP-only inference params",
+           "per-layer FSDP weight all-gathers dominate the collective term; "
+           "replicating params over `data` at inference removes them",
+           terms(base), terms(opt))
+
+
+def exp_qwen3_prefill_repeat_kv(mesh):
+    """Follow-up on the REFUTED #1: the per-kind breakdown shows the qwen3
+    prefill collective term is 179 GiB all-reduce + 52 GiB collective-permute
+    per device — activation resharding, not weight gathers. Root cause: the
+    GQA einsum's [K=8, G=4] head split leaves a kv-head dim that model=16
+    cannot divide, so the score/value einsums drop TP and GSPMD all-reduces.
+
+    Hypothesis: repeating KV to full heads (4x KV bytes, tiny vs activations)
+    keeps attention H=32-sharded: the activation all-reduces collapse to the
+    one per-layer wo reduction; expect the collective term to drop >= 50%.
+    """
+    base = extrapolate_costs("qwen3-8b", "prefill_32k", mesh)
+    cfg = dataclasses.replace(get_config("qwen3-8b"), gqa_repeat_kv=True)
+    opt = extrapolate_costs("qwen3-8b", "prefill_32k", mesh, cfg=cfg)
+    record("qwen3-8b x prefill_32k: repeat-KV head-parallel attention",
+           "GQA [K,G] split breaks TP on kv=8 over model=16; repeating KV to "
+           "H keeps the score einsums head-sharded",
+           terms(base), terms(opt))
+
+
+def exp_gemma2_train_remat(mesh):
+    """Paper-representative trainer (largest dense model): gemma2-27b train_4k.
+
+    Hypothesis: full remat recomputes every matmul in backward (~+1 forward
+    = +33% FLOPs). Saving dot outputs ('dots' policy) removes the recompute:
+    compute term ~ -20..25%; memory term may rise (saved activations are
+    written/re-read) but must not become dominant.
+    """
+    base = extrapolate_costs("gemma2-27b", "train_4k", mesh)
+    cfg = dataclasses.replace(get_config("gemma2-27b"), remat_policy="dots")
+    opt = extrapolate_costs("gemma2-27b", "train_4k", mesh, cfg=cfg)
+    record("gemma2-27b x train_4k: remat policy full -> dots",
+           "full remat pays ~an extra forward in backward; saving matmul "
+           "outputs trades HBM bytes for the recompute FLOPs",
+           terms(base), terms(opt))
+
+
+def exp_gemma2_decode_kv_dtype(mesh):
+    """Worst-roofline-fraction family (decode): gemma2-27b decode_32k.
+
+    Hypothesis: decode's memory term IS the KV-cache stream (the whole
+    [B, 32k] cache is read every step). Storing KV in fp8 halves cache
+    bytes: memory term ~ -40..50% (quality tradeoff is an eval concern,
+    recorded in DESIGN.md §8; scales-per-head int8 is the production
+    variant, byte-count identical).
+    """
+    base = extrapolate_costs("gemma2-27b", "decode_32k", mesh)
+    cfg = dataclasses.replace(get_config("gemma2-27b"), kv_cache_dtype="float8_e4m3fn")
+    opt = extrapolate_costs("gemma2-27b", "decode_32k", mesh, cfg=cfg)
+    record("gemma2-27b x decode_32k: KV cache bf16 -> fp8",
+           "decode memory term == KV-cache stream; halving cache bytes "
+           "nearly halves the dominant term",
+           terms(base), terms(opt))
+
+
+def exp_cache_lookup_hierarchical(mesh_multi):
+    """The paper's own technique: sharded cache lookup on the 2x16x16 mesh.
+
+    Hypothesis: the flat merge all-gathers every shard's [Q,k] candidates
+    across BOTH axes; merging per pod first (ICI) and crossing the DCN with
+    only [Q,k] cuts cross-network candidate bytes ~16x on the pod hop.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed.sharded_store import make_sharded_lookup
+
+    n, dim, q, k = (1 << 20), 768, 16, 8
+    n -= n % 512
+    db = jax.ShapeDtypeStruct((n, dim), jnp.float32)
+    valid = jax.ShapeDtypeStruct((n,), jnp.bool_)
+    qv = jax.ShapeDtypeStruct((q, dim), jnp.float32)
+    out = {}
+    for tag, hier in (("flat", False), ("hierarchical", True)):
+        lookup = make_sharded_lookup(mesh_multi, k=k, hierarchical=hier)
+        fn = jax.jit(
+            lookup,
+            in_shardings=(
+                NamedSharding(mesh_multi, P(("pod", "data"), None)),
+                NamedSharding(mesh_multi, P(("pod", "data"))),
+                NamedSharding(mesh_multi, P()),
+            ),
+        )
+        compiled = fn.lower(db, valid, qv).compile()
+        coll = parse_collective_bytes(compiled.as_text())
+        cost = compiled.cost_analysis() or {}
+        out[tag] = {
+            "collective_bytes": coll.get("total", 0.0),
+            "collective_s": coll.get("total", 0.0) / LINK,
+            "compute_s": float(cost.get("flops", 0.0)) / PEAK,
+        }
+    record("cache_lookup x 2x16x16: flat -> hierarchical merge",
+           "merge per pod over ICI first so the DCN hop carries Q*k "
+           "candidates instead of n_shards*Q*k",
+           out["flat"], out["hierarchical"])
+
+
+def exp_deepseek_multipod_zero1(mesh_multi):
+    """Capacity iteration: deepseek-v3-671b train_4k on 2x16x16.
+
+    Hypothesis: multi-pod did NOT reduce state bytes (params/moments shard
+    over data x model = 256 chips; pods replicate). Cross-pod ZeRO-1
+    (moments additionally over `pod`) halves moment bytes per chip for one
+    DCN gather per step.
+    """
+    from repro.launch.dryrun import lower_cell
+
+    base = lower_cell("deepseek-v3-671b", "train_4k", mesh_multi, parse_hlo=False)
+    cfg = dataclasses.replace(get_config("deepseek-v3-671b"), opt_pod_sharded=True)
+    opt = lower_cell("deepseek-v3-671b", "train_4k", mesh_multi, parse_hlo=False, cfg=cfg)
+
+    def mem(rec):
+        return {
+            "state_bytes_gib": rec["memory"]["argument_bytes"] / 2**30,
+            "total_bytes_gib": rec["bytes_per_device"] / 2**30,
+        }
+
+    record("deepseek-v3-671b x train_4k (2x16x16): cross-pod ZeRO-1 moments",
+           "pods replicate optimizer state; sharding moments over `pod` "
+           "halves their per-chip bytes for one DCN gather per step",
+           mem(base), mem(opt))
+
+
+def main(only=None):
+    import sys
+
+    only = only if only is not None else sys.argv[1:]
+    mesh = None
+    if not only or any(x in only for x in ("tp", "repeatkv", "remat", "kv")):
+        mesh = make_production_mesh()
+    if not only or "tp" in only:
+        exp_qwen3_prefill_tp_params(mesh)
+    if not only or "repeatkv" in only:
+        exp_qwen3_prefill_repeat_kv(mesh)
+    if not only or "remat" in only:
+        exp_gemma2_train_remat(mesh)
+    if not only or "kv" in only:
+        exp_gemma2_decode_kv_dtype(mesh)
+    if not only or any(x in only for x in ("cache", "zero1")):
+        mesh_multi = make_production_mesh(multi_pod=True)
+        if not only or "cache" in only:
+            exp_cache_lookup_hierarchical(mesh_multi)
+        if not only or "zero1" in only:
+            exp_deepseek_multipod_zero1(mesh_multi)
+    out = "perf_iterations.json"
+    prior = []
+    if os.path.exists(out):
+        with open(out) as f:
+            prior = json.load(f)
+    names = {r["experiment"] for r in RESULTS}
+    merged = [r for r in prior if r["experiment"] not in names] + RESULTS
+    with open(out, "w") as f:
+        json.dump(merged, f, indent=1)
+    print(f"\n-> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Roofline analysis (assignment deliverable g).
+
+Reads dryrun_results.json and derives, per (arch x shape) cell on the
+single-pod mesh, the three roofline terms in seconds:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs        (197 TFLOP/s bf16)
+  memory     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+  collective = collective_bytes_per_device / link_bw    (50 GB/s/link)
+
+FLOPs/bytes come from the unrolled two-point extrapolation
+(rec["cost_extrapolated"]; XLA counts while bodies once — see dryrun.py),
+collective bytes from the partitioned-HLO parser on the same compiles
+(validated exact vs a fully-unrolled ground truth). Shapes are per-device,
+so no further division by chip count applies. MODEL_FLOPS uses 6·N_active·D
+for training and 2·N_active·D for inference steps.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [dryrun_results.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+PEAK_FLOPS = 197e12  # v5e bf16 per chip
+HBM_BW = 819e9  # B/s per chip
+LINK_BW = 50e9  # B/s per ICI link
+
+NOTES = {
+    "compute": "compute-bound: raise MXU utilization (larger tiles, fused kernels, fewer rematerialized FLOPs)",
+    "memory": "HBM-bound: cut bytes/step (windowed KV allocation, KV/activation quantization, better fusion)",
+    "collective": "collective-bound: reshard to shrink per-layer all-gathers / overlap collectives with compute",
+}
+
+
+def model_flops_per_device(arch_cfg, shape, devices: int) -> float:
+    n_active = arch_cfg.active_params_per_token()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / devices
+
+
+def analyze(results_path: str = "dryrun_results.json"):
+    from repro.configs import SHAPES, get_config
+
+    with open(results_path) as f:
+        results = json.load(f)
+
+    rows = []
+    for rec in results:
+        if "error" in rec or rec.get("kind") == "cache" or rec["devices"] != 256:
+            continue
+        cost = rec.get("cost_extrapolated")
+        if not cost:
+            continue
+        cfg = get_config(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        t_compute = cost["flops"] / PEAK_FLOPS
+        t_memory = cost["bytes_accessed"] / HBM_BW
+        coll = cost["collectives"].get("total", 0.0)
+        t_coll = coll / LINK_BW
+        terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        # analytic floor on memory traffic: every resident byte (params, opt
+        # state, caches, batch) is touched at least once per step; the HLO
+        # bytes above are the (CPU-fusion-inflated) upper bound.
+        t_memory_floor = rec["bytes_per_device"] / HBM_BW
+        terms_floor = {"compute": t_compute, "memory": t_memory_floor, "collective": t_coll}
+        dominant_floor = max(terms_floor, key=terms_floor.get)
+        mf = model_flops_per_device(cfg, shape, rec["devices"])
+        useful_ratio = mf / max(cost["flops"], 1.0)
+        roofline_frac = (mf / PEAK_FLOPS) / max(max(terms.values()), 1e-12)
+        roofline_frac_floor = (mf / PEAK_FLOPS) / max(max(terms_floor.values()), 1e-12)
+        rows.append({
+            "arch": rec["arch"],
+            "shape": rec["shape"],
+            "mesh": rec["mesh"],
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_memory_floor_s": t_memory_floor,
+            "t_collective_s": t_coll,
+            "dominant": dominant,
+            "dominant_floor": dominant_floor,
+            "model_flops_per_dev": mf,
+            "hlo_flops_per_dev": cost["flops"],
+            "useful_flops_ratio": useful_ratio,
+            "roofline_fraction": roofline_frac,
+            "roofline_fraction_floor": roofline_frac_floor,
+            "bytes_per_device_gib": rec["bytes_per_device"] / 2**30,
+            "fits_hbm": rec["fits_hbm"],
+            "note": NOTES[dominant],
+        })
+    return rows
+
+
+def to_markdown(rows) -> str:
+    out = [
+        "| arch | shape | compute s | memory s (floor..HLO) | collective s | dominant "
+        "(floor) | MODEL/HLO flops | roofline frac (..floor) | fits HBM |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} "
+            f"| {r['t_memory_floor_s']:.2e}..{r['t_memory_s']:.2e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** ({r['dominant_floor']}) "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f}..{r['roofline_fraction_floor']:.3f} "
+            f"| {'Y' if r['fits_hbm'] else 'N'} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    rows = analyze(path)
+    print(to_markdown(rows))
+    with open("roofline_table.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\n{len(rows)} cells -> roofline_table.json")
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        coll = max(rows, key=lambda r: r["t_collective_s"] / max(r["t_compute_s"], 1e-12))
+        print(f"worst roofline fraction: {worst['arch']} x {worst['shape']} ({worst['roofline_fraction']:.3f})")
+        print(f"most collective-bound:  {coll['arch']} x {coll['shape']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+
+  fig4_*      — §6 Fig 4: cache add latency vs cache size
+  fig5_*      — §6 Fig 5: cache lookup latency vs cache size (flat in N)
+  fig6_*      — §6 Fig 6: overhead breakdown (embedding dominates)
+  fig7_*      — §6 Fig 7: embedding time across five models
+  sec61_*     — §6.1: GenerativeCache vs GPTCache-like baseline
+  hitrate_*   — §3: threshold sweep + generative uplift
+  adaptive_*  — §3.1: controller convergence
+  serve_*     — end-to-end serving with/without cache (smoke model)
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import (
+        adaptive_bench,
+        cache_ops,
+        embedders,
+        gptcache_compare,
+        hitrate,
+        serve_throughput,
+    )
+
+    print("name,us_per_call,derived")
+    cache_ops.main()
+    embedders.main()
+    gptcache_compare.main()
+    hitrate.main()
+    adaptive_bench.main()
+    serve_throughput.main()
+
+
+if __name__ == "__main__":
+    main()

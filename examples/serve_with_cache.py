@@ -1,0 +1,10 @@
+"""End-to-end serving driver (assignment deliverable b): batched requests
+through the full stack — GenerativeCache front, continuous-batching engine
+over a real JAX model behind.
+
+Run:  PYTHONPATH=src python examples/serve_with_cache.py [--arch qwen1.5-0.5b]
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

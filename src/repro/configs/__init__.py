@@ -1,0 +1,60 @@
+"""Architecture registry: ``get_config("<arch-id>")`` / ``--arch <id>``."""
+from repro.configs.base import (
+    LONG_CONTEXT_ARCHS,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SHAPES,
+    ShapeSpec,
+    SSMConfig,
+    cells_for,
+)
+
+from repro.configs import (
+    deepseek_v3_671b,
+    gemma2_27b,
+    gemma3_4b,
+    llama4_scout,
+    llava_next_mistral_7b,
+    mamba2_1_3b,
+    musicgen_large,
+    qwen15_0_5b,
+    qwen3_8b,
+    zamba2_7b,
+)
+
+_MODULES = {
+    "gemma3-4b": gemma3_4b,
+    "qwen1.5-0.5b": qwen15_0_5b,
+    "gemma2-27b": gemma2_27b,
+    "qwen3-8b": qwen3_8b,
+    "deepseek-v3-671b": deepseek_v3_671b,
+    "llama4-scout-17b-a16e": llama4_scout,
+    "llava-next-mistral-7b": llava_next_mistral_7b,
+    "mamba2-1.3b": mamba2_1_3b,
+    "musicgen-large": musicgen_large,
+    "zamba2-7b": zamba2_7b,
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = _MODULES[name]
+    return mod.smoke() if smoke else mod.CONFIG
+
+
+__all__ = [
+    "ARCH_NAMES",
+    "LONG_CONTEXT_ARCHS",
+    "MLAConfig",
+    "MoEConfig",
+    "ModelConfig",
+    "SHAPES",
+    "SSMConfig",
+    "ShapeSpec",
+    "cells_for",
+    "get_config",
+]

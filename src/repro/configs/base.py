@@ -1,0 +1,258 @@
+"""Config system for the repro framework.
+
+Every assigned architecture is expressed as a single frozen ``ModelConfig``;
+reduced smoke variants preserve the family mechanisms (MoE stays MoE, MLA stays
+MLA, hybrid stays hybrid) at tiny widths so they run a real forward/train step
+on CPU in a pytest.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    router: str = "softmax"  # "softmax" | "sigmoid_bias" (DeepSeek aux-loss-free)
+    routed_scaling: float = 1.0
+    first_k_dense: int = 0  # leading dense (non-MoE) layers
+    d_ff_dense: int = 0  # d_ff of those leading dense layers
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_head_dim: int
+    qk_rope_head_dim: int
+    v_head_dim: int
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.qk_nope_head_dim + self.qk_rope_head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int
+    d_conv: int = 4
+    expand: int = 2
+    headdim: int = 64
+    ngroups: int = 1
+    chunk_size: int = 256
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | vlm | ssm | audio | hybrid
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    max_seq_len: int = 131072
+
+    # --- attention pattern -------------------------------------------------
+    # cycled over layers; entries: "global" | "local" | "nope_global"
+    attn_pattern: Tuple[str, ...] = ("global",)
+    window_size: int = 0  # sliding window for "local" layers
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    rope_theta_local: float = 0.0  # 0 => same as rope_theta
+    query_scale: float = 0.0  # 0 => 1/sqrt(head_dim)
+    post_norms: bool = False  # gemma-style pre+post block norms
+    act: str = "silu"  # "silu" | "gelu"
+    mlp_gated: bool = True  # gated (SwiGLU/GeGLU) vs plain 2-matrix MLP
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    embed_scale: bool = False  # gemma multiplies embeddings by sqrt(d_model)
+
+    # --- family sub-configs --------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+
+    # --- hybrid (zamba2) ------------------------------------------------------
+    hybrid_period: int = 0  # apply a shared attn block after every N ssm blocks
+    num_shared_blocks: int = 0  # alternating shared attention blocks
+
+    # --- modality frontends (stubs per assignment) ----------------------------
+    modality: str = "text"  # text | vision | audio
+    num_codebooks: int = 0  # musicgen: EnCodec codebooks
+    vision_patches: int = 0  # llava stub: number of patch embeddings per image
+    d_frontend: int = 0  # dim of stub frontend embeddings
+
+    # --- multi-token prediction (deepseek-v3) ---------------------------------
+    mtp_depth: int = 0
+
+    # --- numerics / performance knobs ------------------------------------------
+    dtype: str = "bfloat16"
+    remat: bool = True
+    loss_chunk: int = 0  # chunk CE over the sequence axis; 0 = off
+    attn_chunk: int = 1024  # query-chunk for memory-safe jnp attention
+    use_pallas: bool = False  # use Pallas (interpret on CPU) kernels where available
+    optimizer: str = "adamw"  # "adamw" | "adamw8bit"
+    grad_accum: int = 1  # microbatch count for train_step
+    unroll: bool = False  # python-loop layers instead of lax.scan (exact HLO cost accounting)
+    remat_policy: str = "full"  # "full" (save nothing) | "dots" (save matmul outputs)
+    infer_params_tp_only: bool = False  # replicate params over `data` at inference (no FSDP AGs)
+    kv_cache_dtype: str = ""  # KV cache storage dtype ("" = model dtype; e.g. "float8_e4m3fn")
+    opt_pod_sharded: bool = False  # cross-pod ZeRO-1: shard optimizer state over `pod` (DCN)
+    gqa_repeat_kv: bool = False  # materialize repeated KV so attention stays H-sharded on TP
+
+    # -----------------------------------------------------------------------
+    @property
+    def d_inner(self) -> int:
+        return self.ssm.expand * self.d_model if self.ssm else 0
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm.headdim if self.ssm else 0
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer block kinds for the whole stack."""
+        if self.family == "ssm":
+            return ("ssm",) * self.num_layers
+        if self.family == "hybrid":
+            return ("ssm",) * self.num_layers  # shared attn handled separately
+        kinds = []
+        for i in range(self.num_layers):
+            kinds.append(self.attn_pattern[i % len(self.attn_pattern)])
+        return tuple(kinds)
+
+    def active_params_per_token(self) -> int:
+        """N_active for 6*N*D MODEL_FLOPS accounting (embeddings excluded)."""
+        d, l = self.d_model, self.num_layers
+        if self.family in ("ssm", "hybrid"):
+            ssm = self.ssm
+            di = self.d_inner
+            conv_dim = di + 2 * ssm.ngroups * ssm.d_state
+            per = (
+                d * (2 * di + 2 * ssm.ngroups * ssm.d_state + self.ssm_heads)  # in_proj
+                + conv_dim * ssm.d_conv
+                + di * d  # out_proj
+            )
+            n = l * per
+            if self.family == "hybrid" and self.hybrid_period:
+                n_shared_applications = self.num_layers // self.hybrid_period
+                dm2 = 2 * d
+                att = 2 * (
+                    dm2 * self.num_heads * self.head_dim
+                    + dm2 * 2 * self.num_kv_heads * self.head_dim
+                    + self.num_heads * self.head_dim * dm2
+                    + 3 * dm2 * self.d_ff
+                ) // 2 + dm2 * d
+                n += n_shared_applications * att
+            return n
+        if self.mla:
+            m = self.mla
+            attn = (
+                d * m.q_lora_rank
+                + m.q_lora_rank * self.num_heads * m.qk_head_dim
+                + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                + m.kv_lora_rank * self.num_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                + self.num_heads * m.v_head_dim * d
+            )
+        else:
+            attn = (
+                d * self.num_heads * self.head_dim
+                + 2 * d * self.num_kv_heads * self.head_dim
+                + self.num_heads * self.head_dim * d
+            )
+        if self.moe:
+            mo = self.moe
+            moe_ffn = 3 * d * mo.d_ff_expert * mo.top_k
+            moe_ffn += 3 * d * mo.d_ff_shared * mo.num_shared_experts
+            dense_ffn = 3 * d * (mo.d_ff_dense or self.d_ff)
+            n = (
+                mo.first_k_dense * (attn + dense_ffn)
+                + (l - mo.first_k_dense) * (attn + moe_ffn)
+            )
+        else:
+            n = l * (attn + 3 * d * self.d_ff)
+        return n
+
+    def total_params(self) -> int:
+        """Approximate total parameter count (for memory napkin math)."""
+        d, l = self.d_model, self.num_layers
+        n = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        if self.moe:
+            mo = self.moe
+            per_moe = 3 * d * mo.d_ff_expert * mo.num_experts
+            per_moe += 3 * d * mo.d_ff_shared * mo.num_shared_experts
+            per_moe += d * mo.num_experts  # router
+            dense = 3 * d * (mo.d_ff_dense or self.d_ff)
+            n += mo.first_k_dense * dense + (l - mo.first_k_dense) * per_moe
+            attn_active = self.active_params_per_token()
+            # attention part of active == attention part of total
+            if self.mla:
+                m = self.mla
+                attn = (
+                    d * m.q_lora_rank
+                    + m.q_lora_rank * self.num_heads * m.qk_head_dim
+                    + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                    + m.kv_lora_rank * self.num_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                    + self.num_heads * m.v_head_dim * d
+                )
+            else:
+                attn = (
+                    d * self.num_heads * self.head_dim
+                    + 2 * d * self.num_kv_heads * self.head_dim
+                    + self.num_heads * self.head_dim * d
+                )
+            n += l * attn
+            return n
+        return n + self.active_params_per_token()
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assignment)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+# Archs allowed to run long_500k (sub-quadratic / bounded-KV); see DESIGN.md.
+LONG_CONTEXT_ARCHS = ("mamba2-1.3b", "zamba2-7b", "gemma3-4b", "gemma2-27b")
+
+
+def cells_for(arch_name: str):
+    """The (shape) cells this arch runs in the dry-run."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch_name in LONG_CONTEXT_ARCHS:
+        out.append("long_500k")
+    return out

@@ -1,0 +1,26 @@
+"""The paper's contribution: generative semantic caching for LLMs."""
+from repro.core.adaptive import (  # noqa: F401
+    DEFAULT_PRICE_TABLE,
+    CostController,
+    ModelCostInfo,
+    QualityRateController,
+    ThresholdPolicy,
+    classify_content,
+)
+from repro.core.client import (  # noqa: F401
+    ClientResult,
+    EnhancedClient,
+    LLMBackend,
+    LLMResponse,
+    MockLLM,
+)
+from repro.core.embeddings import (  # noqa: F401
+    ContrieverEncoder,
+    EmbeddingModel,
+    NgramHashEmbedder,
+    get_embedder,
+)
+from repro.core.generative_cache import GenerativeCache  # noqa: F401
+from repro.core.hierarchy import HierarchicalCache  # noqa: F401
+from repro.core.semantic_cache import CacheResult, GPTCacheLike, SemanticCache  # noqa: F401
+from repro.core.vector_store import Entry, InMemoryVectorStore  # noqa: F401

@@ -1,0 +1,287 @@
+"""Enhanced client for GenerativeCache (§5).
+
+Coordinates multiple LLM backends behind one interface with the cache
+integrated: embed -> cache lookup -> hit: return / miss: dispatch to a
+backend, charge its cost, insert the answer. Parallel multi-backend fan-out
+uses a thread pool (the paper's asyncio/multiprocessing parallel dispatch —
+backends here release the GIL inside jitted generation or simulate IO).
+
+Cost optimization knobs from §3.1/§5.3: model selection (serve from cheaper
+models while the user is satisfied, escalate on dissatisfaction), max_tokens
+limits, and the feedback/cost controllers servoing t_s.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.adaptive import (
+    DEFAULT_PRICE_TABLE,
+    CostController,
+    ModelCostInfo,
+    QualityRateController,
+    ThresholdPolicy,
+)
+from repro.core.generative_cache import GenerativeCache
+from repro.core.hierarchy import HierarchicalCache
+from repro.core.semantic_cache import CacheResult
+
+
+@dataclass
+class LLMResponse:
+    text: str
+    model: str
+    tokens_in: int = 0
+    tokens_out: int = 0
+    latency_s: float = 0.0
+    cost_usd: float = 0.0
+
+
+class LLMBackend:
+    """Interface for a model endpoint."""
+
+    name: str = "llm"
+
+    def generate(self, prompt: str, max_tokens: int = 256, temperature: float = 0.0) -> LLMResponse:
+        raise NotImplementedError
+
+
+class MockLLM(LLMBackend):
+    """Deterministic offline backend with a configurable latency/price profile."""
+
+    def __init__(
+        self,
+        name: str = "mock-llm",
+        latency_s: float = 0.0,
+        responder: Optional[Callable[[str], str]] = None,
+        fail: bool = False,
+    ):
+        self.name = name
+        self.latency_s = latency_s
+        self.responder = responder or (lambda p: f"[{name}] answer to: {p}")
+        self.fail = fail
+        self.calls = 0
+
+    def generate(self, prompt: str, max_tokens: int = 256, temperature: float = 0.0) -> LLMResponse:
+        if self.fail:
+            raise ConnectionError(f"{self.name} unresponsive")
+        t0 = time.perf_counter()
+        if self.latency_s:
+            time.sleep(self.latency_s)
+        self.calls += 1
+        text = self.responder(prompt)
+        words = text.split()
+        if len(words) > max_tokens:
+            text = " ".join(words[:max_tokens])
+        return LLMResponse(
+            text, self.name, tokens_in=len(prompt.split()), tokens_out=min(len(words), max_tokens),
+            latency_s=time.perf_counter() - t0,
+        )
+
+
+@dataclass
+class ClientResult:
+    text: str
+    from_cache: bool
+    cache_result: Optional[CacheResult]
+    llm_response: Optional[LLMResponse]
+    model: str
+    cost_usd: float
+    latency_s: float
+    request_id: int
+
+
+@dataclass
+class ClientStats:
+    requests: int = 0
+    cache_hits: int = 0
+    llm_calls: int = 0
+    llm_errors: int = 0
+    total_cost_usd: float = 0.0
+    total_latency_s: float = 0.0
+
+    @property
+    def avg_cost(self) -> float:
+        return self.total_cost_usd / self.requests if self.requests else 0.0
+
+
+class EnhancedClient:
+    def __init__(
+        self,
+        cache: Optional[GenerativeCache] = None,
+        hierarchy: Optional[HierarchicalCache] = None,
+        policy: Optional[ThresholdPolicy] = None,
+        price_table: Optional[Dict[str, ModelCostInfo]] = None,
+        quality_target: float = 0.8,
+        target_cost_per_request: Optional[float] = None,
+        max_workers: int = 8,
+    ):
+        if policy is not None:
+            self.policy = policy
+        elif cache is not None and cache.policy is not None:
+            self.policy = cache.policy
+        else:
+            # inherit the cache's static threshold as the servo's starting base
+            self.policy = ThresholdPolicy(base=cache.threshold if cache is not None else 0.8)
+        if cache is not None and cache.policy is None:
+            cache.policy = self.policy
+        self.cache = cache
+        self.hierarchy = hierarchy
+        self.price_table = dict(price_table or DEFAULT_PRICE_TABLE)
+        self.backends: Dict[str, LLMBackend] = {}
+        self._order: List[str] = []  # registration order == escalation order (cheap -> pricey)
+        self.quality_ctl = QualityRateController(self.policy, target=quality_target)
+        self.cost_ctl = (
+            CostController(self.policy, target_cost_per_request)
+            if target_cost_per_request is not None
+            else None
+        )
+        self.stats = ClientStats()
+        self._pool = ThreadPoolExecutor(max_workers=max_workers)
+        self._results: Dict[int, ClientResult] = {}
+        self._next_id = 0
+        self._preferred_level = 0  # model-selection escalation state
+
+    # -- backend management --------------------------------------------------
+
+    def register_backend(self, backend: LLMBackend, price: Optional[ModelCostInfo] = None):
+        self.backends[backend.name] = backend
+        self._order.append(backend.name)
+        if price is not None:
+            self.price_table[backend.name] = price
+
+    def _price(self, model: str) -> ModelCostInfo:
+        return self.price_table.get(model, ModelCostInfo())
+
+    def _cost_of(self, model: str, resp: LLMResponse) -> float:
+        p = self._price(model)
+        return (resp.tokens_in * p.usd_per_mtok_in + resp.tokens_out * p.usd_per_mtok_out) / 1e6
+
+    def _select_model(self, model: Optional[str]) -> str:
+        if model is not None:
+            return model
+        if not self._order:
+            raise RuntimeError("no backends registered")
+        return self._order[min(self._preferred_level, len(self._order) - 1)]
+
+    # -- main request path ------------------------------------------------------
+
+    def query(
+        self,
+        prompt: str,
+        model: Optional[str] = None,
+        max_tokens: int = 256,
+        temperature: float = 0.0,
+        use_cache: bool = True,
+        force_fresh: bool = False,  # user explicitly wants a new LLM response
+        cache_l1: bool = True,  # privacy hints (§4)
+        cache_l2: bool = True,
+        connectivity: float = 1.0,
+    ) -> ClientResult:
+        t0 = time.perf_counter()
+        self.stats.requests += 1
+        rid = self._next_id
+        self._next_id += 1
+        chosen = self._select_model(model)
+        ctx = {
+            "model_info": self._price(chosen),
+            "max_tokens": max_tokens,
+            "connectivity": connectivity,
+        }
+
+        cache_res: Optional[CacheResult] = None
+        vec = None
+        if use_cache and (self.cache is not None or self.hierarchy is not None):
+            embedder_owner = self.hierarchy.l1 if self.hierarchy is not None else self.cache
+            vec = embedder_owner.embed(prompt)  # embed once; reused for insert
+        if use_cache and not force_fresh and (self.cache or self.hierarchy):
+            target = self.hierarchy or self.cache
+            cache_res = target.lookup(prompt, ctx, vec=vec)
+            if cache_res.hit:
+                self.stats.cache_hits += 1
+                if self.cost_ctl:
+                    self.cost_ctl.record(0.0, True)
+                out = ClientResult(
+                    cache_res.response, True, cache_res, None, "cache", 0.0,
+                    time.perf_counter() - t0, rid,
+                )
+                self._results[rid] = out
+                return out
+
+        resp = self._generate_with_failover(chosen, prompt, max_tokens, temperature)
+        cost = self._cost_of(resp.model, resp)
+        resp.cost_usd = cost
+        self.stats.llm_calls += 1
+        self.stats.total_cost_usd += cost
+        if self.cost_ctl:
+            self.cost_ctl.record(cost, False)
+        if use_cache and (self.cache or self.hierarchy):
+            if self.hierarchy is not None:
+                self.hierarchy.insert(prompt, resp.text, cache_l1=cache_l1,
+                                      cache_l2=cache_l2, vec=vec)
+            else:
+                if cache_l1:
+                    self.cache.insert(prompt, resp.text, {"model": resp.model}, vec=vec)
+        out = ClientResult(
+            resp.text, False, cache_res, resp, resp.model, cost, time.perf_counter() - t0, rid
+        )
+        self.stats.total_latency_s += out.latency_s
+        self._results[rid] = out
+        return out
+
+    def _generate_with_failover(self, model, prompt, max_tokens, temperature) -> LLMResponse:
+        """If an LLM is unresponsive, fall through to the other backends (§2)."""
+        tried = []
+        names = [model] + [n for n in self._order if n != model]
+        for name in names:
+            backend = self.backends.get(name)
+            if backend is None:
+                continue
+            try:
+                return backend.generate(prompt, max_tokens, temperature)
+            except Exception as e:  # noqa: BLE001 — failover on any backend error
+                tried.append((name, repr(e)))
+                self.stats.llm_errors += 1
+        raise ConnectionError(f"all backends failed: {tried}")
+
+    # -- parallel multi-LLM dispatch (§5.2) ---------------------------------------
+
+    def query_many(
+        self,
+        prompts: Sequence[str],
+        models: Optional[Sequence[Optional[str]]] = None,
+        parallel: bool = True,
+        **kwargs,
+    ) -> List[ClientResult]:
+        models = models or [None] * len(prompts)
+        if not parallel:
+            return [self.query(p, m, **kwargs) for p, m in zip(prompts, models)]
+        futures = [self._pool.submit(self.query, p, m, **kwargs) for p, m in zip(prompts, models)]
+        return [f.result() for f in futures]
+
+    def broadcast(self, prompt: str, models: Optional[Sequence[str]] = None, **kwargs) -> Dict[str, ClientResult]:
+        """Ask several LLMs the same question concurrently (§5.2)."""
+        models = list(models or self._order)
+        futures = {
+            m: self._pool.submit(self.query, prompt, m, use_cache=False, **kwargs) for m in models
+        }
+        return {m: f.result() for m, f in futures.items()}
+
+    # -- feedback (§3.1) ------------------------------------------------------------
+
+    def feedback(self, result: ClientResult, satisfied: bool) -> None:
+        """User feedback on a served result.
+
+        Cache hits feed the quality-rate controller. Dissatisfaction with an
+        *LLM* answer escalates model selection; satisfaction de-escalates
+        toward the cheaper models.
+        """
+        if result.from_cache:
+            self.quality_ctl.record(satisfied)
+        else:
+            if satisfied:
+                self._preferred_level = max(0, self._preferred_level - 1)
+            else:
+                self._preferred_level = min(len(self._order) - 1, self._preferred_level + 1)

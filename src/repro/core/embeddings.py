@@ -1,0 +1,214 @@
+"""Pluggable embedding models (the paper's "embeddings manager").
+
+The paper's measured default is facebook/contriever-msmarco run locally; we
+implement that architecture as a JAX encoder (random-init offline — the
+similarity *math* and performance profile are what the cache exercises).
+
+For functional end-to-end tests we also ship ``NgramHashEmbedder``: a
+deterministic character-n-gram feature-hashing embedder whose cosine
+similarity genuinely tracks text overlap, so semantic-cache behavior
+(hit/miss/generative-combination) is observable without pretrained weights.
+
+New models plug in by subclassing EmbeddingModel and registering.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.contriever import CONTRIEVER_MSMARCO, E5_LARGE_V2, EncoderConfig
+from repro.configs.contriever import smoke as contriever_smoke
+from repro.core.tokenizer import HashTokenizer
+
+
+class EmbeddingModel:
+    """Interface: embed a batch of texts into L2-normalized vectors."""
+
+    name: str = "base"
+    dim: int = 0
+
+    def embed(self, texts: List[str]) -> np.ndarray:  # [n, dim], unit-norm
+        raise NotImplementedError
+
+    def embed_one(self, text: str) -> np.ndarray:
+        return self.embed([text])[0]
+
+
+# ---------------------------------------------------------------------------
+# N-gram feature-hash embedder (deterministic, overlap-sensitive)
+# ---------------------------------------------------------------------------
+
+
+class NgramHashEmbedder(EmbeddingModel):
+    name = "ngram-hash"
+
+    def __init__(self, dim: int = 256):
+        self.dim = dim
+        self.tok = HashTokenizer()
+
+    def embed(self, texts: List[str]) -> np.ndarray:
+        out = np.zeros((len(texts), self.dim), np.float32)
+        for i, t in enumerate(texts):
+            for h, w in self.tok.ngrams(t):
+                idx = h % self.dim
+                sign = 1.0 if (h >> 17) & 1 else -1.0
+                out[i, idx] += sign * w
+        norms = np.linalg.norm(out, axis=1, keepdims=True)
+        return out / np.maximum(norms, 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Contriever-style JAX encoder
+# ---------------------------------------------------------------------------
+
+
+def _init_encoder(cfg: EncoderConfig, key) -> dict:
+    k = iter(jax.random.split(key, 4 + 8 * cfg.num_layers))
+    d, H, F = cfg.d_model, cfg.num_heads, cfg.d_ff
+    std = d ** -0.5
+
+    def dense(shape, fan_in=None):
+        fan_in = fan_in or shape[0]
+        return jax.random.normal(next(k), shape, jnp.float32) * (fan_in ** -0.5)
+
+    params = {
+        "tok_embed": jax.random.normal(next(k), (cfg.vocab_size, d), jnp.float32) * std,
+        "pos_embed": jax.random.normal(next(k), (cfg.max_seq_len, d), jnp.float32) * std,
+        "ln_embed": {"w": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "layers": [],
+    }
+    for _ in range(cfg.num_layers):
+        params["layers"].append(
+            {
+                "wq": dense((d, d)),
+                "wk": dense((d, d)),
+                "wv": dense((d, d)),
+                "wo": dense((d, d)),
+                "ln1": {"w": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "wi": dense((d, F)),
+                "bi": jnp.zeros((F,)),
+                "wo2": dense((F, d), F),
+                "bo2": jnp.zeros((d,)),
+                "ln2": {"w": jnp.ones((d,)), "b": jnp.zeros((d,))},
+            }
+        )
+    return params
+
+
+def _layer_norm(x, p, eps):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["w"] + p["b"]
+
+
+def _encoder_forward(params, cfg: EncoderConfig, ids, mask):
+    """BERT-style post-LN encoder with mean pooling. ids [n,L], mask [n,L]."""
+    n, L = ids.shape
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    x = params["tok_embed"][ids] + params["pos_embed"][:L][None]
+    x = _layer_norm(x, params["ln_embed"], cfg.norm_eps)
+    attn_bias = (1.0 - mask)[:, None, None, :] * -1e9  # [n,1,1,L]
+    for lp in params["layers"]:
+        q = (x @ lp["wq"]).reshape(n, L, H, dh)
+        k_ = (x @ lp["wk"]).reshape(n, L, H, dh)
+        v = (x @ lp["wv"]).reshape(n, L, H, dh)
+        s = jnp.einsum("nqhd,nkhd->nhqk", q, k_) / (dh ** 0.5) + attn_bias
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("nhqk,nkhd->nqhd", w, v).reshape(n, L, cfg.d_model)
+        x = _layer_norm(x + o @ lp["wo"], lp["ln1"], cfg.norm_eps)
+        h = jax.nn.gelu(x @ lp["wi"] + lp["bi"])
+        x = _layer_norm(x + h @ lp["wo2"] + lp["bo2"], lp["ln2"], cfg.norm_eps)
+    # mean pooling over valid tokens (contriever)
+    pooled = jnp.sum(x * mask[..., None], axis=1) / jnp.maximum(
+        jnp.sum(mask, axis=1, keepdims=True), 1.0
+    )
+    return pooled / jnp.maximum(jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-9)
+
+
+class ContrieverEncoder(EmbeddingModel):
+    """Mean-pooled transformer bi-encoder in JAX (contriever architecture)."""
+
+    def __init__(self, cfg: EncoderConfig = CONTRIEVER_MSMARCO, seed: int = 0):
+        self.cfg = cfg
+        self.name = cfg.name
+        self.dim = cfg.d_model
+        self.tok = HashTokenizer(vocab_size=cfg.vocab_size, max_len=cfg.max_seq_len)
+        self.params = _init_encoder(cfg, jax.random.PRNGKey(seed))
+        self._fwd = jax.jit(lambda p, ids, mask: _encoder_forward(p, cfg, ids, mask))
+
+    def embed(self, texts: List[str]) -> np.ndarray:
+        ids, mask = self.tok.encode_batch(texts)
+        # pad L to a bucket to bound recompilation
+        L = ids.shape[1]
+        bucket = 8
+        while bucket < L:
+            bucket *= 2
+        pad = bucket - L
+        if pad:
+            ids = np.pad(ids, ((0, 0), (0, pad)))
+            mask = np.pad(mask, ((0, 0), (0, pad)))
+        return np.asarray(self._fwd(self.params, ids, mask))
+
+
+# ---------------------------------------------------------------------------
+# Simulated remote models (the paper's OpenAI embedding endpoints)
+# ---------------------------------------------------------------------------
+
+
+class SimulatedRemoteEmbedder(EmbeddingModel):
+    """Wraps a local embedder with the paper's remote-call profile:
+    network latency + per-token monetary cost (Fig 7 / §2 discussion)."""
+
+    def __init__(self, base: EmbeddingModel, name: str, latency_s: float, usd_per_mtok: float):
+        self.base = base
+        self.name = name
+        self.dim = base.dim
+        self.latency_s = latency_s
+        self.usd_per_mtok = usd_per_mtok
+        self.total_cost = 0.0
+
+    def embed(self, texts: List[str]) -> np.ndarray:
+        time.sleep(self.latency_s)  # simulated RTT
+        self.total_cost += sum(len(t.split()) for t in texts) * self.usd_per_mtok / 1e6
+        return self.base.embed(texts)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], EmbeddingModel]] = {}
+
+
+def register(name: str, factory: Callable[[], EmbeddingModel]) -> None:
+    _REGISTRY[name] = factory
+
+
+def get_embedder(name: str) -> EmbeddingModel:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown embedder {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+register("ngram-hash", lambda: NgramHashEmbedder())
+register("contriever-msmarco", lambda: ContrieverEncoder(CONTRIEVER_MSMARCO))
+register("e5-large-v2", lambda: ContrieverEncoder(E5_LARGE_V2))
+register("contriever-smoke", lambda: ContrieverEncoder(contriever_smoke()))
+# the paper's three OpenAI endpoints, simulated with their latency ordering
+register(
+    "text-embedding-ada-002",
+    lambda: SimulatedRemoteEmbedder(NgramHashEmbedder(1536), "text-embedding-ada-002", 0.05, 100.0),
+)
+register(
+    "text-embedding-3-small",
+    lambda: SimulatedRemoteEmbedder(NgramHashEmbedder(1536), "text-embedding-3-small", 0.06, 20.0),
+)
+register(
+    "text-embedding-3-large",
+    lambda: SimulatedRemoteEmbedder(NgramHashEmbedder(3072), "text-embedding-3-large", 0.08, 130.0),
+)

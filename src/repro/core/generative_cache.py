@@ -1,0 +1,103 @@
+"""Generative caching (§3) — the paper's headline contribution.
+
+Algorithm (verbatim from the paper, with t_single < t_s < t_combined):
+
+    X <- {cached queries x_i : S(x_i, Q5) > t_single}
+    if sum_{x_i in X} S(x_i, Q5) > t_combined:  cache hit (synthesize from X)
+    else:                                        cache miss
+
+Invocation modes:
+  * primary   — generative matching IS the default lookup algorithm
+  * secondary — generative matching only runs after a regular semantic miss
+
+A single-entry exact-style hit (best similarity > t_s) is still served
+directly (it trivially satisfies the generative rule and needs no synthesis).
+Synthesized answers are inserted back into the cache so future queries
+semantically similar to Q5 hit directly.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import synthesis
+from repro.core.semantic_cache import CacheResult, SemanticCache
+
+
+class GenerativeCache(SemanticCache):
+    def __init__(
+        self,
+        embedder,
+        threshold: float = 0.8,
+        t_single: float = 0.6,
+        t_combined: float = 1.4,
+        mode: str = "secondary",  # "primary" | "secondary"
+        max_sources: int = 4,
+        synthesis_mode: str = "template",
+        summarizer: Optional[Callable[[str], str]] = None,
+        cache_synthesized: bool = True,
+        **kwargs,
+    ):
+        super().__init__(embedder, threshold, **kwargs)
+        assert mode in ("primary", "secondary")
+        self.t_single = t_single
+        self.t_combined = t_combined
+        self.mode = mode
+        self.max_sources = max_sources
+        self.synthesis_mode = synthesis_mode
+        self.summarizer = summarizer
+        self.cache_synthesized = cache_synthesized
+
+    # -- generative matching -----------------------------------------------------
+
+    def _generative_lookup(
+        self, query: str, vec: np.ndarray, t_s: float, t_start: float
+    ) -> CacheResult:
+        t0 = time.perf_counter()
+        matches = self.store.search(vec, k=self.max_sources)
+        self.stats.search_time_s += time.perf_counter() - t0
+        X = [(s, e) for s, e in matches if s > self.t_single]
+        combined = float(sum(s for s, _ in X))
+        best = matches[0][0] if matches else -1.0
+
+        if X and combined > self.t_combined:
+            # single overwhelming match -> direct hit, no synthesis needed
+            if X[0][0] > t_s:
+                s, e = X[0]
+                self.stats.hits += 1
+                return CacheResult(True, e.response, s, combined, False, X[:1], t_s,
+                                   time.perf_counter() - t_start, "semantic")
+            response = synthesis.combine(query, X, self.synthesis_mode, self.summarizer)
+            self.stats.hits += 1
+            self.stats.generative_hits += 1
+            if self.cache_synthesized:
+                self.insert(query, response, {"generative": True}, vec=vec)
+            return CacheResult(True, response, best, combined, True, X, t_s,
+                               time.perf_counter() - t_start, "generative")
+        return CacheResult(False, None, best, combined, False, X, t_s,
+                           time.perf_counter() - t_start)
+
+    # -- lookup ---------------------------------------------------------------
+
+    def lookup(self, query: str, context: Optional[dict] = None, vec: Optional[np.ndarray] = None) -> CacheResult:
+        t_start = time.perf_counter()
+        self.stats.lookups += 1
+        t_s = self.effective_threshold(query, context)
+        if vec is None:
+            vec = self.embed(query)
+
+        if self.mode == "primary":
+            return self._generative_lookup(query, vec, t_s, t_start)
+
+        # secondary: regular semantic lookup first
+        t0 = time.perf_counter()
+        matches = self.store.search(vec, k=1)
+        self.stats.search_time_s += time.perf_counter() - t0
+        if matches and matches[0][0] > t_s:
+            s, e = matches[0]
+            self.stats.hits += 1
+            return CacheResult(True, e.response, s, s, False, [(s, e)], t_s,
+                               time.perf_counter() - t_start, "semantic")
+        return self._generative_lookup(query, vec, t_s, t_start)

@@ -1,0 +1,109 @@
+"""Hierarchical / cooperative caching (§4, Figure 1).
+
+Client-local L1 caches front shared L2 caches; L2 caches cooperate with peer
+L2s. On a lower-level hit the query-response pair is promoted into the upper
+levels (the paper: "If the L2 cache is able to satisfy the request with a
+query-response pair q1, q1 is then stored in the L1 cache"). The same
+similarity threshold t_s(1) (the requesting client's effective threshold) is
+used at every level. Privacy hints let users keep personal entries out of
+the shared levels (§4).
+
+On the TPU mesh this topology maps to pod-local L1 shards and cross-pod L2
+exchange (DESIGN.md §3); this module is the level-coordination logic, shared
+by the host-side client and the mesh-sharded store.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.generative_cache import GenerativeCache
+from repro.core.semantic_cache import CacheResult
+
+
+class HierarchicalCache:
+    def __init__(
+        self,
+        l1: GenerativeCache,
+        l2: Optional[GenerativeCache] = None,
+        peers: Optional[List[GenerativeCache]] = None,
+        inclusive: bool = False,
+        promote: bool = True,
+        generative_across_levels: bool = True,
+    ):
+        self.l1 = l1
+        self.l2 = l2
+        self.peers = peers or []
+        self.inclusive = inclusive
+        self.promote = promote
+        self.generative_across_levels = generative_across_levels
+
+    def _levels(self):
+        out = [("L1", self.l1)]
+        if self.l2 is not None:
+            out.append(("L2", self.l2))
+        out.extend((f"L2-peer{i}", p) for i, p in enumerate(self.peers))
+        return out
+
+    def lookup(
+        self, query: str, context: Optional[dict] = None, vec: Optional[np.ndarray] = None
+    ) -> CacheResult:
+        t0 = time.perf_counter()
+        if vec is None:
+            vec = self.l1.embed(query)  # embed once; levels share the embedder space
+        levels = self._levels()
+        for name, cache in levels:
+            res = cache.lookup(query, context, vec=vec)
+            if res.hit:
+                if self.promote and cache is not self.l1:
+                    self.l1.insert(query, res.response, {"promoted_from": name}, vec=vec)
+                res.level = f"{name}:{res.level}"
+                res.latency_s = time.perf_counter() - t0
+                return res
+
+        if self.generative_across_levels and len(levels) > 1:
+            # pool candidates from every level and apply the generative rule
+            pooled = []
+            seen = set()
+            for _, cache in levels:
+                for s, e in cache.store.search(vec, k=cache.max_sources if hasattr(cache, "max_sources") else 4):
+                    sig = (e.query, e.response[:64])
+                    if s > self.l1.t_single and sig not in seen:
+                        seen.add(sig)
+                        pooled.append((s, e))
+            combined = float(sum(s for s, _ in pooled))
+            if pooled and combined > self.l1.t_combined:
+                from repro.core import synthesis
+
+                response = synthesis.combine(query, pooled, self.l1.synthesis_mode, self.l1.summarizer)
+                self.l1.insert(query, response, {"generative": True}, vec=vec)
+                self.l1.stats.generative_hits += 1
+                return CacheResult(
+                    True, response, pooled[0][0], combined, True, pooled,
+                    self.l1.effective_threshold(query, context),
+                    time.perf_counter() - t0, "multi-level:generative",
+                )
+        res = CacheResult(False)
+        res.latency_s = time.perf_counter() - t0
+        return res
+
+    def insert(
+        self,
+        query: str,
+        response: str,
+        meta: Optional[dict] = None,
+        cache_l1: bool = True,
+        cache_l2: bool = True,
+        vec: Optional[np.ndarray] = None,
+    ) -> None:
+        """Privacy hints (§4): callers may exclude either level."""
+        if vec is None:
+            vec = self.l1.embed(query)
+        if cache_l1:
+            self.l1.insert(query, response, meta, vec=vec)
+        if cache_l2 and self.l2 is not None:
+            self.l2.insert(query, response, meta, vec=vec)
+        elif self.inclusive and cache_l1 and self.l2 is not None:
+            self.l2.insert(query, response, meta, vec=vec)

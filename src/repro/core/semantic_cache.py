@@ -1,0 +1,194 @@
+"""Semantic cache (and the GPTCache-like baseline for the §6.1 comparison).
+
+A lookup embeds the query, searches the vector store, and declares a hit when
+the best similarity exceeds the *effective* threshold t_s — which is not a
+constant: it is computed per query by the ThresholdPolicy (content type,
+model cost/latency, connectivity, user preference; §2) and servoed over time
+by the feedback controllers (§3.1).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.embeddings import EmbeddingModel
+from repro.core.vector_store import Entry, InMemoryVectorStore
+
+
+@dataclass
+class CacheResult:
+    hit: bool
+    response: Optional[str] = None
+    similarity: float = -1.0
+    combined_similarity: float = 0.0
+    generative: bool = False
+    sources: List[Tuple[float, Entry]] = field(default_factory=list)
+    threshold_used: float = 0.0
+    latency_s: float = 0.0
+    level: str = "miss"
+
+
+@dataclass
+class CacheStats:
+    lookups: int = 0
+    hits: int = 0
+    generative_hits: int = 0
+    adds: int = 0
+    embed_time_s: float = 0.0
+    search_time_s: float = 0.0
+    add_time_s: float = 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+
+class SemanticCache:
+    def __init__(
+        self,
+        embedder: EmbeddingModel,
+        threshold: float = 0.8,
+        capacity: int = 4096,
+        metric: str = "cosine",
+        eviction: str = "lru",
+        policy=None,  # ThresholdPolicy (repro.core.adaptive)
+        store: Optional[InMemoryVectorStore] = None,
+        use_pallas: bool = False,
+    ):
+        self.embedder = embedder
+        self.threshold = threshold
+        self.policy = policy
+        # note: `store or ...` would discard an *empty* store (len == 0 is falsy)
+        self.store = (
+            store
+            if store is not None
+            else InMemoryVectorStore(embedder.dim, capacity, metric, eviction, use_pallas=use_pallas)
+        )
+        self.stats = CacheStats()
+
+    # -- thresholds -----------------------------------------------------------
+
+    def effective_threshold(self, query: str, context: Optional[dict] = None) -> float:
+        if self.policy is not None:
+            return self.policy.compute(query, context or {})
+        return self.threshold
+
+    # -- embedding ------------------------------------------------------------
+
+    def embed(self, query: str) -> np.ndarray:
+        t0 = time.perf_counter()
+        v = self.embedder.embed_one(query)
+        self.stats.embed_time_s += time.perf_counter() - t0
+        return v
+
+    # -- lookup / insert --------------------------------------------------------
+
+    def lookup(
+        self, query: str, context: Optional[dict] = None, vec: Optional[np.ndarray] = None
+    ) -> CacheResult:
+        t_start = time.perf_counter()
+        self.stats.lookups += 1
+        t_s = self.effective_threshold(query, context)
+        if vec is None:
+            vec = self.embed(query)
+        t0 = time.perf_counter()
+        matches = self.store.search(vec, k=1)
+        self.stats.search_time_s += time.perf_counter() - t0
+        if matches and matches[0][0] > t_s:
+            score, entry = matches[0]
+            self.stats.hits += 1
+            return CacheResult(
+                True, entry.response, score, score, False, [(score, entry)], t_s,
+                time.perf_counter() - t_start, "semantic",
+            )
+        best = matches[0][0] if matches else -1.0
+        return CacheResult(
+            False, None, best, best, False, matches[:1], t_s, time.perf_counter() - t_start
+        )
+
+    def insert(
+        self,
+        query: str,
+        response: str,
+        meta: Optional[Dict[str, Any]] = None,
+        vec: Optional[np.ndarray] = None,
+    ) -> int:
+        if vec is None:
+            vec = self.embed(query)
+        t0 = time.perf_counter()
+        key = self.store.add(vec, query, response, meta)
+        self.stats.add_time_s += time.perf_counter() - t0
+        self.stats.adds += 1
+        return key
+
+    def warm_start(self, pairs: List[Tuple[str, str]]) -> None:
+        """Load query-answer pairs from past sessions (paper §4)."""
+        if not pairs:
+            return
+        vecs = self.embedder.embed([q for q, _ in pairs])
+        for (q, a), v in zip(pairs, vecs):
+            self.insert(q, a, vec=v)
+
+    # -- persistence ------------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        self.store.save(path)
+
+    def load_store(self, path: str) -> None:
+        self.store = InMemoryVectorStore.load(path)
+
+
+class GPTCacheLike:
+    """Architecture-shaped GPTCache baseline: per-entry python-loop scalar
+    similarity over a row store (the SQLite-backed eval path the paper
+    criticizes in §6.1). Same embedder as SemanticCache so the comparison
+    isolates the cache data path."""
+
+    def __init__(self, embedder: EmbeddingModel, threshold: float = 0.8):
+        self.embedder = embedder
+        self.threshold = threshold
+        self.rows: List[Tuple[np.ndarray, Entry]] = []
+        self._key = 0
+        self.stats = CacheStats()
+
+    def insert(self, query: str, response: str, vec: Optional[np.ndarray] = None) -> int:
+        if vec is None:
+            vec = self.embedder.embed_one(query)
+        t0 = time.perf_counter()
+        # row-store semantics: append a row, rebuild the "index" lazily
+        self.rows.append((np.asarray(vec, np.float64), Entry(self._key, query, response)))
+        self.stats.add_time_s += time.perf_counter() - t0
+        self.stats.adds += 1
+        self._key += 1
+        return self._key - 1
+
+    def lookup(self, query: str, vec: Optional[np.ndarray] = None) -> CacheResult:
+        t_start = time.perf_counter()
+        self.stats.lookups += 1
+        if vec is None:
+            vec = self.embedder.embed_one(query)
+        v = np.asarray(vec, np.float64)
+        t0 = time.perf_counter()
+        best_s, best_e = -1.0, None
+        for row_vec, entry in self.rows:  # per-row scalar evaluation
+            num = 0.0
+            na = 0.0
+            nb = 0.0
+            for a, b in zip(v, row_vec):
+                num += a * b
+                na += a * a
+                nb += b * b
+            s = num / max(np.sqrt(na) * np.sqrt(nb), 1e-9)
+            if s > best_s:
+                best_s, best_e = s, entry
+        self.stats.search_time_s += time.perf_counter() - t0
+        if best_e is not None and best_s > self.threshold:
+            self.stats.hits += 1
+            return CacheResult(True, best_e.response, best_s, best_s, False,
+                               [(best_s, best_e)], self.threshold,
+                               time.perf_counter() - t_start, "semantic")
+        return CacheResult(False, None, best_s, best_s, False, [], self.threshold,
+                           time.perf_counter() - t_start)

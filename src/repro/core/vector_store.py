@@ -1,0 +1,208 @@
+"""Vector stores for the cache.
+
+``InMemoryVectorStore`` is the paper's "lighter weight ... single process"
+option (§5.3): a preallocated device-resident [capacity, D] buffer searched
+by one jitted masked matmul + top-k (exact search — see DESIGN.md §3 for why
+exact brute-force is the TPU-native replacement for Redis/Milvus ANN).
+Adds are O(1) jitted functional updates with buffer donation. Contents can
+be persisted to disk and warm-started (§4 "bring a cache to a warm state").
+
+The mesh-sharded variant used by the serving stack lives in
+repro.distributed.sharded_store.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import similarity as sim
+
+
+@dataclass
+class Entry:
+    key: int
+    query: str
+    response: str
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+
+class InMemoryVectorStore:
+    def __init__(
+        self,
+        dim: int,
+        capacity: int = 4096,
+        metric: str = "cosine",
+        eviction: str = "lru",  # lru | lfu | fifo
+        use_pallas: bool = False,
+    ):
+        assert eviction in ("lru", "lfu", "fifo")
+        self.dim = dim
+        self.capacity = capacity
+        self.metric = metric
+        self.eviction = eviction
+        self.use_pallas = use_pallas
+        self._buf = jnp.zeros((capacity, dim), jnp.float32)
+        self._valid = jnp.zeros((capacity,), bool)
+        self._entries: List[Optional[Entry]] = [None] * capacity
+        self._last_access = np.zeros((capacity,), np.float64)
+        self._access_count = np.zeros((capacity,), np.int64)
+        self._insert_seq = np.zeros((capacity,), np.int64)
+        self._seq = 0
+        self.size = 0
+        self._next_key = 0
+
+        self._add_fn = jax.jit(
+            lambda buf, valid, vec, idx: (buf.at[idx].set(vec), valid.at[idx].set(True)),
+            donate_argnums=(0, 1),
+        )
+        self._search_fns: Dict[int, Any] = {}
+
+    # -- internals ----------------------------------------------------------
+
+    def _victim(self) -> int:
+        if self.size < self.capacity:
+            return self.size
+        if self.eviction == "fifo":
+            return int(np.argmin(self._insert_seq))
+        if self.eviction == "lfu":
+            return int(np.argmin(self._access_count))
+        return int(np.argmin(self._last_access))
+
+    def _search_fn(self, k: int):
+        if k not in self._search_fns:
+            metric = self.metric
+            if self.use_pallas:
+                from repro.kernels.similarity_topk import ops as st_ops
+
+                self._search_fns[k] = jax.jit(
+                    lambda buf, valid, q: st_ops.similarity_topk(
+                        buf, valid, q, k=k, metric=metric, interpret=True
+                    )
+                )
+            else:
+                self._search_fns[k] = jax.jit(
+                    lambda buf, valid, q: sim.top_k_scores(buf, valid, q, k, metric)
+                )
+        return self._search_fns[k]
+
+    # -- API -----------------------------------------------------------------
+
+    def add(self, vec: np.ndarray, query: str, response: str, meta: Optional[dict] = None) -> int:
+        idx = self._victim()
+        self._buf, self._valid = self._add_fn(
+            self._buf, self._valid, jnp.asarray(vec, jnp.float32), idx
+        )
+        key = self._next_key
+        self._next_key += 1
+        self._entries[idx] = Entry(key, query, response, dict(meta or {}))
+        now = time.monotonic()
+        self._last_access[idx] = now
+        self._access_count[idx] = 0
+        self._insert_seq[idx] = self._seq
+        self._seq += 1
+        self.size = min(self.size + 1, self.capacity)
+        return key
+
+    def search(self, q_vec: np.ndarray, k: int = 4) -> List[Tuple[float, Entry]]:
+        if self.size == 0:
+            return []
+        k_eff = min(k, self.capacity)
+        q = jnp.asarray(q_vec, jnp.float32)[None]
+        s, idx = self._search_fn(k_eff)(self._buf, self._valid, q)
+        s = np.asarray(s[0])
+        idx = np.asarray(idx[0])
+        out = []
+        now = time.monotonic()
+        for score, i in zip(s, idx):
+            if not np.isfinite(score):
+                continue
+            e = self._entries[int(i)]
+            if e is None:
+                continue
+            self._last_access[int(i)] = now
+            self._access_count[int(i)] += 1
+            out.append((float(score), e))
+        return out
+
+    def search_batch(self, q_vecs: np.ndarray, k: int = 4) -> List[List[Tuple[float, Entry]]]:
+        if self.size == 0:
+            return [[] for _ in range(len(q_vecs))]
+        k_eff = min(k, self.capacity)
+        s, idx = self._search_fn(k_eff)(self._buf, self._valid, jnp.asarray(q_vecs, jnp.float32))
+        s, idx = np.asarray(s), np.asarray(idx)
+        return [
+            [
+                (float(sc), self._entries[int(i)])
+                for sc, i in zip(srow, irow)
+                if np.isfinite(sc) and self._entries[int(i)] is not None
+            ]
+            for srow, irow in zip(s, idx)
+        ]
+
+    def remove(self, key: int) -> bool:
+        for idx, e in enumerate(self._entries):
+            if e is not None and e.key == key:
+                self._entries[idx] = None
+                self._valid = self._valid.at[idx].set(False)
+                return True
+        return False
+
+    def __len__(self) -> int:
+        return sum(1 for e in self._entries[: self.size] if e is not None)
+
+    # -- persistence (fault tolerance / warm start) ---------------------------
+
+    def save(self, path: str) -> None:
+        os.makedirs(path, exist_ok=True)
+        np.savez(
+            os.path.join(path, "vectors.npz"),
+            buf=np.asarray(self._buf),
+            valid=np.asarray(self._valid),
+            last_access=self._last_access,
+            access_count=self._access_count,
+            insert_seq=self._insert_seq,
+        )
+        manifest = {
+            "dim": self.dim,
+            "capacity": self.capacity,
+            "metric": self.metric,
+            "eviction": self.eviction,
+            "size": self.size,
+            "next_key": self._next_key,
+            "seq": self._seq,
+            "entries": [
+                None if e is None else {"key": e.key, "query": e.query, "response": e.response, "meta": e.meta}
+                for e in self._entries
+            ],
+        }
+        tmp = os.path.join(path, "manifest.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(manifest, f)
+        os.replace(tmp, os.path.join(path, "manifest.json"))  # atomic commit
+
+    @classmethod
+    def load(cls, path: str, **kwargs) -> "InMemoryVectorStore":
+        with open(os.path.join(path, "manifest.json")) as f:
+            m = json.load(f)
+        store = cls(m["dim"], m["capacity"], m["metric"], m["eviction"], **kwargs)
+        z = np.load(os.path.join(path, "vectors.npz"))
+        store._buf = jnp.asarray(z["buf"])
+        store._valid = jnp.asarray(z["valid"])
+        store._last_access = z["last_access"]
+        store._access_count = z["access_count"]
+        store._insert_seq = z["insert_seq"]
+        store.size = m["size"]
+        store._next_key = m["next_key"]
+        store._seq = m["seq"]
+        store._entries = [
+            None if e is None else Entry(e["key"], e["query"], e["response"], e.get("meta", {}))
+            for e in m["entries"]
+        ]
+        return store

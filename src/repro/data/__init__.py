@@ -1,0 +1,2 @@
+from repro.data.loader import ShardedLoader  # noqa: F401
+from repro.data.synthetic import markov_token_stream, squad_like_qa  # noqa: F401

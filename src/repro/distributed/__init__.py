@@ -1,0 +1,13 @@
+from repro.distributed.sharding import (  # noqa: F401
+    BATCH,
+    FSDP,
+    SEQ,
+    TP,
+    constrain,
+    current_mesh,
+    device_put_tree,
+    named_sharding,
+    resolve_spec,
+    shardings_for,
+    use_mesh,
+)

@@ -1,0 +1,152 @@
+"""Mesh-sharded vector store: the cache's distributed data path.
+
+The DB matrix [n_shards * cap, D] is sharded over the mesh `data` axis (and,
+multi-pod, over `pod` — each pod's shard acts as its L1, cross-pod merge is
+the L2 exchange; DESIGN.md §3). Lookup runs under shard_map:
+
+    per shard: MXU dot [Q, cap_local] -> local top-k
+    all_gather of the tiny [Q, k] candidate sets over (pod, data)
+    global top-k merge (still inside the jit)
+
+Only k candidates per shard cross the interconnect — never the [Q, N]
+score matrix. This is the step the dry-run lowers on the production mesh
+(`cache_lookup` rows in EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.distributed.sharding import resolve_spec
+
+
+def _shard_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_sharded_lookup(mesh, *, k: int, metric: str = "cosine", hierarchical: bool = True):
+    """Builds the jitted sharded lookup: (db, valid, q) -> (scores, global idx).
+
+    db: [N, D] sharded P(("pod","data"), None); valid: [N] likewise;
+    q: [Q, D] replicated.
+    """
+    axes = _shard_axes(mesh)
+    if not axes:
+        from repro.core.similarity import top_k_scores
+
+        return jax.jit(lambda db, valid, q: top_k_scores(db, valid, q, k, metric))
+
+    axis_tuple = axes if len(axes) > 1 else axes[0]
+
+    def local_lookup(db_l, valid_l, q):
+        # db_l: [cap_local, D] local shard
+        cap_local = db_l.shape[0]
+        dbn = db_l
+        qn = q
+        if metric == "cosine":
+            dbn = db_l / jnp.maximum(jnp.linalg.norm(db_l, axis=-1, keepdims=True), 1e-9)
+            qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+        s = qn @ dbn.T  # [Q, cap_local]
+        s = jnp.where(valid_l[None, :], s, -jnp.inf)
+        k_eff = min(k, cap_local)
+        top_s, top_i = jax.lax.top_k(s, k_eff)  # local indices
+        # translate to global ids
+        shard_id = jnp.zeros((), jnp.int32)
+        mul = 1
+        for a in reversed(axes):
+            shard_id = shard_id + jax.lax.axis_index(a) * mul
+            mul = mul * jax.lax.axis_size(a)
+        top_i = top_i + shard_id * cap_local
+        if hierarchical:
+            # hierarchical candidate exchange: gather k per shard over the
+            # in-pod (ICI) axis first, merge back down to k, THEN cross the
+            # pod (DCN) axis with only Q*k candidates instead of
+            # n_data_shards*Q*k — the paper's L1 (pod-local) / L2 (cross-pod)
+            # hierarchy expressed as a collective schedule (§Perf).
+            gs, gi = top_s, top_i
+            for a in reversed(axes):  # innermost (ICI) first, DCN last
+                all_s = jax.lax.all_gather(gs, a, axis=0, tiled=False)
+                all_i = jax.lax.all_gather(gi, a, axis=0, tiled=False)
+                flat_s = jnp.moveaxis(all_s, 0, 1).reshape(q.shape[0], -1)
+                flat_i = jnp.moveaxis(all_i, 0, 1).reshape(q.shape[0], -1)
+                k_eff2 = min(k, flat_s.shape[1])
+                gs, pos = jax.lax.top_k(flat_s, k_eff2)
+                gi = jnp.take_along_axis(flat_i, pos, axis=1)
+            return gs, gi
+        # flat baseline: gather every shard's candidates everywhere, one merge
+        all_s, all_i = top_s, top_i
+        for a in axes:
+            all_s = jax.lax.all_gather(all_s, a, axis=0, tiled=False)
+            all_i = jax.lax.all_gather(all_i, a, axis=0, tiled=False)
+        all_s = all_s.reshape(-1, *top_s.shape[-2:])
+        all_i = all_i.reshape(-1, *top_i.shape[-2:])
+        flat_s = jnp.moveaxis(all_s, 0, 1).reshape(q.shape[0], -1)
+        flat_i = jnp.moveaxis(all_i, 0, 1).reshape(q.shape[0], -1)
+        gs, pos = jax.lax.top_k(flat_s, k)
+        gi = jnp.take_along_axis(flat_i, pos, axis=1)
+        return gs, gi
+
+    db_spec = P(axis_tuple, None)
+    valid_spec = P(axis_tuple)
+    fn = shard_map(
+        local_lookup,
+        mesh=mesh,
+        in_specs=(db_spec, valid_spec, P()),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+class ShardedVectorStore:
+    """Host-facing wrapper: functional adds into a mesh-sharded DB buffer."""
+
+    def __init__(self, mesh, dim: int, capacity: int, *, k: int = 4, metric: str = "cosine"):
+        self.mesh = mesh
+        self.dim = dim
+        axes = _shard_axes(mesh)
+        n_shards = 1
+        for a in axes:
+            n_shards *= mesh.shape[a]
+        self.capacity = capacity - (capacity % max(n_shards, 1)) or n_shards
+        self.n_shards = n_shards
+        self.metric = metric
+        self.k = k
+        spec = P(axes if len(axes) > 1 else (axes[0] if axes else None), None)
+        self._db_sharding = jax.NamedSharding(mesh, spec)
+        self._valid_sharding = jax.NamedSharding(mesh, P(spec[0]))
+        self._db = jax.device_put(jnp.zeros((self.capacity, dim), jnp.float32), self._db_sharding)
+        self._valid = jax.device_put(jnp.zeros((self.capacity,), bool), self._valid_sharding)
+        self._lookup = make_sharded_lookup(mesh, k=k, metric=metric)
+        self._add = jax.jit(
+            lambda db, valid, vec, idx: (db.at[idx].set(vec), valid.at[idx].set(True)),
+            donate_argnums=(0, 1),
+            out_shardings=(self._db_sharding, self._valid_sharding),
+        )
+        self.size = 0
+        self.payloads: List[Optional[tuple]] = [None] * self.capacity
+        self._rr = 0  # round-robin shard cursor for balanced placement
+
+    def _next_index(self) -> int:
+        cap_local = self.capacity // self.n_shards
+        shard = self._rr % self.n_shards
+        within = (self._rr // self.n_shards) % cap_local
+        self._rr += 1
+        return shard * cap_local + within
+
+    def add(self, vec: np.ndarray, query: str, response: str) -> int:
+        idx = self._next_index()
+        self._db, self._valid = self._add(self._db, self._valid, jnp.asarray(vec, jnp.float32), idx)
+        self.payloads[idx] = (query, response)
+        self.size = min(self.size + 1, self.capacity)
+        return idx
+
+    def search(self, q_vecs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        s, i = self._lookup(self._db, self._valid, jnp.asarray(q_vecs, jnp.float32))
+        return np.asarray(s), np.asarray(i)

@@ -1,0 +1,152 @@
+"""Logical-axis sharding rules resolved against whatever mesh is in use.
+
+Specs in this codebase are written against the *production* axis names
+``("pod", "data", "model")``. ``resolve_spec`` adapts a spec to the actual
+mesh: axes absent from the mesh are dropped (single-pod mesh has no "pod";
+unit-test meshes may have neither), and axes that do not divide the concrete
+dimension are dropped (e.g. 4 KV heads cannot shard over model=16 — the
+sequence axis picks up the slack instead).
+
+``data`` doubles as the FSDP axis: parameters and optimizer state are sharded
+over it on a non-TP dimension (ZeRO-3); GSPMD inserts the per-layer
+all-gathers, which overlap with the previous layer's compute under
+scan-over-layers.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+# Canonical logical axes.
+BATCH: Axis = ("pod", "data")  # data-parallel batch dim
+FSDP: Axis = "data"  # parameter/optimizer fsdp dim
+TP: Axis = "model"  # tensor-parallel dim (heads / d_ff / vocab / experts)
+SEQ: Axis = "data"  # context-parallel sequence dim (long-context KV)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _filter_entry(entry: Axis, mesh: Mesh, dim: Optional[int], used: set) -> Axis:
+    """Drop mesh-absent / non-dividing / already-used axes."""
+    if entry is None:
+        return None
+    names = (entry,) if isinstance(entry, str) else tuple(entry)
+    kept = []
+    prod = 1
+    for n in names:
+        if n not in mesh.axis_names or n in used:
+            continue
+        size = _axis_size(mesh, n)
+        if dim is not None and dim % (prod * size) != 0:
+            continue
+        kept.append(n)
+        used.add(n)
+        prod *= size
+    if not kept:
+        return None
+    return kept[0] if len(kept) == 1 else tuple(kept)
+
+
+def resolve_spec(
+    spec: Sequence[Axis], mesh: Mesh, shape: Optional[Sequence[int]] = None
+) -> PartitionSpec:
+    """Two-pass resolution with cross-dim axis tracking:
+
+    Pass 1 gives plain-string dims their axis (primary assignments, e.g.
+    KV heads -> model); pass 2 lets tuple dims pick up whatever remains
+    (fallbacks, e.g. the KV sequence axis takes `model` only when the head
+    count couldn't use it). An axis is never assigned to two dims — specs
+    may therefore freely list fallbacks without risking invalid
+    PartitionSpecs.
+    """
+    used: set = set()
+    entries: list = [None] * len(spec)
+    order = sorted(range(len(spec)), key=lambda i: isinstance(spec[i], tuple))
+    for i in order:
+        dim = None if shape is None else shape[i]
+        entries[i] = _filter_entry(spec[i], mesh, dim, used)
+    return PartitionSpec(*entries)
+
+
+def named_sharding(
+    mesh: Mesh, spec: Sequence[Axis], shape: Optional[Sequence[int]] = None
+) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(spec, mesh, shape))
+
+
+def is_spec_leaf(x: Any) -> bool:
+    """A spec leaf is None or a plain tuple of axis entries (NOT a NamedTuple
+    like TrainState, which is also a tuple subclass)."""
+    if x is None:
+        return True
+    return (
+        isinstance(x, tuple)
+        and not hasattr(x, "_fields")
+        and all(e is None or isinstance(e, (str, tuple)) for e in x)
+    )
+
+
+def shardings_for(mesh: Mesh, specs: Any, shapes: Any = None) -> Any:
+    """Map a pytree of raw specs (tuples) + matching shape tree to NamedShardings."""
+    if shapes is None:
+        return jax.tree.map(lambda s: named_sharding(mesh, s), specs, is_leaf=is_spec_leaf)
+
+    def _one(spec, shaped):
+        shape = shaped.shape if hasattr(shaped, "shape") else tuple(shaped)
+        return named_sharding(mesh, spec, shape)
+
+    return jax.tree.map(_one, specs, shapes, is_leaf=is_spec_leaf)
+
+
+_MESH: Optional[Mesh] = None
+
+
+class use_mesh:
+    """Context manager: make `mesh` the target of ``constrain`` constraints.
+
+    Models call ``constrain`` on activations; outside a mesh context (unit
+    tests, single device) it is a no-op.
+    """
+
+    def __init__(self, mesh: Optional[Mesh]):
+        self.mesh = mesh
+        self._prev: Optional[Mesh] = None
+
+    def __enter__(self):
+        global _MESH
+        self._prev, _MESH = _MESH, self.mesh
+        return self.mesh
+
+    def __exit__(self, *exc):
+        global _MESH
+        _MESH = self._prev
+        return False
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def constrain(x: jax.Array, spec: Sequence[Axis]) -> jax.Array:
+    """with_sharding_constraint against the active ``use_mesh`` mesh."""
+    if _MESH is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, resolve_spec(spec, _MESH, x.shape))
+    )
+
+
+def device_put_tree(tree: Any, specs: Any, mesh: Mesh) -> Any:
+    shardings = shardings_for(mesh, specs, tree)
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def mesh_num_devices(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package ships:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (handles metric/layout plumbing, merges)
+  ref.py    — pure-jnp oracle used for validation and as the CPU exec path
+
+Kernels are validated in interpret mode (the kernel body runs in Python on
+CPU) against the refs over shape/dtype sweeps; see tests/test_kernels_*.
+"""

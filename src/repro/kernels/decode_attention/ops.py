@@ -1,0 +1,23 @@
+"""Public jit'd wrapper for decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "scale", "block_s", "interpret", "use_kernel")
+)
+def decode_attention(q, k, v, lengths, *, window=0, softcap=0.0, scale=None,
+                     block_s=256, interpret=True, use_kernel=True):
+    """q [B,H,Dh], k/v [B,S,KH,Dh], lengths [B] -> [B,H,Dh]."""
+    if not use_kernel:
+        return decode_attention_ref(q, k, v, lengths, window=window, softcap=softcap, scale=scale)
+    return decode_attention_kernel(
+        q, k, v, lengths, window=window, softcap=softcap, scale=scale,
+        block_s=block_s, interpret=interpret,
+    )

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lengths, *, window=0, softcap=0.0, scale=None):
+    """q [B,H,Dh], k/v [B,S,KH,Dh], lengths [B] (#valid slots incl. current)
+    -> [B,H,Dh]."""
+    B, H, Dh = q.shape
+    S, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else Dh ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, KH, G, Dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(S)[None]  # [1,S]
+    mask = pos < lengths[:, None]
+    if window:
+        mask &= pos > (lengths[:, None] - 1 - window)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, Dh).astype(q.dtype)

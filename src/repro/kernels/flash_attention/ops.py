@@ -1,0 +1,28 @@
+"""Public jit'd wrapper for flash attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "block_q", "block_k",
+                     "interpret", "use_kernel"),
+)
+def flash_attention(
+    q, k, v, *, causal=True, window=0, softcap=0.0, scale=None,
+    block_q=128, block_k=128, interpret=True, use_kernel=True,
+):
+    """q [B,S,H,Dh], k/v [B,S,KH,Dh] -> [B,S,H,Dh] (GQA by head grouping)."""
+    if not use_kernel:
+        return flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, scale=scale)
+    return flash_attention_kernel(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )

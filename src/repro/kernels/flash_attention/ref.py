@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash attention (prefill): causal + sliding window +
+logit softcap + GQA, full score materialization (test sizes only)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None):
+    """q [B,S,H,Dh], k/v [B,S,KH,Dh] -> [B,S,H,Dh]."""
+    B, S, H, Dh = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else Dh ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, S, KH, G, Dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[None, :] <= pos[:, None]
+    if window:
+        mask &= pos[None, :] > pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, S, H, Dh).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.similarity_topk.ops import similarity_topk  # noqa: F401

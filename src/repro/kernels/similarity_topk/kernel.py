@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: fused similarity scoring + per-block top-k.
+
+The cache database [N, D] streams through VMEM in [block_n, D] tiles; the
+query block [Q, D] stays resident. Each grid step computes the [Q, block_n]
+score tile on the MXU and extracts its top-k by k rounds of masked max
+(k is small — 4..16 — so this beats a sort and needs no sort primitive,
+which Mosaic does not provide). The tiny [nb, Q, k] candidate tensor is
+merged by ops.py.
+
+VMEM budget per step: block_n*D*4 + Q*D*4 + Q*block_n*4 bytes;
+block_n=512, D=1024, Q<=16 => ~2.1 MB + 64 KB + 32 KB — comfortably resident,
+and block_n is a lane-aligned multiple of 128 for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -3.0e38  # python literal: jnp constants would be captured consts in the kernel
+
+
+def _topk_block_kernel(db_ref, valid_ref, q_ref, out_s_ref, out_i_ref, *, k: int, block_n: int):
+    j = pl.program_id(0)
+    db = db_ref[...]  # [block_n, D]
+    q = q_ref[...]  # [Q, D]
+    valid = valid_ref[...]  # [block_n, 1] f32 (1.0 = valid)
+
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32),
+        db.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [Q, block_n]
+    s = jnp.where(valid[:, 0][None, :] > 0.5, s, NEG)
+
+    Q = s.shape[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, (Q, block_n), 1)
+    base = j * block_n
+    for t in range(k):  # static unroll: k rounds of masked max-extract
+        m = jnp.max(s, axis=1)  # [Q]
+        hit = s >= m[:, None]
+        idx = jnp.min(jnp.where(hit, col, jnp.int32(2**30)), axis=1)  # first argmax
+        out_s_ref[0, :, t] = m
+        out_i_ref[0, :, t] = idx + base
+        s = jnp.where(col == idx[:, None], NEG, s)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def similarity_topk_blocks(db, valid_f32, q, *, k: int, block_n: int = 512, interpret: bool = True):
+    """Returns per-block candidates (scores [nb, Q, k], idx [nb, Q, k])."""
+    N, D = db.shape
+    Q = q.shape[0]
+    assert N % block_n == 0, f"N={N} must be a multiple of block_n={block_n}"
+    nb = N // block_n
+
+    kernel = functools.partial(_topk_block_kernel, k=k, block_n=block_n)
+    out_shape = (
+        jax.ShapeDtypeStruct((nb, Q, k), jnp.float32),
+        jax.ShapeDtypeStruct((nb, Q, k), jnp.int32),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_n, D), lambda j: (j, 0)),  # db tile streams
+            pl.BlockSpec((block_n, 1), lambda j: (j, 0)),  # validity tile
+            pl.BlockSpec((Q, D), lambda j: (0, 0)),  # queries resident
+        ],
+        out_specs=(
+            pl.BlockSpec((1, Q, k), lambda j: (j, 0, 0)),
+            pl.BlockSpec((1, Q, k), lambda j: (j, 0, 0)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(db, valid_f32, q)

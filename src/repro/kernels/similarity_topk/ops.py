@@ -1,0 +1,46 @@
+"""Public jit'd wrapper for the fused similarity+top-k lookup."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.similarity_topk.kernel import similarity_topk_blocks
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "block_n", "interpret"))
+def similarity_topk(db, valid, q, *, k: int, metric: str = "cosine", block_n: int = 512,
+                    interpret: bool = True):
+    """db [N, D], valid [N] bool, q [Q, D] -> (scores [Q,k], idx [Q,k]).
+
+    cosine is handled by pre-normalizing both sides (dot == cosine on unit
+    vectors), keeping the kernel a pure MXU dot. N is padded to a block
+    multiple with invalid entries.
+    """
+    db = db.astype(jnp.float32)
+    q = q.astype(jnp.float32)
+    if metric == "cosine":
+        db = db / jnp.maximum(jnp.linalg.norm(db, axis=-1, keepdims=True), 1e-9)
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+    elif metric != "dot":
+        raise ValueError(f"kernel path supports cosine/dot; got {metric!r}")
+
+    N, D = db.shape
+    bn = min(block_n, max(128, 1 << (N - 1).bit_length()))
+    bn = min(bn, block_n)
+    pad_n = (-N) % bn
+    if pad_n:
+        db = jnp.pad(db, ((0, pad_n), (0, 0)))
+        valid = jnp.pad(valid, (0, pad_n))
+    valid_f32 = valid.astype(jnp.float32)[:, None]
+
+    bs, bi = similarity_topk_blocks(db, valid_f32, q, k=k, block_n=bn, interpret=interpret)
+    # merge the [nb, Q, k] candidates: one tiny global top-k
+    Q = q.shape[0]
+    flat_s = bs.transpose(1, 0, 2).reshape(Q, -1)
+    flat_i = bi.transpose(1, 0, 2).reshape(Q, -1)
+    top_s, pos = jax.lax.top_k(flat_s, k)
+    top_i = jnp.take_along_axis(flat_i, pos, axis=1)
+    top_s = jnp.where(top_s <= jnp.float32(-1.0e38), -jnp.inf, top_s)
+    return top_s, top_i

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused similarity + top-k cache lookup."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def similarity_topk_ref(db, valid, q, k: int, metric: str = "cosine"):
+    """db [N, D], valid [N] bool, q [Q, D] -> (scores [Q, k], idx [Q, k])."""
+    db = db.astype(jnp.float32)
+    q = q.astype(jnp.float32)
+    if metric == "cosine":
+        db = db / jnp.maximum(jnp.linalg.norm(db, axis=-1, keepdims=True), 1e-9)
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+    elif metric != "dot":
+        raise ValueError(f"unsupported metric {metric!r}")
+    s = q @ db.T
+    s = jnp.where(valid[None, :], s, -jnp.inf)
+    return jax.lax.top_k(s, k)

@@ -1,0 +1,18 @@
+"""Public jit'd wrapper for the SSD chunk scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "use_kernel"))
+def ssd_scan(x, Bm, Cm, dt, A, D, *, chunk: int = 128, interpret: bool = True,
+             use_kernel: bool = True):
+    """x [B,S,H,P], Bm/Cm [B,S,H,N], dt [B,S,H], A/D [H] -> (y, final_state)."""
+    if not use_kernel:
+        return ssd_scan_ref(x, Bm, Cm, dt, A, D, chunk)
+    return ssd_scan_kernel(x, Bm, Cm, dt, A, D, chunk=chunk, interpret=interpret)

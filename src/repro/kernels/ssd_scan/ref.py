@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the Mamba2 SSD chunk scan.
+
+This is the same math as repro.models.ssm._ssd_chunk_scan, exposed on raw
+tensors so the kernel sweep can drive it directly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import _ssd_chunk_scan
+
+
+def ssd_scan_ref(x, Bm, Cm, dt, A, D, chunk: int):
+    """x [B,S,H,P], Bm/Cm [B,S,H,N], dt [B,S,H] f32, A [H] (<0), D [H].
+
+    Returns (y [B,S,H,P], final_state [B,H,P,N] f32).
+    """
+    return _ssd_chunk_scan(x, Bm, Cm, dt.astype(jnp.float32), A.astype(jnp.float32),
+                           D.astype(jnp.float32), chunk)

@@ -1,0 +1,355 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (architecture x input-shape) cell, lower + compile the real step
+function (train_step / prefill / decode_step) against the production mesh —
+single-pod (16, 16) and multi-pod (2, 16, 16) — with full production
+shardings, and record:
+
+  * memory_analysis()  — per-device bytes (argument/output/temp) => fits HBM?
+  * cost_analysis()    — per-device HLO FLOPs / bytes accessed (roofline)
+  * collective bytes   — parsed from the partitioned HLO (hlo_analysis.py)
+
+plus a `cache_lookup` pseudo-cell lowering the paper's sharded cache search
+on the same meshes. Results append incrementally to a JSON file so a long
+sweep resumes where it left off.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single   # roofline pass
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, SHAPES, cells_for, get_config
+from repro.distributed.sharding import shardings_for, use_mesh
+from repro.launch.hlo_analysis import parse_collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import abstract_params, input_specs
+from repro.models import transformer as T
+from repro.training.train_loop import abstract_train_state, make_train_step
+
+HBM_PER_CHIP = 16 * 1024**3  # v5e
+
+
+def _mem_stats(compiled):
+    m = compiled.memory_analysis()
+    return {
+        "argument_bytes": int(m.argument_size_in_bytes),
+        "output_bytes": int(m.output_size_in_bytes),
+        "temp_bytes": int(m.temp_size_in_bytes),
+        "alias_bytes": int(m.alias_size_in_bytes),
+        "code_bytes": int(m.generated_code_size_in_bytes),
+    }
+
+
+def _cost_stats(compiled):
+    c = compiled.cost_analysis() or {}
+    return {
+        "flops": float(c.get("flops", 0.0)),
+        "transcendentals": float(c.get("transcendentals", 0.0)),
+        "bytes_accessed": float(c.get("bytes accessed", 0.0)),
+    }
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, parse_hlo: bool = True, cfg=None,
+               adapt_accum: bool = True):
+    """Lower + compile one cell. Returns the result record."""
+    cfg = cfg if cfg is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    # memory-optimal grad accumulation: one sequence per batch shard per
+    # microbatch. More accumulation can't shard (activations replicate when
+    # mb < shards); less holds needlessly many sequences live. Cost-extraction
+    # configs pass adapt_accum=False (the accum scan is a while loop whose
+    # body XLA's cost analysis counts once — accum must stay 1 there).
+    if adapt_accum:
+        batch_shards = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                batch_shards *= mesh.shape[a]
+        max_accum = max(shape.global_batch // batch_shards, 1)
+        if shape.kind == "train" and cfg.grad_accum != max_accum:
+            cfg = dataclasses.replace(cfg, grad_accum=max_accum)
+    spec = input_specs(cfg, shape)
+    n_dev = len(mesh.devices.flatten())
+
+    t0 = time.time()
+    with use_mesh(mesh):
+        if spec["kind"] == "train":
+            state, state_specs = abstract_train_state(cfg)
+            train_step = make_train_step(cfg)
+            in_shardings = (
+                shardings_for(mesh, state_specs, state),
+                shardings_for(mesh, spec["batch_specs"], spec["batch"]),
+            )
+            fn = jax.jit(train_step, in_shardings=in_shardings, donate_argnums=(0,))
+            lowered = fn.lower(state, spec["batch"])
+        elif spec["kind"] == "prefill":
+            params, param_specs = abstract_params(cfg)
+            if getattr(cfg, "infer_params_tp_only", False):
+                param_specs = despec_params_for_inference(param_specs)
+
+            def prefill_fn(p, batch, cache):
+                return T.prefill(p, cfg, batch, cache)
+
+            in_shardings = (
+                shardings_for(mesh, param_specs, params),
+                shardings_for(mesh, spec["batch_specs"], spec["batch"]),
+                shardings_for(mesh, spec["cache_specs"], spec["cache"]),
+            )
+            fn = jax.jit(prefill_fn, in_shardings=in_shardings, donate_argnums=(2,))
+            lowered = fn.lower(params, spec["batch"], spec["cache"])
+        else:  # decode
+            params, param_specs = abstract_params(cfg)
+            if getattr(cfg, "infer_params_tp_only", False):
+                param_specs = despec_params_for_inference(param_specs)
+
+            def decode_fn(p, tokens, pos, cache):
+                return T.decode_step(p, cfg, tokens, pos, cache)
+
+            in_shardings = (
+                shardings_for(mesh, param_specs, params),
+                shardings_for(mesh, spec["tokens_spec"], spec["tokens"]),
+                shardings_for(mesh, spec["pos_spec"], spec["pos"]),
+                shardings_for(mesh, spec["cache_specs"], spec["cache"]),
+            )
+            fn = jax.jit(decode_fn, in_shardings=in_shardings, donate_argnums=(3,))
+            lowered = fn.lower(params, spec["tokens"], spec["pos"], spec["cache"])
+
+        lower_s = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t1
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "devices": n_dev,
+        "kind": spec["kind"],
+        "lower_s": round(lower_s, 1),
+        "compile_s": round(compile_s, 1),
+        "memory": _mem_stats(compiled),
+        "cost": _cost_stats(compiled),
+    }
+    total_dev_bytes = sum(
+        rec["memory"][k] for k in ("argument_bytes", "output_bytes", "temp_bytes")
+    ) - rec["memory"]["alias_bytes"]
+    rec["bytes_per_device"] = int(total_dev_bytes)
+    rec["fits_hbm"] = bool(total_dev_bytes <= HBM_PER_CHIP)
+    if parse_hlo:
+        txt = compiled.as_text()
+        rec["collective_bytes_per_device"] = parse_collective_bytes(txt)
+        rec["hlo_len"] = len(txt)
+    return rec
+
+
+def despec_params_for_inference(specs):
+    """Drop the FSDP (`data`) axis from parameter specs: inference wants
+    TP-sharded + data-replicated weights (no per-layer all-gathers). Only
+    valid when params fit HBM at 1/TP scale — deepseek-v3 (84 GB/chip at
+    TP=16) must keep FSDP."""
+
+    def one(spec):
+        if spec is None:
+            return None
+        out = []
+        for e in spec:
+            if e == "data":
+                out.append(None)
+            elif isinstance(e, tuple):
+                kept = tuple(a for a in e if a != "data")
+                out.append(kept if kept else None)
+            else:
+                out.append(e)
+        return tuple(out)
+
+    from repro.distributed.sharding import is_spec_leaf
+    import jax
+
+    return jax.tree.map(one, specs, is_leaf=is_spec_leaf)
+
+
+def _unit_layers(cfg):
+    """Smallest + double-depth configs whose layer composition matches the
+    full stack's repeating unit (pattern cycle / hybrid group)."""
+    if cfg.family == "hybrid":
+        u = cfg.hybrid_period
+    elif cfg.family == "ssm":
+        u = 1
+    else:
+        u = len(cfg.attn_pattern)
+    base = cfg.moe.first_k_dense if cfg.moe else 0
+    # slope over 2 units: calibration vs a fully-unrolled qwen1.5-0.5b ground
+    # truth gives flops within ~8%, bytes within ~30%, collectives exact
+    # (EXPERIMENTS.md §Roofline methodology)
+    return base + u, base + 3 * u
+
+
+def extrapolate_costs(arch: str, shape_name: str, mesh, cfg=None):
+    """Exact per-device cost terms via two small *unrolled* compiles.
+
+    XLA's cost_analysis counts while-loop bodies once, so the scanned
+    full-depth compile undercounts by ~L x. Lowering the SAME cell at unit
+    depth L1 and 2x-unit depth L2 with every loop unrolled gives exact
+    HLO costs whose per-layer slope extrapolates linearly to full depth:
+        total(L) = f(L1) + (f(L2) - f(L1)) / (L2 - L1) * (L - L1).
+    grad_accum is folded to 1 (same total tokens -> identical FLOPs; the
+    memory term is the one-pass equivalent, see EXPERIMENTS.md note).
+    """
+    cfg = cfg if cfg is not None else get_config(arch)
+    L_full = cfg.num_layers
+    L1, L2 = _unit_layers(cfg)
+    points = {}
+    for L in (L1, L2):
+        cfg_s = dataclasses.replace(cfg, num_layers=L, unroll=True, grad_accum=1)
+        rec = lower_cell(arch, shape_name, mesh, parse_hlo=True, cfg=cfg_s, adapt_accum=False)
+        points[L] = rec
+
+    def lerp(get):
+        f1, f2 = get(points[L1]), get(points[L2])
+        slope = (f2 - f1) / (L2 - L1)
+        return f1 + slope * (L_full - L1)
+
+    coll_keys = set(points[L1]["collective_bytes_per_device"]) | set(
+        points[L2]["collective_bytes_per_device"]
+    )
+    return {
+        "method": f"unrolled L={L1},{L2} -> {L_full}",
+        "flops": lerp(lambda r: r["cost"]["flops"]),
+        "bytes_accessed": lerp(lambda r: r["cost"]["bytes_accessed"]),
+        "transcendentals": lerp(lambda r: r["cost"]["transcendentals"]),
+        "collectives": {
+            k: lerp(lambda r: r["collective_bytes_per_device"].get(k, 0.0)) for k in coll_keys
+        },
+        "compile_s": points[L1]["compile_s"] + points[L2]["compile_s"],
+    }
+
+
+def lower_cache_lookup(mesh, *, n_entries: int = 1 << 20, dim: int = 768, q: int = 16, k: int = 8):
+    """Lower the paper's sharded cache lookup on the production mesh."""
+    from repro.distributed.sharded_store import make_sharded_lookup
+
+    n_dev = len(mesh.devices.flatten())
+    n = n_entries - (n_entries % n_dev)
+    lookup = make_sharded_lookup(mesh, k=k)
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    axis = axes if len(axes) > 1 else axes[0]
+    db = jax.ShapeDtypeStruct((n, dim), jnp.float32)
+    valid = jax.ShapeDtypeStruct((n,), jnp.bool_)
+    qv = jax.ShapeDtypeStruct((q, dim), jnp.float32)
+    fn = jax.jit(
+        lookup,
+        in_shardings=(
+            NamedSharding(mesh, P(axis, None)),
+            NamedSharding(mesh, P(axis)),
+            NamedSharding(mesh, P()),
+        ),
+    )
+    t0 = time.time()
+    lowered = fn.lower(db, valid, qv)
+    compiled = lowered.compile()
+    rec = {
+        "arch": "cache_lookup",
+        "shape": f"n{n_entries >> 20}m_d{dim}_q{q}_k{k}",
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "devices": n_dev,
+        "kind": "cache",
+        "compile_s": round(time.time() - t0, 1),
+        "memory": _mem_stats(compiled),
+        "cost": _cost_stats(compiled),
+        "collective_bytes_per_device": parse_collective_bytes(compiled.as_text()),
+    }
+    total = sum(rec["memory"][k] for k in ("argument_bytes", "output_bytes", "temp_bytes"))
+    rec["bytes_per_device"] = int(total)
+    rec["fits_hbm"] = bool(total <= HBM_PER_CHIP)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape name (default: all for arch)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--skip-cache-cell", action="store_true")
+    ap.add_argument("--no-extrapolate", action="store_true")
+    ap.add_argument("--force", action="store_true", help="redo cells already in --out")
+    args = ap.parse_args()
+
+    results = []
+    done = set()
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            results = json.load(f)
+        done = {(r["arch"], r["shape"], r["mesh"]) for r in results if "error" not in r}
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(make_production_mesh(multi_pod=False))
+    if args.mesh in ("multi", "both"):
+        meshes.append(make_production_mesh(multi_pod=True))
+
+    archs = [args.arch] if args.arch else list(ARCH_NAMES)
+    for mesh in meshes:
+        mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+        for arch in archs:
+            shapes = [args.shape] if args.shape else cells_for(arch)
+            for shape_name in shapes:
+                key = (arch, shape_name, mesh_name)
+                if key in done:
+                    print(f"[skip] {key}")
+                    continue
+                print(f"[cell] {arch} x {shape_name} on {mesh_name} ...", flush=True)
+                try:
+                    rec = lower_cell(arch, shape_name, mesh)
+                    if len(mesh.axis_names) == 2 and not args.no_extrapolate:
+                        # roofline cost terms (single-pod pass only)
+                        rec["cost_extrapolated"] = extrapolate_costs(arch, shape_name, mesh)
+                    gb = rec["bytes_per_device"] / 2**30
+                    flops = rec.get("cost_extrapolated", rec["cost"])["flops"]
+                    print(
+                        f"  ok  compile={rec['compile_s']}s mem/dev={gb:.2f}GiB "
+                        f"fits={rec['fits_hbm']} flops/dev={flops:.3e}",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+                    rec = {
+                        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                    print(f"  FAIL {type(e).__name__}: {str(e)[:200]}", flush=True)
+                results = [r for r in results if (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+        if not args.skip_cache_cell:
+            key = ("cache_lookup", "n1m_d768_q16_k8", mesh_name)
+            if key not in done:
+                print(f"[cell] cache_lookup on {mesh_name} ...", flush=True)
+                rec = lower_cache_lookup(mesh)
+                results = [r for r in results if (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                print(f"  ok  compile={rec['compile_s']}s", flush=True)
+
+    n_ok = sum(1 for r in results if "error" not in r)
+    print(f"\ndone: {n_ok}/{len(results)} cells compiled clean -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Post-compile HLO analysis: collective-byte accounting for the roofline.
+
+collective_bytes is not in cost_analysis(), so we parse the partitioned HLO
+module text: every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction contributes the byte size of its operands
+(per-device shapes — the module is post-SPMD-partitioning). Instructions
+inside `while` bodies are weighted by the loop trip count (scan-over-layers
+puts every per-layer collective inside a while), recovered from the loop
+condition's comparison constant.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_COMP_RE = re.compile(r"^\s*%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_CONST_DEF_RE = re.compile(r"^\s*%?([\w.\-]+)\s*=\s*[su]\d+\[\]\s*constant\((\d+)\)")
+_COMPARE_RE = re.compile(r"compare\(([^)]*)\).*direction=(LT|GT|LE|GE)")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _trip_count_of(cond_lines: List[str]) -> int:
+    """Trip count from a while condition: the constant operand of the loop
+    bound compare (canonical scan conds are `iter < constant(N)`)."""
+    consts = {}
+    for line in cond_lines:
+        m = _CONST_DEF_RE.match(line)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for line in cond_lines:
+        m = _COMPARE_RE.search(line)
+        if m:
+            ops = re.findall(r"%([\w.\-]+)", m.group(1))
+            bound = [consts[o] for o in ops if o in consts]
+            if bound:
+                return max(bound[0], 1)
+            # constant inlined in the compare operand list: `s32[] constant(8)`
+            inline = re.search(r"constant\((\d+)\)", m.group(1))
+            if inline:
+                return max(int(inline.group(1)), 1)
+    return 1
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Returns per-device bytes by collective kind (while-body weighted)."""
+    # 1. split into computations
+    comps: Dict[str, List[str]] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        if line.startswith("%") or (line and not line.startswith(" ") and "{" in line):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", line)
+            if m and "{" in line:
+                current = m.group(1)
+                comps[current] = []
+                continue
+        if current is not None:
+            if line.strip() == "}":
+                current = None
+            else:
+                comps[current].append(line)
+
+    # 2. symbol table: name -> bytes(result type), per computation
+    def_types: Dict[Tuple[str, str], str] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m:
+                def_types[(cname, m.group(1))] = m.group(2)
+
+    # 3. trip counts: while(...) condition compares against a constant
+    trip_count: Dict[str, int] = {}  # body computation -> n
+    parent_of: Dict[str, str] = {}  # body computation -> computation containing the while
+    for cname, lines in comps.items():
+        for line in lines:
+            if "while(" in line:
+                m = _WHILE_RE.search(line)
+                if not m:
+                    continue
+                cond, body = m.group(1), m.group(2)
+                n = _trip_count_of(comps.get(cond, []))
+                trip_count[body] = n
+                parent_of[body] = cname
+
+    def weight_of(cname: str) -> int:
+        w = 1
+        seen = set()
+        while cname in trip_count and cname not in seen:
+            seen.add(cname)
+            w *= trip_count[cname]
+            cname = parent_of.get(cname, "")
+        return w
+
+    # 4. accumulate collective operand bytes
+    out: Dict[str, float] = defaultdict(float)
+    for cname, lines in comps.items():
+        w = weight_of(cname)
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            rhs = m.group(2)
+            op = None
+            for c in COLLECTIVES:
+                if re.search(rf"\b{c}(-start)?\(", rhs):
+                    op = c
+                    break
+            if op is None:
+                continue
+            # operand bytes: types inline if present, else look up operand names
+            paren = rhs[rhs.index("(") + 1 :]
+            operand_bytes = _type_bytes(paren)
+            if operand_bytes == 0:
+                for name in re.findall(r"%([\w.\-]+)", paren):
+                    t = def_types.get((cname, name))
+                    if t:
+                        operand_bytes += _type_bytes(t)
+            out[op] += w * operand_bytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def count_ops(hlo_text: str, opcodes=("fusion", "dot", "convolution")) -> Dict[str, int]:
+    out = {}
+    for op in opcodes:
+        out[op] = len(re.findall(rf"=\s*\S+\s+{op}\(", hlo_text))
+    return out

@@ -1,0 +1,64 @@
+"""Serving driver: a zoo model behind the GenerativeCache-fronted client.
+
+Runs batched requests (paraphrase-clustered synthetic queries) through the
+full stack — embed -> semantic/generative lookup -> miss -> continuous-
+batching engine -> insert — and prints hit-rate / latency / cost stats.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --requests 40
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.configs import get_config
+from repro.core import EnhancedClient, GenerativeCache, NgramHashEmbedder
+from repro.core.adaptive import ModelCostInfo
+from repro.data.synthetic import squad_like_qa
+from repro.serving.engine import ModelBackend, ServingEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--requests", type=int, default=40)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--threshold", type=float, default=0.6)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=True)
+    engine = ServingEngine(cfg, max_batch=args.max_batch, max_seq=256)
+    backend = ModelBackend(args.arch, engine)
+
+    cache = GenerativeCache(
+        NgramHashEmbedder(), threshold=args.threshold, t_single=0.45, t_combined=1.0
+    )
+    client = EnhancedClient(cache=cache)
+    client.register_backend(backend, ModelCostInfo(0.5, 1.5, 3.0))
+
+    qa = squad_like_qa(n_clusters=max(args.requests // 4, 2), paraphrases=4)
+    queries = [q for q, _, _ in qa][: args.requests]
+
+    t0 = time.perf_counter()
+    hits = 0
+    for i, q in enumerate(queries):
+        r = client.query(q, max_tokens=args.max_new_tokens)
+        hits += r.from_cache
+        tag = "HIT " if r.from_cache else "MISS"
+        print(f"[{i:3d}] {tag} {r.latency_s*1e3:7.1f} ms  {q[:60]}")
+    wall = time.perf_counter() - t0
+
+    s = client.stats
+    print(f"\nrequests={s.requests} hits={s.cache_hits} "
+          f"hit_rate={s.cache_hits / max(s.requests, 1):.2f} "
+          f"llm_calls={s.llm_calls} cost=${s.total_cost_usd:.6f} wall={wall:.1f}s")
+    print(f"engine: {engine.metrics}")
+    cs = cache.stats
+    print(f"cache: lookups={cs.lookups} generative_hits={cs.generative_hits} "
+          f"embed_time={cs.embed_time_s:.2f}s search_time={cs.search_time_s:.3f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""ShapeDtypeStruct stand-ins for every model input (assignment step 2).
+
+``input_specs(cfg, shape_name)`` returns weak-type-correct, shardable,
+allocation-free abstract inputs for the step function the cell lowers:
+train_step (train_*), prefill (prefill_*), or decode_step (decode_* /
+long_*). ``abstract_params`` / ``abstract_cache`` eval_shape the real
+constructors so dry-run shapes can never drift from the real ones.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import BATCH
+from repro.models import transformer as T
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+
+
+def abstract_params(cfg: ModelConfig) -> Tuple[Any, Any]:
+    captured = {}
+
+    def build(k):
+        p, s = T.init_params(cfg, k)
+        captured["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return shapes, captured["specs"]
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Tuple[Any, Any]:
+    captured = {}
+
+    def build():
+        c, s = T.init_cache(cfg, batch, max_seq)
+        captured["specs"] = s
+        return c
+
+    shapes = jax.eval_shape(build)
+    return shapes, captured["specs"]
+
+
+def _token_batch(cfg: ModelConfig, batch: int, seq: int) -> Tuple[Dict, Dict]:
+    """(abstract batch dict, batch specs dict) for the given token count."""
+    if cfg.modality == "audio":
+        return (
+            {"tokens": jax.ShapeDtypeStruct((batch, cfg.num_codebooks, seq), I32)},
+            {"tokens": (BATCH, None, None)},
+        )
+    if cfg.modality == "vision":
+        text = max(seq - cfg.vision_patches, 16)
+        return (
+            {
+                "tokens": jax.ShapeDtypeStruct((batch, text), I32),
+                "vision_embeds": jax.ShapeDtypeStruct((batch, cfg.vision_patches, cfg.d_frontend), BF16),
+            },
+            {"tokens": (BATCH, None), "vision_embeds": (BATCH, None, None)},
+        )
+    return (
+        {"tokens": jax.ShapeDtypeStruct((batch, seq), I32)},
+        {"tokens": (BATCH, None)},
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Everything dryrun.py needs to lower one (arch x shape) cell."""
+    if shape.kind == "train":
+        batch, batch_specs = _token_batch(cfg, shape.global_batch, shape.seq_len)
+        return {"kind": "train", "batch": batch, "batch_specs": batch_specs}
+
+    if shape.kind == "prefill":
+        batch, batch_specs = _token_batch(cfg, shape.global_batch, shape.seq_len)
+        cache, cache_specs = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        return {
+            "kind": "prefill",
+            "batch": batch,
+            "batch_specs": batch_specs,
+            "cache": cache,
+            "cache_specs": cache_specs,
+        }
+
+    # decode: one new token against a seq_len-deep cache
+    B = shape.global_batch
+    if cfg.modality == "audio":
+        tokens = jax.ShapeDtypeStruct((B, cfg.num_codebooks, 1), I32)
+        tok_spec = (BATCH, None, None)
+    else:
+        tokens = jax.ShapeDtypeStruct((B, 1), I32)
+        tok_spec = (BATCH, None)
+    cache, cache_specs = abstract_cache(cfg, B, shape.seq_len)
+    return {
+        "kind": "decode",
+        "tokens": tokens,
+        "tokens_spec": tok_spec,
+        "pos": jax.ShapeDtypeStruct((B,), I32),
+        "pos_spec": (BATCH,),
+        "cache": cache,
+        "cache_specs": cache_specs,
+    }

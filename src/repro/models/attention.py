@@ -1,0 +1,361 @@
+"""Attention: GQA with sliding-window/softcap/qk-norm variants, and MLA.
+
+Local vs global vs NoPE layers share identical parameter shapes, so one scan
+body serves every per-layer pattern: ``window`` (0 = unbounded), ``theta`` and
+``use_rope`` arrive as (possibly traced) per-layer scalars.
+
+The jnp path never materializes a full [Sq, Sk] score matrix for long
+sequences: queries are processed in chunks of ``cfg.attn_chunk`` (an online
+variant lives in kernels/flash_attention for the TPU target).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import FSDP, TP
+from repro.models.layers import (
+    F32,
+    apply_rope,
+    dense_init,
+    maybe_rope,
+    ones_init,
+    param_dtype,
+    rms_norm,
+    softcap,
+    stack_spec,
+    zeros_init,
+)
+
+NEG_INF = -2.3819763e38  # min bf16-representable-ish large negative
+
+
+# ---------------------------------------------------------------------------
+# Standard (GQA) attention
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg, d_in: Optional[int] = None, stacked: int = 0):
+    d_in = d_in or cfg.d_model
+    H, K, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = param_dtype(cfg)
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(ks[0], (d_in, H, Dh), fan_in=d_in, dtype=dt, stacked=stacked),
+        "wk": dense_init(ks[1], (d_in, K, Dh), fan_in=d_in, dtype=dt, stacked=stacked),
+        "wv": dense_init(ks[2], (d_in, K, Dh), fan_in=d_in, dtype=dt, stacked=stacked),
+        "wo": dense_init(ks[3], (H, Dh, d_in), fan_in=H * Dh, dtype=dt, stacked=stacked),
+    }
+    specs = {
+        "wq": stack_spec((FSDP, TP, None), stacked),
+        "wk": stack_spec((FSDP, TP, None), stacked),
+        "wv": stack_spec((FSDP, TP, None), stacked),
+        "wo": stack_spec((TP, None, FSDP), stacked),
+    }
+    if cfg.qkv_bias:
+        params["bq"] = zeros_init((H, Dh), dt, stacked)
+        params["bk"] = zeros_init((K, Dh), dt, stacked)
+        params["bv"] = zeros_init((K, Dh), dt, stacked)
+        specs["bq"] = stack_spec((TP, None), stacked)
+        specs["bk"] = stack_spec((TP, None), stacked)
+        specs["bv"] = stack_spec((TP, None), stacked)
+    if cfg.qk_norm:
+        params["q_norm"] = ones_init((Dh,), dt, stacked)
+        params["k_norm"] = ones_init((Dh,), dt, stacked)
+        specs["q_norm"] = stack_spec((None,), stacked)
+        specs["k_norm"] = stack_spec((None,), stacked)
+    return params, specs
+
+
+def _project_qkv(params, cfg, x, positions, theta, use_rope):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = maybe_rope(q, positions, theta, use_rope)
+    k = maybe_rope(k, positions, theta, use_rope)
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, window, extra_kv_mask=None):
+    """Causal + sliding-window mask. q_pos [B,Sq], k_pos [B,Sk], window scalar."""
+    causal = k_pos[:, None, :] <= q_pos[:, :, None]  # [B, Sq, Sk]
+    window = jnp.asarray(window, jnp.int32)
+    in_window = k_pos[:, None, :] > (q_pos[:, :, None] - window)
+    m = causal & jnp.where(window > 0, in_window, True)
+    if extra_kv_mask is not None:
+        m = m & extra_kv_mask[:, None, :]
+    return m
+
+
+def mha(
+    q: jax.Array,  # [B, Sq, H, Dh]
+    k: jax.Array,  # [B, Sk, K, Dh]
+    v: jax.Array,  # [B, Sk, K, Dh]
+    *,
+    q_pos: jax.Array,  # [B, Sq]
+    k_pos: jax.Array,  # [B, Sk]
+    window,
+    cap: float,
+    scale: float,
+    chunk: int,
+    kv_mask: Optional[jax.Array] = None,  # [B, Sk] valid-slot mask
+    unroll: bool = False,
+    repeat_kv: bool = False,
+) -> jax.Array:
+    B, Sq, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    Dv = v.shape[-1]
+    if k.dtype != q.dtype:  # quantized KV cache: dequantize on read
+        k = k.astype(q.dtype)
+        v = v.astype(q.dtype)
+    if repeat_kv and G > 1:
+        # keep the head axis TP-shardable: a [K, G] split leaves a K-sized dim
+        # no mesh axis divides (e.g. kv=8 over model=16), which forces GSPMD
+        # to replicate the score einsums; repeating KV costs G x KV bytes but
+        # keeps attention fully head-parallel (§Perf iteration log)
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        K, G = H, 1
+    q = q.reshape(B, Sq, K, G, Dh)
+
+    def attend(qc, qp):
+        # qc [B, c, K, G, Dh]; qp [B, c]
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qc, k, preferred_element_type=F32)
+        s = s * scale
+        s = softcap(s, cap)
+        m = _mask(qp, k_pos, window, kv_mask)  # [B, c, Sk]
+        s = jnp.where(m[:, None, None, :, :], s, NEG_INF)
+        w = jax.nn.softmax(s.astype(F32), axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+
+    if Sq <= chunk or Sq % chunk != 0:
+        out = attend(q, q_pos)
+    else:
+        nc = Sq // chunk
+        qs = q.reshape(B, nc, chunk, K, G, Dh).swapaxes(0, 1)
+        ps = q_pos.reshape(B, nc, chunk).swapaxes(0, 1)
+        from repro.models.layers import maybe_scan
+
+        _, outs = maybe_scan(lambda c, xs: (c, attend(*xs)), None, (qs, ps), unroll=unroll)
+        out = outs.swapaxes(0, 1).reshape(B, Sq, K, G, Dv)
+    return out.reshape(B, Sq, H, Dv)
+
+
+def attention(
+    params,
+    cfg,
+    x: jax.Array,  # [B, S, d_in]
+    positions: jax.Array,  # [B, S]
+    *,
+    window,
+    theta,
+    use_rope=True,
+    cache: Optional[dict] = None,
+    cache_positions: Optional[jax.Array] = None,  # [B] write offset for decode
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Full attention block body (no norms/residual — those live in the caller).
+
+    Train/prefill: cache is None or an empty cache to fill from position 0.
+    Decode: x is [B, 1, d], cache holds k/v, cache_positions the write index.
+    """
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions, theta, use_rope)
+    scale = cfg.query_scale or (1.0 / math.sqrt(cfg.head_dim))
+
+    if cache is None:
+        out = mha(
+            q, k_new, v_new,
+            q_pos=positions, k_pos=positions,
+            window=window, cap=cfg.attn_logit_softcap, scale=scale, chunk=cfg.attn_chunk, unroll=cfg.unroll, repeat_kv=cfg.gqa_repeat_kv,
+        )
+        new_cache = None
+    elif cache_positions is None:
+        # prefill into cache starting at 0
+        S = x.shape[1]
+        k_buf = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, 0, 0, 0))
+        v_buf = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, 0, 0, 0))
+        out = mha(
+            q, k_new, v_new,
+            q_pos=positions, k_pos=positions,
+            window=window, cap=cfg.attn_logit_softcap, scale=scale, chunk=cfg.attn_chunk, unroll=cfg.unroll, repeat_kv=cfg.gqa_repeat_kv,
+        )
+        new_cache = {"k": k_buf, "v": v_buf}
+    else:
+        B = x.shape[0]
+        b_idx = jnp.arange(B)
+        k_buf = cache["k"].at[b_idx, cache_positions].set(k_new[:, 0].astype(cache["k"].dtype))
+        v_buf = cache["v"].at[b_idx, cache_positions].set(v_new[:, 0].astype(cache["v"].dtype))
+        S_max = k_buf.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(S_max, dtype=jnp.int32)[None], (B, S_max))
+        kv_mask = k_pos <= cache_positions[:, None]
+        out = mha(
+            q, k_buf, v_buf,
+            q_pos=positions, k_pos=k_pos,
+            window=window, cap=cfg.attn_logit_softcap, scale=scale, chunk=cfg.attn_chunk, unroll=cfg.unroll, repeat_kv=cfg.gqa_repeat_kv,
+            kv_mask=kv_mask,
+        )
+        new_cache = {"k": k_buf, "v": v_buf}
+
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def init_attn_cache(cfg, batch: int, max_seq: int, d_in: Optional[int] = None):
+    dt = jnp.dtype(cfg.kv_cache_dtype) if cfg.kv_cache_dtype else param_dtype(cfg)
+    K, Dh = cfg.num_kv_heads, cfg.head_dim
+    cache = {
+        "k": jnp.zeros((batch, max_seq, K, Dh), dt),
+        "v": jnp.zeros((batch, max_seq, K, Dh), dt),
+    }
+    # KV heads shard over model when divisible (pass-1 primary); otherwise the
+    # sequence axis picks up `model` as a fallback (pass-2 tuple), and `data`
+    # when the batch can't use it (context-parallel decode / split-K).
+    specs = {
+        "k": (("pod", "data"), ("data", "model"), TP, None),
+        "v": (("pod", "data"), ("data", "model"), TP, None),
+    }
+    return cache, specs
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg, stacked: int = 0):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.num_heads
+    dt = param_dtype(cfg)
+    ks = jax.random.split(key, 5)
+    params = {
+        "wq_a": dense_init(ks[0], (D, m.q_lora_rank), dtype=dt, stacked=stacked),
+        "q_norm": ones_init((m.q_lora_rank,), dt, stacked),
+        "wq_b": dense_init(
+            ks[1], (m.q_lora_rank, H, m.qk_head_dim), fan_in=m.q_lora_rank, dtype=dt, stacked=stacked
+        ),
+        "wkv_a": dense_init(
+            ks[2], (D, m.kv_lora_rank + m.qk_rope_head_dim), dtype=dt, stacked=stacked
+        ),
+        "kv_norm": ones_init((m.kv_lora_rank,), dt, stacked),
+        "wkv_b": dense_init(
+            ks[3],
+            (m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim),
+            fan_in=m.kv_lora_rank,
+            dtype=dt,
+            stacked=stacked,
+        ),
+        "wo": dense_init(ks[4], (H, m.v_head_dim, D), fan_in=H * m.v_head_dim, dtype=dt, stacked=stacked),
+    }
+    specs = {
+        "wq_a": stack_spec((FSDP, None), stacked),
+        "q_norm": stack_spec((None,), stacked),
+        "wq_b": stack_spec((FSDP, TP, None), stacked),
+        "wkv_a": stack_spec((FSDP, None), stacked),
+        "kv_norm": stack_spec((None,), stacked),
+        "wkv_b": stack_spec((FSDP, TP, None), stacked),
+        "wo": stack_spec((TP, None, FSDP), stacked),
+    }
+    return params, specs
+
+
+def _mla_q(params, cfg, x, positions):
+    m = cfg.mla
+    cq = rms_norm(x @ params["wq_a"], params["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["wq_b"])
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(params, cfg, x, positions):
+    m = cfg.mla
+    kvr = x @ params["wkv_a"]  # [B, S, kv_lora + rope]
+    c_kv = rms_norm(kvr[..., : m.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kvr[..., m.kv_lora_rank :], positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_attention(
+    params,
+    cfg,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    cache: Optional[dict] = None,
+    cache_positions: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    m = cfg.mla
+    scale = 1.0 / math.sqrt(m.qk_head_dim)
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    c_kv, k_rope = _mla_kv_latent(params, cfg, x, positions)
+
+    if cache_positions is None:
+        # train / prefill: expand latent to per-head K,V
+        kv = jnp.einsum("bsr,rhk->bshk", c_kv, params["wkv_b"])
+        k_nope = kv[..., : m.qk_nope_head_dim]
+        v = kv[..., m.qk_nope_head_dim :]
+        H = cfg.num_heads
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (*k_rope.shape[:2], H, m.qk_rope_head_dim))],
+            axis=-1,
+        )
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = mha(
+            q, k, v,
+            q_pos=positions, k_pos=positions,
+            window=0, cap=cfg.attn_logit_softcap, scale=scale, chunk=cfg.attn_chunk, unroll=cfg.unroll, repeat_kv=cfg.gqa_repeat_kv,
+        )
+        new_cache = None
+        if cache is not None:
+            new_cache = {
+                "ckv": jax.lax.dynamic_update_slice(cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, 0, 0)),
+                "kr": jax.lax.dynamic_update_slice(cache["kr"], k_rope.astype(cache["kr"].dtype), (0, 0, 0)),
+            }
+    else:
+        # absorbed decode: score/aggregate directly in the latent space.
+        B = x.shape[0]
+        b_idx = jnp.arange(B)
+        ckv_buf = cache["ckv"].at[b_idx, cache_positions].set(c_kv[:, 0].astype(cache["ckv"].dtype))
+        kr_buf = cache["kr"].at[b_idx, cache_positions].set(k_rope[:, 0].astype(cache["kr"].dtype))
+        w_uk = params["wkv_b"][..., : m.qk_nope_head_dim]  # [kvl, H, nope]
+        w_uv = params["wkv_b"][..., m.qk_nope_head_dim :]  # [kvl, H, v]
+        q_lat = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_uk)
+        s = jnp.einsum("bqhl,bsl->bhqs", q_lat, ckv_buf, preferred_element_type=F32)
+        s = s + jnp.einsum("bqhr,bsr->bhqs", q_rope, kr_buf, preferred_element_type=F32)
+        s = s * scale
+        S_max = ckv_buf.shape[1]
+        valid = jnp.arange(S_max, dtype=jnp.int32)[None] <= cache_positions[:, None]
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        w = jax.nn.softmax(s.astype(F32), axis=-1).astype(ckv_buf.dtype)
+        ctx_lat = jnp.einsum("bhqs,bsl->bqhl", w, ckv_buf)
+        out = jnp.einsum("bqhl,lhv->bqhv", ctx_lat, w_uv)
+        new_cache = {"ckv": ckv_buf, "kr": kr_buf}
+
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def init_mla_cache(cfg, batch: int, max_seq: int):
+    m = cfg.mla
+    dt = jnp.dtype(cfg.kv_cache_dtype) if cfg.kv_cache_dtype else param_dtype(cfg)
+    cache = {
+        "ckv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dt),
+        "kr": jnp.zeros((batch, max_seq, m.qk_rope_head_dim), dt),
+    }
+    # latent dim shards over TP (contraction-dim sharding -> partial sums +
+    # all-reduce); sequence picks up `data` when the batch can't use it.
+    specs = {
+        "ckv": (("pod", "data"), ("data",), TP),
+        "kr": (("pod", "data"), ("data",), TP),
+    }
+    return cache, specs

@@ -1,0 +1,266 @@
+"""Shared model building blocks: norms, RoPE, MLPs, embeddings.
+
+All functions are pure; parameters are plain dicts of jnp arrays. Param init
+helpers return ``(params, specs)`` pairs where specs mirror the param tree
+with logical-axis tuples (resolved against a concrete mesh by
+repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import FSDP, TP
+
+F32 = jnp.float32
+
+
+def param_dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def maybe_scan(body, init, xs, *, unroll: bool = False, length: Optional[int] = None):
+    """lax.scan, or a python unroll when exact HLO cost accounting is needed
+    (XLA's cost analysis counts while-loop bodies once; the dry-run's cost
+    extraction lowers small unrolled configs — see launch/dryrun.py)."""
+    if not unroll:
+        return jax.lax.scan(body, init, xs, length=length)
+    n = length if length is not None else jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        x_i = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, fan_in: Optional[int] = None, dtype=jnp.bfloat16, stacked: int = 0):
+    """Truncated-normal init with 1/sqrt(fan_in) scale; optional leading stack dim."""
+    if fan_in is None:
+        fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    full = (stacked,) + tuple(shape) if stacked else tuple(shape)
+    return (jax.random.truncated_normal(key, -3.0, 3.0, full, F32) * std).astype(dtype)
+
+
+def zeros_init(shape, dtype=jnp.bfloat16, stacked: int = 0):
+    full = (stacked,) + tuple(shape) if stacked else tuple(shape)
+    return jnp.zeros(full, dtype)
+
+
+def ones_init(shape, dtype=jnp.bfloat16, stacked: int = 0):
+    full = (stacked,) + tuple(shape) if stacked else tuple(shape)
+    return jnp.ones(full, dtype)
+
+
+def stack_spec(spec: tuple, stacked: bool) -> tuple:
+    """Prepend a replicated layer axis to a spec for scan-stacked params."""
+    return ((None,) + tuple(spec)) if stacked else tuple(spec)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(F32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(F32)).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-12):
+    dtype = x.dtype
+    x = x.astype(F32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(F32) + bias.astype(F32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta) -> jax.Array:
+    """Rotary embedding.
+
+    x: [B, S, D] or [B, S, H, D]; positions: [B, S]. theta may be a traced
+    scalar (per-layer dual-theta patterns ride through the same scan body).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freq_exponents = jnp.arange(half, dtype=F32) / half
+    inv_freq = jnp.asarray(theta, F32) ** -freq_exponents  # [half]
+    ang = positions.astype(F32)[..., None] * inv_freq  # [B, S, half]
+    if x.ndim == 4:
+        ang = ang[:, :, None, :]  # broadcast over heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def maybe_rope(x, positions, theta, use_rope) -> jax.Array:
+    """Apply rope, selected per-layer by a (possibly traced) bool scalar."""
+    roped = apply_rope(x, positions, theta)
+    return jnp.where(jnp.asarray(use_rope, jnp.bool_), roped, x)
+
+
+# ---------------------------------------------------------------------------
+# Activations / softcap
+# ---------------------------------------------------------------------------
+
+
+def activation(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return jnp.asarray(cap, x.dtype) * jnp.tanh(x / jnp.asarray(cap, x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, cfg, stacked: int = 0, d_in: Optional[int] = None):
+    d_in = d_in or d_model
+    dt = param_dtype(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_gated:
+        params = {
+            "wi_gate": dense_init(ks[0], (d_in, d_ff), dtype=dt, stacked=stacked),
+            "wi_up": dense_init(ks[1], (d_in, d_ff), dtype=dt, stacked=stacked),
+            "wo": dense_init(ks[2], (d_ff, d_in), fan_in=d_ff, dtype=dt, stacked=stacked),
+        }
+        specs = {
+            "wi_gate": stack_spec((FSDP, TP), stacked),
+            "wi_up": stack_spec((FSDP, TP), stacked),
+            "wo": stack_spec((TP, FSDP), stacked),
+        }
+    else:
+        params = {
+            "wi": dense_init(ks[0], (d_in, d_ff), dtype=dt, stacked=stacked),
+            "wo": dense_init(ks[2], (d_ff, d_in), fan_in=d_ff, dtype=dt, stacked=stacked),
+        }
+        specs = {
+            "wi": stack_spec((FSDP, TP), stacked),
+            "wo": stack_spec((TP, FSDP), stacked),
+        }
+    return params, specs
+
+
+def mlp(params, x, cfg):
+    if "wi_gate" in params:
+        h = activation(x @ params["wi_gate"], cfg.act) * (x @ params["wi_up"])
+    else:
+        h = activation(x @ params["wi"], cfg.act)
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, cfg, name_stacked: int = 0):
+    dt = param_dtype(cfg)
+    params = {
+        "table": dense_init(key, (vocab, d_model), fan_in=d_model, dtype=dt, stacked=name_stacked)
+    }
+    specs = {"table": stack_spec((TP, FSDP), name_stacked)}
+    return params, specs
+
+
+def embed(params, tokens, cfg):
+    x = jnp.take(params["table"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed_logits(table: jax.Array, h: jax.Array, cfg) -> jax.Array:
+    logits = jnp.einsum("...d,vd->...v", h.astype(F32), table.astype(F32))
+    return softcap(logits, cfg.final_logit_softcap)
+
+
+def cross_entropy(
+    logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Mean CE over masked positions. logits [..., V] f32, labels int."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(F32)
+    total = jnp.sum(nll * mask)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return total / denom, denom
+
+
+def chunked_ce_loss(table, h, labels, cfg, mask=None):
+    """Sequence-chunked unembed+CE: keeps [tokens, vocab] logits off HBM.
+
+    h: [B, S, D]; labels [B, S]. Scans over S chunks.
+    """
+    B, S, D = h.shape
+    chunk = cfg.loss_chunk
+    if not chunk:
+        logits = unembed_logits(table, h, cfg)
+        return cross_entropy(logits, labels, mask)
+
+    pad = (-S) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(
+            mask if mask is not None else jnp.ones((B, S), F32), ((0, 0), (0, pad))
+        )
+        S = S + pad
+
+    n = S // chunk
+    hs = h.reshape(B, n, chunk, D).swapaxes(0, 1)  # [n, B, chunk, D]
+    ls = labels.reshape(B, n, chunk).swapaxes(0, 1)
+    ms = None if mask is None else mask.reshape(B, n, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        tot, den = carry
+        if ms is None:
+            hc, lc = xs
+            mc = None
+        else:
+            hc, lc, mc = xs
+        logits = unembed_logits(table, hc, cfg)
+        loss, d = cross_entropy(logits, lc, mc)
+        return (tot + loss * d, den + d), None
+
+    xs = (hs, ls) if ms is None else (hs, ls, ms)
+    (tot, den), _ = maybe_scan(
+        body, (jnp.zeros((), F32), jnp.zeros((), F32)), xs, unroll=cfg.unroll
+    )
+    return tot / jnp.maximum(den, 1.0), den

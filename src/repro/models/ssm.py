@@ -1,0 +1,227 @@
+"""Mamba2 / SSD (state-space duality) blocks.
+
+Training/prefill uses the chunked SSD algorithm [arXiv:2405.21060]: the
+sequence is processed in chunks of ``cfg.ssm.chunk_size`` via lax.scan — each
+chunk computes its quadratic intra-chunk term (bounded [L, L] working set,
+the TPU kernel target) and carries the inter-chunk SSM state recurrently.
+All decays are exp of non-positive numbers (A < 0, dt >= 0), so the math is
+stable in f32 without logsumexp gymnastics.
+
+Decode is the O(1) recurrent update on the carried state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import FSDP, TP
+from repro.models.layers import F32, dense_init, ones_init, param_dtype, rms_norm, stack_spec
+
+
+def _conv_dim(cfg) -> int:
+    s = cfg.ssm
+    return cfg.d_inner + 2 * s.ngroups * s.d_state
+
+
+def init_ssm(key, cfg, stacked: int = 0):
+    s = cfg.ssm
+    d, di, H = cfg.d_model, cfg.d_inner, cfg.ssm_heads
+    cdim = _conv_dim(cfg)
+    dt = param_dtype(cfg)
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * di + 2 * s.ngroups * s.d_state + H
+
+    # dt bias: softplus(dt_bias) uniform-ish in [1e-3, 0.1]
+    u = jax.random.uniform(ks[3], ((stacked,) if stacked else ()) + (H,), F32)
+    dt0 = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+
+    a = jax.random.uniform(ks[4], ((stacked,) if stacked else ()) + (H,), F32, 1.0, 16.0)
+    params = {
+        "in_proj": dense_init(ks[0], (d, d_in_proj), dtype=dt, stacked=stacked),
+        "conv_w": dense_init(ks[1], (cdim, s.d_conv), fan_in=s.d_conv, dtype=dt, stacked=stacked),
+        "conv_b": jnp.zeros(((stacked,) if stacked else ()) + (cdim,), dt),
+        "A_log": jnp.log(a),
+        "dt_bias": dt_bias,
+        "D": jnp.ones(((stacked,) if stacked else ()) + (H,), F32),
+        "norm_w": ones_init((di,), dt, stacked),
+        "out_proj": dense_init(ks[2], (di, d), dtype=dt, stacked=stacked),
+    }
+    specs = {
+        "in_proj": stack_spec((FSDP, TP), stacked),
+        "conv_w": stack_spec((TP, None), stacked),
+        "conv_b": stack_spec((TP,), stacked),
+        "A_log": stack_spec((None,), stacked),
+        "dt_bias": stack_spec((None,), stacked),
+        "D": stack_spec((None,), stacked),
+        "norm_w": stack_spec((TP,), stacked),
+        "out_proj": stack_spec((TP, FSDP), stacked),
+    }
+    return params, specs
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    di, H = cfg.d_inner, cfg.ssm_heads
+    gn = s.ngroups * s.d_state
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * gn]
+    dt = zxbcdt[..., 2 * di + 2 * gn :]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv1d. xBC [B,S,C], w [C,W], b [C]."""
+    W = w.shape[-1]
+    xp = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    S = xBC.shape[1]
+    out = sum(xp[:, j : j + S, :] * w[:, j] for j in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _split_xbc(cfg, xBC):
+    s = cfg.ssm
+    di, H, P, G, N = cfg.d_inner, cfg.ssm_heads, s.headdim, s.ngroups, s.d_state
+    B_, S_ = xBC.shape[0], xBC.shape[1]
+    x = xBC[..., :di].reshape(B_, S_, H, P)
+    Bm = xBC[..., di : di + G * N].reshape(B_, S_, G, N)
+    Cm = xBC[..., di + G * N :].reshape(B_, S_, G, N)
+    rep = H // G
+    Bm = jnp.repeat(Bm, rep, axis=2)  # [B,S,H,N]
+    Cm = jnp.repeat(Cm, rep, axis=2)
+    return x, Bm, Cm
+
+
+def _ssd_chunk_scan(x, Bm, Cm, dt, A, D, chunk: int, h0: Optional[jax.Array] = None,
+                    unroll: bool = False):
+    """Chunked SSD. x [B,S,H,P], Bm/Cm [B,S,H,N], dt [B,S,H] (f32, post-softplus).
+
+    Returns y [B,S,H,P] and final state [B,H,P,N].
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        # zero-pad: dt=0 makes padded steps identity (no decay, no state write)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    S_pad = S + pad
+    nc = S_pad // L
+
+    def to_chunks(t):
+        return t.reshape(Bsz, nc, L, *t.shape[2:]).swapaxes(0, 1)  # [nc, B, L, ...]
+
+    out_S = S
+
+    xc, Bc, Cc, dtc = map(to_chunks, (x, Bm, Cm, dt))
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), F32)
+
+    def body(h, inp):
+        x_c, B_c, C_c, dt_c = inp  # [B,L,H,*]
+        dA = dt_c * A  # [B,L,H], <= 0
+        cs = jnp.cumsum(dA, axis=1)  # [B,L,H]
+        # contribution of incoming state
+        y_off = jnp.einsum("blhn,bhpn->blhp", C_c.astype(F32), h) * jnp.exp(cs)[..., None]
+        # intra-chunk quadratic term
+        decay = jnp.exp(cs[:, :, None, :] - cs[:, None, :, :])  # [B, l, s, H]
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        scores = jnp.einsum("blhn,bshn->blsh", C_c.astype(F32), B_c.astype(F32))
+        scores = scores * decay * dt_c[:, None, :, :]
+        scores = jnp.where(mask[None, :, :, None], scores, 0.0)
+        y_diag = jnp.einsum("blsh,bshp->blhp", scores, x_c.astype(F32))
+        # state update
+        last = cs[:, -1, :]  # [B,H]
+        sdecay = jnp.exp(last[:, None, :] - cs) * dt_c  # [B,L,H]
+        h_new = h * jnp.exp(last)[:, :, None, None] + jnp.einsum(
+            "blhn,blhp,blh->bhpn", B_c.astype(F32), x_c.astype(F32), sdecay
+        )
+        y = y_off + y_diag + D[None, None, :, None] * x_c.astype(F32)
+        return h_new, y
+
+    from repro.models.layers import maybe_scan
+
+    h_final, ys = maybe_scan(body, h0, (xc, Bc, Cc, dtc), unroll=unroll)
+    y = ys.swapaxes(0, 1).reshape(Bsz, S_pad, H, P)[:, :out_S]
+    return y.astype(x.dtype), h_final
+
+
+def ssm_block(
+    params,
+    cfg,
+    xin: jax.Array,  # [B, S, d_model]
+    *,
+    cache: Optional[dict] = None,
+    decode: bool = False,
+) -> Tuple[jax.Array, Optional[dict]]:
+    s = cfg.ssm
+    H, P = cfg.ssm_heads, s.headdim
+    zxbcdt = xin @ params["in_proj"]
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    A = -jnp.exp(params["A_log"].astype(F32))  # [H]
+
+    if not decode:
+        xBC_raw = xBC  # pre-conv inputs; tail becomes the decode conv state
+        xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+        x, Bm, Cm = _split_xbc(cfg, xBC)
+        dt = jax.nn.softplus(dt_raw.astype(F32) + params["dt_bias"].astype(F32))
+        y, h_final = _ssd_chunk_scan(
+            x, Bm, Cm, dt, A, params["D"].astype(F32), s.chunk_size, unroll=cfg.unroll
+        )
+        new_cache = None
+        if cache is not None:
+            W = s.d_conv
+            tail = xBC_raw[:, -(W - 1) :, :]
+            pad = (W - 1) - tail.shape[1]
+            if pad > 0:
+                tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+            new_cache = {
+                "conv": tail.astype(cache["conv"].dtype),
+                "ssm": h_final.astype(cache["ssm"].dtype),
+            }
+    else:
+        # single-token recurrent update; xin [B, 1, d]
+        W = s.d_conv
+        xBC_new = xBC[:, 0]  # [B, cdim] pre-conv
+        window = jnp.concatenate([cache["conv"].astype(xBC_new.dtype), xBC_new[:, None]], axis=1)
+        conv_out = jnp.einsum("bwc,cw->bc", window.astype(F32), params["conv_w"].astype(F32))
+        xBC_t = jax.nn.silu(conv_out + params["conv_b"].astype(F32)).astype(xin.dtype)
+        x, Bm, Cm = _split_xbc(cfg, xBC_t[:, None])
+        x, Bm, Cm = x[:, 0], Bm[:, 0], Cm[:, 0]  # [B,H,P], [B,H,N]
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(F32) + params["dt_bias"].astype(F32))  # [B,H]
+        h = cache["ssm"].astype(F32)  # [B,H,P,N]
+        dA = jnp.exp(dt * A)  # [B,H]
+        h = h * dA[:, :, None, None] + jnp.einsum("bhn,bhp,bh->bhpn", Bm.astype(F32), x.astype(F32), dt)
+        y = jnp.einsum("bhn,bhpn->bhp", Cm.astype(F32), h)
+        y = y + params["D"].astype(F32)[None, :, None] * x.astype(F32)
+        y = y[:, None].astype(xin.dtype)  # [B,1,H,P]
+        new_cache = {
+            "conv": window[:, 1:].astype(cache["conv"].dtype),
+            "ssm": h.astype(cache["ssm"].dtype),
+        }
+
+    Bsz, S = xin.shape[0], xin.shape[1]
+    y = y.reshape(Bsz, S, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(y.dtype), params["norm_w"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, new_cache
+
+
+def init_ssm_cache(cfg, batch: int):
+    s = cfg.ssm
+    dt = param_dtype(cfg)
+    cache = {
+        "conv": jnp.zeros((batch, s.d_conv - 1, _conv_dim(cfg)), dt),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, s.headdim, s.d_state), F32),
+    }
+    specs = {
+        "conv": (("pod", "data"), None, TP),
+        "ssm": (("pod", "data"), TP, None, None),
+    }
+    return cache, specs

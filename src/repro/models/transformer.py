@@ -1,0 +1,592 @@
+"""Generic decoder stack covering all assigned architecture families.
+
+One scan-over-layers driver serves dense / moe / vlm / audio stacks (local vs
+global vs NoPE layers share parameter shapes; the per-layer pattern rides in
+as scanned scalar arrays). SSM stacks scan Mamba2 blocks; the Zamba2 hybrid
+scans (p mamba blocks + 1 shared attention block) groups.
+
+API (all pure functions of (params, cfg, ...)):
+  init_params(cfg, key)            -> (params, specs)
+  init_cache(cfg, batch, max_seq)  -> (cache, specs)
+  forward(params, cfg, batch)      -> h [B, S, d]   (training path, no cache)
+  loss_fn(params, cfg, batch)      -> (loss, metrics)
+  prefill(params, cfg, batch, cache)        -> (last_logits, cache)
+  decode_step(params, cfg, tokens, pos, cache) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import BATCH, FSDP, TP, constrain
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    F32,
+    chunked_ce_loss,
+    cross_entropy,
+    dense_init,
+    embed as embed_fn,
+    init_embedding,
+    init_mlp,
+    mlp,
+    ones_init,
+    param_dtype,
+    rms_norm,
+    stack_spec,
+    unembed_logits,
+)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer pattern metadata
+# ---------------------------------------------------------------------------
+
+
+def layer_meta(cfg, n: int, offset: int = 0):
+    """(window[n] i32, theta[n] f32, use_rope[n] bool) built from attn_pattern."""
+    kinds = [cfg.attn_pattern[(offset + i) % len(cfg.attn_pattern)] for i in range(n)]
+    window = np.array([cfg.window_size if k == "local" else 0 for k in kinds], np.int32)
+    theta_local = cfg.rope_theta_local or cfg.rope_theta
+    theta = np.array(
+        [theta_local if k == "local" else cfg.rope_theta for k in kinds], np.float32
+    )
+    use_rope = np.array([k != "nope_global" for k in kinds], bool)
+    return jnp.asarray(window), jnp.asarray(theta), jnp.asarray(use_rope)
+
+
+def _tree_index(tree, i):
+    return jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(a, i, keepdims=False), tree)
+
+
+def _checkpointed(body, cfg):
+    """Remat policy: 'full' recomputes everything in backward; 'dots' saves
+    matmul outputs (no attention/FFN recompute) — trades HBM for FLOPs."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(body)
+
+
+# ---------------------------------------------------------------------------
+# Attention-stack (dense / moe / vlm / audio)
+# ---------------------------------------------------------------------------
+
+
+def _init_attn_stack(key, cfg, n: int, ffn: str, d_ff: Optional[int] = None, d_in: Optional[int] = None):
+    d = d_in or cfg.d_model
+    dt = param_dtype(cfg)
+    k_attn, k_ffn = jax.random.split(key)
+    params: Params = {
+        "ln1": ones_init((d,), dt, n),
+        "ln2": ones_init((d,), dt, n),
+    }
+    specs: Params = {"ln1": (None, FSDP), "ln2": (None, FSDP)}
+    if cfg.post_norms:
+        params["ln1_post"] = ones_init((d,), dt, n)
+        params["ln2_post"] = ones_init((d,), dt, n)
+        specs["ln1_post"] = (None, FSDP)
+        specs["ln2_post"] = (None, FSDP)
+    if cfg.mla is not None:
+        params["attn"], specs["attn"] = attn_mod.init_mla(k_attn, cfg, stacked=n)
+    else:
+        params["attn"], specs["attn"] = attn_mod.init_attn(k_attn, cfg, d_in=d, stacked=n)
+    if ffn == "moe":
+        params["ffn"], specs["ffn"] = moe_mod.init_moe(k_ffn, cfg, stacked=n)
+    else:
+        params["ffn"], specs["ffn"] = init_mlp(k_ffn, d, d_ff or cfg.d_ff, cfg, stacked=n, d_in=d)
+    return params, specs
+
+
+def _attn_block_body(cfg, lp, x, positions, win, theta, rope_flag, cache_l, cache_pos, ffn: str):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a_out, new_cache = attn_mod.mla_attention(
+            lp["attn"], cfg, h, positions, cache=cache_l, cache_positions=cache_pos
+        )
+    else:
+        a_out, new_cache = attn_mod.attention(
+            lp["attn"], cfg, h, positions,
+            window=win, theta=theta, use_rope=rope_flag,
+            cache=cache_l, cache_positions=cache_pos,
+        )
+    if cfg.post_norms:
+        a_out = rms_norm(a_out, lp["ln1_post"], cfg.norm_eps)
+    x = x + a_out
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    metrics = {}
+    if ffn == "moe":
+        f_out, metrics = moe_mod.moe_ffn(lp["ffn"], cfg, h)
+    else:
+        f_out = mlp(lp["ffn"], h, cfg)
+    if cfg.post_norms:
+        f_out = rms_norm(f_out, lp["ln2_post"], cfg.norm_eps)
+    x = x + f_out
+    x = constrain(x, (BATCH, None, None))
+    return x, new_cache, metrics
+
+
+def _run_attn_stack(
+    stack, cfg, x, positions, meta, *, ffn: str,
+    cache=None, cache_pos=None, remat=True,
+):
+    window, theta, use_rope = meta
+
+    # The cache rides in the scan CARRY (sliced/updated per layer index), not
+    # as scanned xs/ys: carried buffers alias in place, halving decode-cell
+    # HBM (xs + stacked ys would hold two full copies of the KV cache).
+    def body(carry, xs):
+        lp, win, th, rp, i = xs
+        if cache is None:
+            x = carry
+            cl = None
+        else:
+            x, cache_buf = carry
+            cl = jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(a, i, keepdims=False), cache_buf)
+        x, new_cache, metrics = _attn_block_body(
+            cfg, lp, x, positions, win, th, rp, cl, cache_pos, ffn
+        )
+        if cache is None:
+            return x, metrics
+        cache_buf = jax.tree.map(
+            lambda full, nc: jax.lax.dynamic_update_index_in_dim(full, nc.astype(full.dtype), i, 0),
+            cache_buf, new_cache,
+        )
+        return (x, cache_buf), metrics
+
+    if remat and cfg.remat:
+        body = _checkpointed(body, cfg)
+
+    n = window.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    xs = (stack, window, theta, use_rope, idx)
+    carry = x if cache is None else (x, cache)
+    if cfg.unroll:
+        ys_list = []
+        for i in range(n):
+            carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+            ys_list.append(y)
+        ys = jax.tree.map(lambda *ls: jnp.stack(ls), *ys_list) if ys_list and ys_list[0] else {}
+    else:
+        carry, ys = jax.lax.scan(body, carry, xs)
+    if cache is None:
+        x, new_cache = carry, None
+    else:
+        x, new_cache = carry
+    metrics = jax.tree.map(jnp.mean, ys) if ys else {}
+    return x, new_cache, metrics
+
+
+# ---------------------------------------------------------------------------
+# SSM stack (mamba2) and hybrid (zamba2)
+# ---------------------------------------------------------------------------
+
+
+def _init_ssm_stack(key, cfg, n: int):
+    dt = param_dtype(cfg)
+    params = {"ln": ones_init((cfg.d_model,), dt, n)}
+    specs = {"ln": (None, FSDP)}
+    params["ssm"], specs["ssm"] = ssm_mod.init_ssm(key, cfg, stacked=n)
+    return params, specs
+
+
+def _run_ssm_stack(stack, cfg, x, *, cache=None, decode=False, remat=True):
+    def body(carry, xs):
+        lp, i = xs
+        if cache is None:
+            x = carry
+            cl = None
+        else:
+            x, cache_buf = carry
+            cl = jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(a, i, keepdims=False), cache_buf)
+        h = rms_norm(x, lp["ln"], cfg.norm_eps)
+        out, new_cache = ssm_mod.ssm_block(lp["ssm"], cfg, h, cache=cl, decode=decode)
+        x = x + out
+        x = constrain(x, (BATCH, None, None))
+        if cache is None:
+            return x, None
+        cache_buf = jax.tree.map(
+            lambda full, nc: jax.lax.dynamic_update_index_in_dim(full, nc.astype(full.dtype), i, 0),
+            cache_buf, new_cache,
+        )
+        return (x, cache_buf), None
+
+    if remat and cfg.remat and not decode:
+        body = _checkpointed(body, cfg)
+    n = jax.tree.leaves(stack)[0].shape[0]
+    xs = (stack, jnp.arange(n, dtype=jnp.int32))
+    carry = x if cache is None else (x, cache)
+    if cfg.unroll:
+        for i in range(n):
+            carry, _ = body(carry, jax.tree.map(lambda a: a[i], xs))
+    else:
+        carry, _ = jax.lax.scan(body, carry, xs)
+    if cache is None:
+        return carry, None
+    return carry
+
+
+def _zamba_groups(cfg) -> Tuple[int, int]:
+    n_groups = cfg.num_layers // cfg.hybrid_period
+    rem = cfg.num_layers % cfg.hybrid_period
+    return n_groups, rem
+
+
+def _init_hybrid(key, cfg):
+    km, ks, kd = jax.random.split(key, 3)
+    params, specs = {}, {}
+    params["mamba"], specs["mamba"] = _init_ssm_stack(km, cfg, cfg.num_layers)
+    nsb = cfg.num_shared_blocks
+    shared, shared_specs = _init_attn_stack(ks, cfg, nsb, ffn="mlp", d_in=2 * cfg.d_model)
+    shared["down"] = dense_init(kd, (2 * cfg.d_model, cfg.d_model), dtype=param_dtype(cfg), stacked=nsb)
+    shared_specs["down"] = (None, FSDP, None)
+    params["shared"], specs["shared"] = shared, shared_specs
+    return params, specs
+
+
+def _shared_block_apply(cfg, sp, x, x0, positions, cache_l, cache_pos):
+    """Zamba2 shared attention block at 2*d_model on concat(x, embed0)."""
+    inp = jnp.concatenate([x, x0], axis=-1)
+    h = rms_norm(inp, sp["ln1"], cfg.norm_eps)
+    a_out, new_cache = attn_mod.attention(
+        sp["attn"], cfg, h, positions,
+        window=jnp.asarray(0, jnp.int32), theta=jnp.asarray(cfg.rope_theta, F32), use_rope=True,
+        cache=cache_l, cache_positions=cache_pos,
+    )
+    r = inp + a_out
+    h2 = rms_norm(r, sp["ln2"], cfg.norm_eps)
+    r = r + mlp(sp["ffn"], h2, cfg)
+    return x + r @ sp["down"], new_cache
+
+
+def _run_hybrid(params, cfg, x, x0, positions, *, cache=None, cache_pos=None, decode=False, remat=True):
+    n_groups, rem = _zamba_groups(cfg)
+    p = cfg.hybrid_period
+    mamba = params["mamba"]
+
+    def slice_layers(tree, start, n):
+        return jax.tree.map(lambda a: a[start : start + n], tree)
+
+    def group_layers(tree):
+        return jax.tree.map(lambda a: a[: n_groups * p].reshape(n_groups, p, *a.shape[1:]), tree)
+
+    grouped = group_layers(mamba)
+    tail = slice_layers(mamba, n_groups * p, rem) if rem else None
+
+    m_cache = cache["mamba"] if cache is not None else None
+    s_cache = cache["shared"] if cache is not None else None
+    g_cache = group_layers(m_cache) if cache is not None else None
+    t_cache = slice_layers(m_cache, n_groups * p, rem) if (cache is not None and rem) else None
+
+    def group_body(carry, xs):
+        x = carry
+        if cache is None:
+            g_idx, g_params = xs
+            gc, sc = None, None
+        else:
+            g_idx, g_params, gc, sc = xs
+        x, new_gc = _run_ssm_stack(g_params, cfg, x, cache=gc, decode=decode, remat=False)
+        sel = jax.lax.rem(g_idx, cfg.num_shared_blocks)
+        sp = _tree_index(params["shared"], sel)
+        x, new_sc = _shared_block_apply(cfg, sp, x, x0, positions, sc, cache_pos)
+        outs = (new_gc, new_sc) if cache is not None else None
+        return x, outs
+
+    if remat and cfg.remat and not decode:
+        group_body = _checkpointed(group_body, cfg)
+
+    g_idx = jnp.arange(n_groups, dtype=jnp.int32)
+    xs = (g_idx, grouped) if cache is None else (g_idx, grouped, g_cache, s_cache)
+    from repro.models.layers import maybe_scan
+
+    x, outs = maybe_scan(group_body, x, xs, unroll=cfg.unroll)
+
+    new_cache = None
+    if cache is not None:
+        new_gc, new_sc = outs
+        new_m = jax.tree.map(lambda a: a.reshape(n_groups * p, *a.shape[2:]), new_gc)
+
+    if rem:
+        x, new_tc = _run_ssm_stack(tail, cfg, x, cache=t_cache, decode=decode, remat=remat)
+        if cache is not None:
+            new_m = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0), new_m, new_tc)
+    if cache is not None:
+        new_cache = {"mamba": new_m, "shared": new_sc}
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Top-level init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg, key) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 8)
+    dt = param_dtype(cfg)
+    params: Params = {}
+    specs: Params = {}
+
+    # --- embeddings --------------------------------------------------------
+    if cfg.modality == "audio":
+        params["embed"] = {
+            "table": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), fan_in=cfg.d_model,
+                                dtype=dt, stacked=cfg.num_codebooks)
+        }
+        specs["embed"] = {"table": (None, TP, FSDP)}
+        params["heads"] = dense_init(ks[1], (cfg.num_codebooks, cfg.d_model, cfg.vocab_size),
+                                     fan_in=cfg.d_model, dtype=dt)
+        specs["heads"] = (None, FSDP, TP)
+    else:
+        params["embed"], specs["embed"] = init_embedding(ks[0], cfg.vocab_size, cfg.d_model, cfg)
+        if not cfg.tie_embeddings:
+            params["unembed"], specs["unembed"] = init_embedding(ks[1], cfg.vocab_size, cfg.d_model, cfg)
+
+    if cfg.modality == "vision":
+        params["projector"] = {
+            "w1": dense_init(ks[2], (cfg.d_frontend, cfg.d_model), dtype=dt),
+            "b1": jnp.zeros((cfg.d_model,), dt),
+            "w2": dense_init(ks[3], (cfg.d_model, cfg.d_model), dtype=dt),
+            "b2": jnp.zeros((cfg.d_model,), dt),
+        }
+        specs["projector"] = {"w1": (None, FSDP), "b1": (None,), "w2": (FSDP, None), "b2": (None,)}
+
+    params["final_norm"] = ones_init((cfg.d_model,), dt)
+    specs["final_norm"] = (FSDP,)
+
+    # --- layer stacks (init helpers already emit layer-stacked specs) --------
+    if cfg.family == "ssm":
+        params["layers"], specs["layers"] = _init_ssm_stack(ks[4], cfg, cfg.num_layers)
+    elif cfg.family == "hybrid":
+        hp, hs = _init_hybrid(ks[4], cfg)
+        params.update(hp)
+        specs.update(hs)
+    elif cfg.moe is not None:
+        fkd = cfg.moe.first_k_dense
+        if fkd:
+            params["dense_layers"], specs["dense_layers"] = _init_attn_stack(
+                ks[4], cfg, fkd, ffn="mlp", d_ff=cfg.moe.d_ff_dense or cfg.d_ff
+            )
+        params["moe_layers"], specs["moe_layers"] = _init_attn_stack(
+            ks[5], cfg, cfg.num_layers - fkd, ffn="moe"
+        )
+        if cfg.mtp_depth:
+            mtp_block, mtp_spec = _init_attn_stack(ks[6], cfg, 1, ffn="moe")
+            params["mtp"] = {
+                "block": mtp_block,
+                "norm1": ones_init((cfg.d_model,), dt),
+                "norm2": ones_init((cfg.d_model,), dt),
+                "proj": dense_init(ks[7], (2 * cfg.d_model, cfg.d_model), dtype=dt),
+            }
+            specs["mtp"] = {
+                "block": mtp_spec,
+                "norm1": (FSDP,),
+                "norm2": (FSDP,),
+                "proj": (FSDP, None),
+            }
+    else:
+        params["layers"], specs["layers"] = _init_attn_stack(ks[4], cfg, cfg.num_layers, ffn="mlp")
+
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+
+def _stack_cache(cache_and_spec, n: int):
+    cache, spec = cache_and_spec
+    cache = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n, *a.shape)), cache)
+    spec = jax.tree.map(lambda s: (None,) + tuple(s), spec, is_leaf=lambda s: isinstance(s, tuple))
+    return cache, spec
+
+
+def init_cache(cfg, batch: int, max_seq: int) -> Tuple[Params, Params]:
+    if cfg.family == "ssm":
+        return _stack_cache(ssm_mod.init_ssm_cache(cfg, batch), cfg.num_layers)
+    if cfg.family == "hybrid":
+        n_groups, _ = _zamba_groups(cfg)
+        mc, ms = _stack_cache(ssm_mod.init_ssm_cache(cfg, batch), cfg.num_layers)
+        sc, ss = _stack_cache(attn_mod.init_attn_cache(cfg, batch, max_seq), n_groups)
+        return {"mamba": mc, "shared": sc}, {"mamba": ms, "shared": ss}
+    if cfg.mla is not None:
+        return _stack_cache(attn_mod.init_mla_cache(cfg, batch, max_seq), cfg.num_layers)
+    return _stack_cache(attn_mod.init_attn_cache(cfg, batch, max_seq), cfg.num_layers)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _embed_input(params, cfg, batch) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+    """Returns (h [B,S,d], positions [B,S], loss_mask or None)."""
+    if cfg.modality == "audio":
+        tokens = batch["tokens"]  # [B, K, S]
+        x = jnp.take(params["embed"]["table"][0], tokens[:, 0], axis=0)
+        for k in range(1, cfg.num_codebooks):
+            x = x + jnp.take(params["embed"]["table"][k], tokens[:, k], axis=0)
+        B, S = tokens.shape[0], tokens.shape[-1]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        return x, pos, None
+    tokens = batch["tokens"]  # [B, S]
+    x = embed_fn(params["embed"], tokens, cfg)
+    if cfg.modality == "vision" and "vision_embeds" in batch:
+        pj = params["projector"]
+        v = batch["vision_embeds"].astype(x.dtype)
+        v = jnp.tanh(v @ pj["w1"] + pj["b1"]) @ pj["w2"] + pj["b2"]
+        x = jnp.concatenate([v, x], axis=1)
+        P = v.shape[1]
+        mask = jnp.concatenate(
+            [jnp.zeros((x.shape[0], P), F32), jnp.ones(tokens.shape, F32)], axis=1
+        )
+    else:
+        mask = None
+    B, S = x.shape[0], x.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return x, pos, mask
+
+
+def _run_stacks(params, cfg, x, positions, *, cache=None, cache_pos=None, decode=False, remat=True):
+    metrics: Dict[str, jax.Array] = {}
+    new_cache = None
+    if cfg.family == "ssm":
+        x, new_cache = _run_ssm_stack(
+            params["layers"], cfg, x, cache=cache, decode=decode, remat=remat
+        )
+    elif cfg.family == "hybrid":
+        x0 = _hybrid_embed0(params, cfg, positions, x)
+        x, new_cache = _run_hybrid(
+            params, cfg, x, x0, positions, cache=cache, cache_pos=cache_pos, decode=decode, remat=remat
+        )
+    elif cfg.moe is not None:
+        fkd = cfg.moe.first_k_dense
+        meta_d = layer_meta(cfg, fkd, 0)
+        meta_m = layer_meta(cfg, cfg.num_layers - fkd, fkd)
+        if cache is not None:
+            c_dense = jax.tree.map(lambda a: a[:fkd], cache) if fkd else None
+            c_moe = jax.tree.map(lambda a: a[fkd:], cache)
+        else:
+            c_dense = c_moe = None
+        if fkd:
+            x, nc_d, _ = _run_attn_stack(
+                params["dense_layers"], cfg, x, positions, meta_d, ffn="mlp",
+                cache=c_dense, cache_pos=cache_pos, remat=remat,
+            )
+        x, nc_m, metrics = _run_attn_stack(
+            params["moe_layers"], cfg, x, positions, meta_m, ffn="moe",
+            cache=c_moe, cache_pos=cache_pos, remat=remat,
+        )
+        if cache is not None:
+            new_cache = (
+                jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0), nc_d, nc_m) if fkd else nc_m
+            )
+    else:
+        meta = layer_meta(cfg, cfg.num_layers, 0)
+        x, new_cache, metrics = _run_attn_stack(
+            params["layers"], cfg, x, positions, meta, ffn="mlp",
+            cache=cache, cache_pos=cache_pos, remat=remat,
+        )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_cache, metrics
+
+
+_HYBRID_EMBED0: Dict[int, jax.Array] = {}
+
+
+def _hybrid_embed0(params, cfg, positions, x):
+    # For zamba the shared blocks consume concat(h, original embedding);
+    # the original embedding is the stack input itself.
+    return x
+
+
+def forward(params, cfg, batch):
+    x, positions, mask = _embed_input(params, cfg, batch)
+    h, _, metrics = _run_stacks(params, cfg, x, positions)
+    return h, positions, mask, metrics
+
+
+def _unembed_table(params, cfg):
+    return params["embed"]["table"] if cfg.tie_embeddings else params["unembed"]["table"]
+
+
+def loss_fn(params, cfg, batch):
+    """Next-token CE (+ MTP auxiliary loss for deepseek-v3)."""
+    h, positions, mask, metrics = forward(params, cfg, batch)
+
+    if cfg.modality == "audio":
+        tokens = batch["tokens"]  # [B,K,S]
+        logits = jnp.einsum("bsd,kdv->bksv", h[:, :-1].astype(F32), params["heads"].astype(F32))
+        loss, _ = cross_entropy(logits, tokens[:, :, 1:])
+        return loss, metrics
+
+    tokens = batch["tokens"]
+    table = _unembed_table(params, cfg)
+    if cfg.modality == "vision" and "vision_embeds" in batch:
+        P = batch["vision_embeds"].shape[1]
+        h_pred = h[:, P - 1 : -1]  # predicts text tokens 0..S-1
+        labels = tokens
+        lmask = None
+    else:
+        h_pred = h[:, :-1]
+        labels = tokens[:, 1:]
+        lmask = None if mask is None else mask[:, 1:]
+    loss, _ = chunked_ce_loss(table, h_pred, labels, cfg, lmask)
+
+    if cfg.mtp_depth and "mtp" in params:
+        mtp = params["mtp"]
+        emb_next = embed_fn(params["embed"], tokens[:, 1:], cfg)
+        h_in = jnp.concatenate(
+            [rms_norm(h[:, :-1], mtp["norm1"], cfg.norm_eps),
+             rms_norm(emb_next, mtp["norm2"], cfg.norm_eps)],
+            axis=-1,
+        ) @ mtp["proj"]
+        meta = layer_meta(cfg, 1, 0)
+        pos = positions[:, : h_in.shape[1]]
+        h_mtp, _, _ = _run_attn_stack(mtp["block"], cfg, h_in, pos, meta, ffn="moe")
+        mtp_loss, _ = chunked_ce_loss(table, h_mtp[:, :-1], tokens[:, 2:], cfg)
+        loss = loss + 0.3 * mtp_loss
+        metrics = dict(metrics, mtp_loss=mtp_loss)
+
+    return loss, metrics
+
+
+def prefill(params, cfg, batch, cache):
+    """Run the prompt through the stack, filling `cache`; return last logits."""
+    x, positions, _ = _embed_input(params, cfg, batch)
+    h, new_cache, _ = _run_stacks(params, cfg, x, positions, cache=cache, remat=False)
+    last = h[:, -1]
+    if cfg.modality == "audio":
+        logits = jnp.einsum("bd,kdv->bkv", last.astype(F32), params["heads"].astype(F32))
+    else:
+        logits = unembed_logits(_unembed_table(params, cfg), last, cfg)
+    return logits, new_cache
+
+
+def decode_step(params, cfg, tokens, pos, cache):
+    """One decode step. tokens: [B,1] (audio: [B,K,1]); pos: [B] int32."""
+    if cfg.modality == "audio":
+        x = jnp.take(params["embed"]["table"][0], tokens[:, 0], axis=0)
+        for k in range(1, cfg.num_codebooks):
+            x = x + jnp.take(params["embed"]["table"][k], tokens[:, k], axis=0)
+    else:
+        x = embed_fn(params["embed"], tokens, cfg)
+    positions = pos[:, None].astype(jnp.int32)
+    h, new_cache, _ = _run_stacks(
+        params, cfg, x, positions, cache=cache, cache_pos=pos.astype(jnp.int32),
+        decode=True, remat=False,
+    )
+    last = h[:, 0]
+    if cfg.modality == "audio":
+        logits = jnp.einsum("bd,kdv->bkv", last.astype(F32), params["heads"].astype(F32))
+    else:
+        logits = unembed_logits(_unembed_table(params, cfg), last, cfg)
+    return logits, new_cache

@@ -1,0 +1,2 @@
+from repro.serving.engine import ServingEngine, ModelBackend  # noqa: F401
+from repro.serving.sampler import sample_tokens  # noqa: F401

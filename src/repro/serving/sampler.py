@@ -1,0 +1,16 @@
+"""Token sampling for the serving engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(logits: jax.Array, key, *, temperature: float = 0.0, top_k: int = 0):
+    """logits [..., V] -> token ids [...]. temperature 0 = greedy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,8 @@
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state  # noqa: F401
+from repro.training.train_loop import (  # noqa: F401
+    TrainState,
+    abstract_train_state,
+    init_train_state,
+    make_eval_step,
+    make_train_step,
+)

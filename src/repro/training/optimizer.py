@@ -1,0 +1,146 @@
+"""Optimizers: AdamW and AdamW with 8-bit block-quantized moments.
+
+The 8-bit variant (blockwise absmax quantization of m and v, per last-axis
+rows) is what lets deepseek-v3-671b train on a 256-chip pod: moments drop
+from 8 bytes/param (f32 m+v) to 2 bytes/param + tiny scales. Moment state is
+sharded exactly like its parameter (FSDP over `data` + TP over `model`), so
+the optimizer update is fully local after the grad reduce-scatter.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class AdamWConfig(NamedTuple):
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    quantized: bool = False  # 8-bit moments
+
+
+# ---------------------------------------------------------------------------
+# 8-bit blockwise quantization (per last-axis row absmax)
+# ---------------------------------------------------------------------------
+
+
+def _quantize(x: jax.Array) -> Dict[str, jax.Array]:
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(F32)}
+
+
+def _dequantize(s: Dict[str, jax.Array]) -> jax.Array:
+    return s["q"].astype(F32) * s["scale"]
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    def one(p):
+        # m and v must be DISTINCT buffers: sharing one zeros array breaks
+        # buffer donation (same buffer donated twice)
+        if cfg.quantized and p.ndim >= 1 and p.shape[-1] >= 8:
+            return {
+                "m": _quantize(jnp.zeros(p.shape, F32)),
+                "v": _quantize(jnp.zeros(p.shape, F32)),
+            }
+        return {"m": jnp.zeros(p.shape, F32), "v": jnp.zeros(p.shape, F32)}
+
+    return jax.tree.map(one, params)
+
+
+def opt_state_specs(param_specs, params, cfg: AdamWConfig, pod_extend: bool = False):
+    """Moment sharding mirrors the parameter sharding (scales drop last axis).
+
+    pod_extend=True additionally shards moments over the `pod` (DCN) axis —
+    cross-pod ZeRO-1: optimizer state is touched once per step, so the DCN
+    gather amortizes, and the per-chip moment footprint halves on 2 pods.
+    """
+
+    def one(spec, p):
+        spec = tuple(spec) if spec is not None else (None,) * p.ndim
+        if pod_extend:
+            spec = tuple(
+                ("pod", "data") if e == "data" else e for e in spec
+            )
+        if cfg.quantized and p.ndim >= 1 and p.shape[-1] >= 8:
+            scale_spec = spec[:-1] + (None,)
+            return {"m": {"q": spec, "scale": scale_spec}, "v": {"q": spec, "scale": scale_spec}}
+        return {"m": spec, "v": spec}
+
+    return jax.tree.map(
+        one, param_specs, params, is_leaf=lambda s: isinstance(s, tuple) or s is None
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    def leaf_normsq(l):
+        if l.ndim >= 3 and l.shape[0] >= 4:
+            # scan the reduction over the stack axis: a full-leaf f32 upcast of
+            # a 100B-param stacked tensor is a multi-GiB materialization
+            def body(acc, sl):
+                return acc + jnp.sum(jnp.square(sl.astype(F32))), None
+
+            acc, _ = jax.lax.scan(body, jnp.zeros((), F32), l)
+            return acc
+        return jnp.sum(jnp.square(l.astype(F32)))
+
+    return jnp.sqrt(sum(leaf_normsq(l) for l in jax.tree.leaves(tree)))
+
+
+def adamw_update(
+    params, grads, opt_state, step: jax.Array, lr: jax.Array, cfg: AdamWConfig
+) -> Tuple[Any, Any, Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) if cfg.clip_norm else 1.0
+    t = step.astype(F32) + 1.0
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def one(p, g, s):
+        g = g.astype(F32) * scale
+        quant = isinstance(s["m"], dict)
+        m = _dequantize(s["m"]) if quant else s["m"]
+        v = _dequantize(s["v"]) if quant else s["v"]
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:  # no decay on norms/bias vectors
+            update = update + cfg.weight_decay * p.astype(F32)
+        new_p = (p.astype(F32) - lr * update).astype(p.dtype)
+        new_s = (
+            {"m": _quantize(m), "v": _quantize(v)} if quant else {"m": m, "v": v}
+        )
+        return new_p, new_s
+
+    def one_leaf(p, g, s):
+        # layer-stacked arrays scan the update over the stack axis so the
+        # (dequantized-f32) working set is one layer slice, not the whole
+        # 100B+-param leaf — without this, deepseek's optimizer transients
+        # alone exceed HBM.
+        if p.ndim >= 3 and p.shape[0] >= 4:
+            def body(_, xs):
+                return None, one(*xs)
+
+            _, (new_p, new_s) = jax.lax.scan(body, None, (p, g, s))
+            return new_p, new_s
+        return one(p, g, s)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(opt_state)
+    out = [one_leaf(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_state = treedef.unflatten([o[1] for o in out])
+    return new_params, new_state, {"grad_norm": gnorm}

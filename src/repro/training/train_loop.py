@@ -1,0 +1,133 @@
+"""Training step factory: grad accumulation + remat + AdamW(+8bit) + metrics.
+
+``make_train_step(cfg)`` builds the jittable (state, batch) -> (state,
+metrics) function the dry-run lowers and train.py drives. Grad accumulation
+scans over microbatches (bounding live activations so 27B..671B configs fit
+HBM with full remat); gradients accumulate in f32 except under the 8-bit
+optimizer where bf16 accumulation keeps the 671B config inside 16 GB/chip
+(recorded approximation, DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.training import schedule as sched
+from repro.training.optimizer import (
+    AdamWConfig,
+    adamw_update,
+    init_opt_state,
+    opt_state_specs,
+)
+
+F32 = jnp.float32
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array  # int32 scalar
+
+
+def init_train_state(cfg, key) -> Tuple[TrainState, Dict[str, Any]]:
+    params, param_specs = T.init_params(cfg, key)
+    opt_cfg = AdamWConfig(quantized=cfg.optimizer == "adamw8bit")
+    opt_state = init_opt_state(params, opt_cfg)
+    specs = TrainState(
+        params=param_specs,
+        opt_state=opt_state_specs(
+            param_specs, params, opt_cfg, pod_extend=getattr(cfg, "opt_pod_sharded", False)
+        ),
+        step=(),
+    )
+    return TrainState(params, opt_state, jnp.zeros((), jnp.int32)), specs
+
+
+def abstract_train_state(cfg, key=None) -> Tuple[TrainState, Dict[str, Any]]:
+    """Shape-only TrainState (no allocation) for dry-run lowering.
+
+    Specs are pure-python (trace-independent), so they are captured via a
+    side channel while eval_shape abstracts the arrays.
+    """
+    key = key if key is not None else jax.random.PRNGKey(0)
+    captured = {}
+
+    def build(k):
+        state, specs = init_train_state(cfg, k)
+        captured["specs"] = specs
+        return state
+
+    shapes = jax.eval_shape(build, key)
+    return shapes, captured["specs"]
+
+
+def _microbatch_grads(cfg, params, batch, accum_dtype):
+    """Scan microbatches, accumulating grads + metrics."""
+    accum = max(cfg.grad_accum, 1)
+    tokens = batch["tokens"]
+    gb = tokens.shape[0]
+    assert gb % accum == 0, (gb, accum)
+    mb = gb // accum
+
+    def reshape(t):
+        return t.reshape(accum, mb, *t.shape[1:])
+
+    mb_batches = jax.tree.map(reshape, batch)
+
+    def loss_of(p, b):
+        loss, metrics = T.loss_fn(p, cfg, b)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    if accum == 1:
+        (loss, metrics), grads = grad_fn(params, batch)
+        return grads, loss, metrics
+
+    def body(carry, mb_batch):
+        g_acc, loss_acc = carry
+        (loss, metrics), g = grad_fn(params, mb_batch)
+        g_acc = jax.tree.map(lambda a, b: a + b.astype(accum_dtype), g_acc, g)
+        return (g_acc, loss_acc + loss), metrics
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+    (grads, loss_sum), metrics = jax.lax.scan(body, (g0, jnp.zeros((), F32)), mb_batches)
+    grads = jax.tree.map(lambda g: (g / accum).astype(accum_dtype), grads)
+    metrics = jax.tree.map(lambda m: m[-1], metrics)
+    return grads, loss_sum / accum, metrics
+
+
+def make_train_step(
+    cfg,
+    *,
+    peak_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10_000,
+    schedule: Callable = sched.warmup_cosine,
+) -> Callable[[TrainState, Dict[str, jax.Array]], Tuple[TrainState, Dict[str, jax.Array]]]:
+    opt_cfg = AdamWConfig(quantized=cfg.optimizer == "adamw8bit")
+    accum_dtype = jnp.bfloat16 if opt_cfg.quantized else F32
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        grads, loss, metrics = _microbatch_grads(cfg, state.params, batch, accum_dtype)
+        lr = schedule(state.step, peak_lr=peak_lr, warmup_steps=warmup_steps,
+                      total_steps=total_steps)
+        new_params, new_opt, opt_metrics = adamw_update(
+            state.params, grads, state.opt_state, state.step, lr, opt_cfg
+        )
+        metrics = dict(metrics, loss=loss, lr=lr, **opt_metrics)
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        loss, metrics = T.loss_fn(params, cfg, batch)
+        return dict(metrics, loss=loss)
+
+    return eval_step

@@ -1,0 +1,12 @@
+import jax
+import pytest
+
+# Tests run on the single host CPU device (the 512-device mesh is exclusively
+# a dryrun.py concern — see launch/dryrun.py which sets XLA_FLAGS first).
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

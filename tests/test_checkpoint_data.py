@@ -1,0 +1,87 @@
+"""Checkpoint format (atomicity, retention, elastic restore) and the
+deterministic data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data.loader import ShardedLoader
+from repro.data.synthetic import markov_token_stream, squad_like_qa
+
+
+def _state(key=0):
+    k = jax.random.PRNGKey(key)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 16)), "b": jnp.zeros((16,))},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    s = _state()
+    save_checkpoint(str(tmp_path), 7, s, extra={"loader": {"seed": 0, "step": 7}})
+    template = jax.tree.map(jnp.zeros_like, s)
+    restored, extra = restore_checkpoint(str(tmp_path), template)
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert extra["loader"]["step"] == 7
+
+
+def test_retention_keeps_last_k(tmp_path):
+    for step in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), step, _state(), keep=2)
+    assert latest_step(str(tmp_path)) == 5
+    kept = sorted(os.listdir(tmp_path))
+    assert len([d for d in kept if d.startswith("step_")]) == 2
+
+
+def test_atomic_commit_never_leaves_partial(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _state())
+    # a stale tmp dir from a crashed save must not confuse restore
+    os.makedirs(tmp_path / "step_00000002.tmp", exist_ok=True)
+    assert latest_step(str(tmp_path)) == 1
+    restore_checkpoint(str(tmp_path), jax.tree.map(jnp.zeros_like, _state()))
+
+
+def test_loader_positional_determinism():
+    a = ShardedLoader(512, 4, 16, seed=3)
+    b = ShardedLoader(512, 4, 16, seed=3, start_step=2)
+    n0, n1, n2 = next(a), next(a), next(a)
+    m2 = next(b)
+    np.testing.assert_array_equal(n2["tokens"], m2["tokens"])
+
+
+def test_loader_sharding_partitions_batch():
+    full = ShardedLoader(512, 8, 16, seed=1)
+    s0 = ShardedLoader(512, 8, 16, seed=1, num_shards=2, shard_index=0)
+    s1 = ShardedLoader(512, 8, 16, seed=1, num_shards=2, shard_index=1)
+    f, a, b = next(full)["tokens"], next(s0)["tokens"], next(s1)["tokens"]
+    np.testing.assert_array_equal(np.concatenate([a, b]), f)
+
+
+def test_markov_stream_has_structure():
+    it = markov_token_stream(256, 4, 64, seed=0)
+    batch = next(it)
+    assert batch.shape == (4, 64)
+    # bigram structure: successor entropy far below uniform
+    succ_counts = {}
+    for row in batch:
+        for a, b in zip(row[:-1], row[1:]):
+            succ_counts.setdefault(int(a), set()).add(int(b))
+    avg_successors = np.mean([len(v) for v in succ_counts.values()])
+    assert avg_successors < 64  # uniform would approach #occurrences
+
+
+def test_squad_like_clusters_share_answers():
+    qa = squad_like_qa(5, 4, seed=0)
+    by_cluster = {}
+    for q, a, cid in qa:
+        by_cluster.setdefault(cid, []).append((q, a))
+    for cid, items in by_cluster.items():
+        qs = [q for q, _ in items]
+        answers = {a for _, a in items}
+        assert len(answers) == 1
+        assert len(set(qs)) == len(qs)  # paraphrases differ textually

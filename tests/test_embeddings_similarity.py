@@ -1,0 +1,90 @@
+"""Embedding models, tokenizer determinism, similarity metrics (+ hypothesis
+properties on the similarity invariants the cache relies on)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import similarity as sim
+from repro.core.embeddings import ContrieverEncoder, NgramHashEmbedder, get_embedder
+from repro.core.tokenizer import HashTokenizer
+from repro.configs.contriever import smoke as contriever_smoke
+
+
+def test_tokenizer_deterministic_across_instances():
+    a, b = HashTokenizer(), HashTokenizer()
+    s = "What is an application-level denial of service attack?"
+    assert a.encode(s) == b.encode(s)
+
+
+def test_tokenizer_batch_padding():
+    tok = HashTokenizer()
+    ids, mask = tok.encode_batch(["short", "a much longer sentence with many words"])
+    assert ids.shape == mask.shape
+    assert mask[0].sum() < mask[1].sum()
+
+
+def test_ngram_embedder_overlap_sensitivity():
+    emb = NgramHashEmbedder()
+    q = "What is an application-level denial of service attack?"
+    para = "Please explain what an application-level denial of service attack is."
+    other = "What is the best recipe for chocolate cake?"
+    v = emb.embed([q, para, other])
+    s_para = float(v[0] @ v[1])
+    s_other = float(v[0] @ v[2])
+    assert s_para > 0.6 > s_other
+
+
+def test_ngram_embedder_unit_norm():
+    emb = NgramHashEmbedder()
+    v = emb.embed(["a", "some longer text here", ""])
+    norms = np.linalg.norm(v, axis=1)
+    assert np.all(norms < 1.0 + 1e-5)
+
+
+def test_contriever_encoder_shapes_and_determinism():
+    enc = ContrieverEncoder(contriever_smoke())
+    v1 = enc.embed(["hello world", "another sentence"])
+    v2 = enc.embed(["hello world", "another sentence"])
+    assert v1.shape == (2, enc.dim)
+    np.testing.assert_allclose(v1, v2, atol=1e-6)
+    np.testing.assert_allclose(np.linalg.norm(v1, axis=1), 1.0, atol=1e-5)
+
+
+def test_registry_unknown_raises():
+    with pytest.raises(KeyError):
+        get_embedder("nonexistent-model")
+
+
+@pytest.mark.parametrize("metric", ["cosine", "dot", "euclidean"])
+def test_metric_self_similarity_maximal(metric):
+    rng = np.random.default_rng(0)
+    db = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    s = sim.scores(db, db[5][None], metric)
+    assert int(jnp.argmax(s[0])) == 5
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_cosine_bounded(seed):
+    rng = np.random.default_rng(seed)
+    db = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(3, 8)).astype(np.float32))
+    s = np.asarray(sim.scores(db, q, "cosine"))
+    assert np.all(s <= 1.0 + 1e-5) and np.all(s >= -1.0 - 1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 8))
+def test_property_topk_sorted_and_valid(seed, k):
+    rng = np.random.default_rng(seed)
+    db = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
+    valid = jnp.asarray(rng.random(32) > 0.3)
+    q = jnp.asarray(rng.normal(size=(2, 8)).astype(np.float32))
+    s, idx = sim.top_k_scores(db, valid, q, k)
+    s = np.asarray(s)
+    assert np.all(np.diff(s, axis=1) <= 1e-6)  # descending
+    finite = np.isfinite(s)
+    v = np.asarray(valid)
+    assert np.all(v[np.asarray(idx)[finite]])  # finite hits only on valid rows

@@ -1,0 +1,99 @@
+"""flash_attention + decode_attention Pallas kernels vs oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+CASES = [
+    # B, S, H, KH, Dh, window, softcap
+    (2, 256, 4, 2, 64, 0, 0.0),
+    (1, 256, 8, 8, 32, 64, 0.0),
+    (2, 512, 4, 1, 64, 128, 50.0),  # MQA + window + softcap (gemma2 shape)
+    (1, 128, 4, 4, 128, 0, 30.0),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_ref(case, dtype):
+    B, S, H, KH, Dh, window, cap = case
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, Dh), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KH, Dh), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KH, Dh), dtype)
+    o1 = flash_attention(q, k, v, window=window, softcap=cap, block_q=64, block_k=64)
+    o2 = flash_attention_ref(q, k, v, window=window, softcap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(o1, np.float32), np.asarray(o2, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("blocks", [(32, 32), (64, 128), (128, 64)])
+def test_flash_block_shape_invariance(blocks):
+    bq, bk = blocks
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 256, 4, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 2, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 256, 2, 32))
+    o1 = flash_attention(q, k, v, block_q=bq, block_k=bk)
+    o2 = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5, rtol=2e-5)
+
+
+DECODE_CASES = [
+    (2, 512, 4, 2, 64, 0, 0.0),
+    (3, 1024, 8, 8, 32, 256, 0.0),
+    (2, 512, 4, 1, 64, 128, 50.0),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_matches_ref(case, dtype):
+    B, S, H, KH, Dh, window, cap = case
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, Dh), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KH, Dh), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KH, Dh), dtype)
+    lengths = jnp.array([max(1, S // (i + 2)) for i in range(B)])
+    o1 = decode_attention(q, k, v, lengths, window=window, softcap=cap, block_s=128)
+    o2 = decode_attention_ref(q, k, v, lengths, window=window, softcap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(o1, np.float32), np.asarray(o2, np.float32), atol=tol, rtol=tol
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.sampled_from([128, 256]),
+    h=st.sampled_from([2, 4]),
+    g=st.sampled_from([1, 2]),
+    window=st.sampled_from([0, 32, 100]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_flash_softmax_rows_normalized(s, h, g, window, seed):
+    """Property: flash output lies in the convex hull of V rows (softmax
+    weights sum to 1) — max |o| <= max |v|."""
+    kh = h // g
+    q = jax.random.normal(jax.random.PRNGKey(seed), (1, s, h, 32))
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, s, kh, 32))
+    v = jax.random.normal(jax.random.PRNGKey(seed + 2), (1, s, kh, 32))
+    o = flash_attention(q, k, v, window=window, block_q=64, block_k=64)
+    assert float(jnp.max(jnp.abs(o))) <= float(jnp.max(jnp.abs(v))) + 1e-4
+
+
+def test_decode_matches_flash_last_row():
+    """Decode over a filled cache == last row of prefill flash attention."""
+    B, S, H, KH, Dh = 2, 256, 4, 2, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, Dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KH, Dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KH, Dh))
+    full = flash_attention(q, k, v, block_q=64, block_k=64)
+    dec = decode_attention(q[:, -1], k, v, jnp.array([S, S]), block_s=64)
+    np.testing.assert_allclose(np.asarray(full[:, -1]), np.asarray(dec), atol=2e-5, rtol=2e-5)

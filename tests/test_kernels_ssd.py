@@ -1,0 +1,84 @@
+"""ssd_scan Pallas kernel vs pure-jnp oracle + recurrence properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+CASES = [
+    # B, S, H, P, N, chunk
+    (2, 256, 4, 32, 64, 64),
+    (1, 128, 8, 64, 32, 32),
+    (2, 192, 2, 16, 16, 64),
+    (1, 64, 4, 64, 128, 64),
+]
+
+
+def _inputs(B, S, H, P, N, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    Bm = jax.random.normal(ks[1], (B, S, H, N)) * 0.5
+    Cm = jax.random.normal(ks[2], (B, S, H, N)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)) - 1.0)
+    A = -jnp.exp(jax.random.normal(ks[4], (H,)) * 0.3)
+    D = jax.random.normal(ks[5], (H,))
+    return x, Bm, Cm, dt, A, D
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matches_ref(case, dtype):
+    B, S, H, P, N, chunk = case
+    x, Bm, Cm, dt, A, D = _inputs(B, S, H, P, N, seed=S)
+    x, Bm, Cm = x.astype(dtype), Bm.astype(dtype), Cm.astype(dtype)
+    y1, st1 = ssd_scan(x, Bm, Cm, dt, A, D, chunk=chunk)
+    y2, st2 = ssd_scan_ref(x, Bm, Cm, dt, A, D, chunk)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y1, np.float32), np.asarray(y2, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(st1), np.asarray(st2), atol=tol, rtol=tol)
+
+
+def test_chunk_size_invariance():
+    """Property: results are independent of the chunk size."""
+    x, Bm, Cm, dt, A, D = _inputs(1, 128, 2, 16, 16)
+    y32, st32 = ssd_scan(x, Bm, Cm, dt, A, D, chunk=32)
+    y128, st128 = ssd_scan(x, Bm, Cm, dt, A, D, chunk=128)
+    np.testing.assert_allclose(np.asarray(y32), np.asarray(y128), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st32), np.asarray(st128), atol=1e-4, rtol=1e-4)
+
+
+def test_matches_naive_recurrence():
+    """Oracle-of-the-oracle: step-by-step SSM recurrence."""
+    B, S, H, P, N = 1, 48, 2, 8, 12
+    x, Bm, Cm, dt, A, D = _inputs(B, S, H, P, N, seed=7)
+    y_k, st_k = ssd_scan(x, Bm, Cm, dt, A, D, chunk=16)
+    h = np.zeros((B, H, P, N), np.float64)
+    xs, Bs, Cs, dts = map(lambda t: np.asarray(t, np.float64), (x, Bm, Cm, dt))
+    An, Dn = np.asarray(A, np.float64), np.asarray(D, np.float64)
+    ys = np.zeros((B, S, H, P))
+    for t in range(S):
+        decay = np.exp(dts[:, t] * An)  # [B,H]
+        h = h * decay[:, :, None, None] + np.einsum(
+            "bhn,bhp,bh->bhpn", Bs[:, t], xs[:, t], dts[:, t]
+        )
+        ys[:, t] = np.einsum("bhn,bhpn->bhp", Cs[:, t], h) + Dn[None, :, None] * xs[:, t]
+    np.testing.assert_allclose(np.asarray(y_k), ys, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_k), h, atol=1e-3, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), s=st.sampled_from([64, 96, 128]))
+def test_property_state_decay_bounded(seed, s):
+    """Property: with A<0 and dt>=0 every decay factor is <= 1, so the final
+    state norm is bounded by the total injected signal."""
+    x, Bm, Cm, dt, A, D = _inputs(1, s, 2, 8, 8, seed=seed % 1000)
+    _, st_f = ssd_scan(x, Bm, Cm, dt, A, D, chunk=32)
+    inject = np.einsum(
+        "bshn,bshp,bsh->bhpn", np.abs(np.asarray(Bm)), np.abs(np.asarray(x)), np.asarray(dt)
+    )
+    assert float(np.max(np.abs(np.asarray(st_f)))) <= float(np.max(inject)) + 1e-3

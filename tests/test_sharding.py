@@ -1,0 +1,55 @@
+"""Sharding-rule unit tests (resolver semantics; mesh-dependent behavior is
+exercised by the dry-run and the sharded-store/MoE integration scripts)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec
+
+from repro.distributed.sharding import is_spec_leaf, resolve_spec
+from repro.launch.mesh import make_test_mesh
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) > 1, reason="single-device resolver semantics"
+)
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self._shape = shape
+
+    @property
+    def axis_names(self):
+        return tuple(self._shape)
+
+    @property
+    def shape(self):
+        return self._shape
+
+
+def test_absent_axes_dropped():
+    mesh = FakeMesh({"data": 4, "model": 2})
+    assert resolve_spec((("pod", "data"), "model"), mesh) == PartitionSpec("data", "model")
+
+
+def test_nondivisible_axis_dropped():
+    mesh = FakeMesh({"data": 4, "model": 16})
+    # 4 kv heads cannot shard over model=16
+    assert resolve_spec((None, "model"), mesh, shape=(8, 4)) == PartitionSpec(None, None)
+    assert resolve_spec((None, "model"), mesh, shape=(8, 32)) == PartitionSpec(None, "model")
+
+
+def test_tuple_axis_partial_keep():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    # batch 4: pod (2) divides, then data would need 32 — dropped
+    assert resolve_spec(
+        ((("pod", "data")), None), mesh, shape=(4, 8)
+    ) == PartitionSpec("pod", None)
+
+
+def test_is_spec_leaf_excludes_namedtuples():
+    from repro.training.train_loop import TrainState
+
+    assert is_spec_leaf(("data", "model"))
+    assert is_spec_leaf(())
+    assert is_spec_leaf(None)
+    assert not is_spec_leaf(TrainState({}, {}, ()))
+    assert not is_spec_leaf({"a": 1})

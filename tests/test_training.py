@@ -1,0 +1,124 @@
+"""Training substrate: optimizer math (incl. 8-bit moments), grad accum
+invariance, schedules, gradient compression, checkpoint format."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.training.grad_compress import compress_with_error_feedback, init_error_state
+from repro.training.optimizer import (
+    AdamWConfig,
+    _dequantize,
+    _quantize,
+    adamw_update,
+    global_norm,
+    init_opt_state,
+)
+from repro.training.schedule import warmup_cosine
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 256)) * 3.0
+    q = _quantize(x)
+    err = jnp.abs(_dequantize(q) - x)
+    per_row_scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    assert bool(jnp.all(err <= per_row_scale * 0.51 + 1e-6))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_quantize_preserves_sign_and_zero(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (8, 32))
+    x = x.at[0, 0].set(0.0)
+    d = _dequantize(_quantize(x))
+    assert float(d[0, 0]) == 0.0
+    big = jnp.abs(x) > jnp.max(jnp.abs(x), -1, keepdims=True) * 0.05
+    assert bool(jnp.all(jnp.where(big, jnp.sign(d) == jnp.sign(x), True)))
+
+
+def _toy_params(key, stacked=False):
+    shape = (8, 16, 32) if stacked else (16, 32)
+    return {"w": jax.random.normal(key, shape) * 0.1}
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+@pytest.mark.parametrize("stacked", [False, True])
+def test_adamw_descends_quadratic(quantized, stacked):
+    cfg = AdamWConfig(quantized=quantized, weight_decay=0.0)
+    params = _toy_params(jax.random.PRNGKey(0), stacked)
+    target = jax.tree.map(lambda p: jnp.ones_like(p), params)
+    opt = init_opt_state(params, cfg)
+
+    def loss(p):
+        return sum(jnp.sum((a - b) ** 2) for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(target)))
+
+    l0 = float(loss(params))
+    step = jnp.zeros((), jnp.int32)
+    for i in range(50):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(params, g, opt, step + i, jnp.asarray(0.05), cfg)
+    assert float(loss(params)) < l0 * 0.2
+
+
+def test_quantized_tracks_fp32_closely():
+    key = jax.random.PRNGKey(1)
+    params = _toy_params(key, stacked=True)
+    target = jax.tree.map(jnp.ones_like, params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target["w"]) ** 2)
+
+    outs = {}
+    for quantized in (False, True):
+        cfg = AdamWConfig(quantized=quantized, weight_decay=0.0)
+        p = jax.tree.map(lambda x: x, params)
+        opt = init_opt_state(p, cfg)
+        for i in range(30):
+            g = jax.grad(loss)(p)
+            p, opt, _ = adamw_update(p, g, opt, jnp.asarray(i), jnp.asarray(0.05), cfg)
+        outs[quantized] = float(loss(p))
+    assert abs(outs[True] - outs[False]) < 0.15 * max(outs[False], 1e-3)
+
+
+def test_grad_accum_matches_full_batch():
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.training.train_loop import _microbatch_grads
+
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab_size)}
+    g1, l1, _ = _microbatch_grads(dataclasses.replace(cfg, grad_accum=1), params, batch, jnp.float32)
+    g4, l4, _ = _microbatch_grads(dataclasses.replace(cfg, grad_accum=4), params, batch, jnp.float32)
+    assert abs(float(l1) - float(l4)) < 0.05
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g4)):
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
+                                   atol=0.02, rtol=0.05)
+
+
+def test_schedule_shape():
+    lrs = [float(warmup_cosine(s, peak_lr=1.0, warmup_steps=10, total_steps=100)) for s in range(100)]
+    assert lrs[0] < 0.11 and abs(lrs[10] - 1.0) < 1e-6
+    assert lrs[99] < 0.2 and all(b <= a + 1e-6 for a, b in zip(lrs[10:], lrs[11:]))
+
+
+def test_grad_compression_error_feedback_unbiased():
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (32, 64))}
+    err = init_error_state(g)
+    total_sent = jnp.zeros_like(g["w"])
+    for _ in range(20):
+        sent, err = compress_with_error_feedback(g, err)
+        total_sent = total_sent + sent["w"]
+    # over many rounds, mean transported gradient -> true gradient
+    np.testing.assert_allclose(np.asarray(total_sent / 20), np.asarray(g["w"]), atol=0.02)
+
+
+def test_global_norm_matches_naive():
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(0), (8, 4, 16)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (32,))}
+    naive = np.sqrt(sum(float(jnp.sum(jnp.square(l))) for l in jax.tree.leaves(tree)))
+    assert abs(float(global_norm(tree)) - naive) < 1e-4
