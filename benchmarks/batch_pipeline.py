@@ -1,0 +1,160 @@
+"""Batched cache pipeline benchmark: per-query latency vs batch size.
+
+Sweeps batch sizes {1, 8, 64, 256} over the same store and compares
+
+  * sequential — B x ``GenerativeCache.lookup``  (one device dispatch each)
+  * batched    — 1 x ``GenerativeCache.lookup_batch`` (one dispatch for all)
+
+plus the embedding stage (per-text ``embed_one`` loop vs one [B, L] jitted
+forward) and the end-to-end client path (``query`` loop vs
+``complete_batch``). Results land in ``BENCH_batch_pipeline.json`` so CI can
+track the speedup per PR.
+
+Run:  PYTHONPATH=src python benchmarks/batch_pipeline.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import emit, time_it  # noqa: E402
+from repro.configs.contriever import smoke as contriever_smoke  # noqa: E402
+from repro.core import (  # noqa: E402
+    EnhancedClient,
+    GenerativeCache,
+    MockLLM,
+    NgramHashEmbedder,
+)
+from repro.core.embeddings import ContrieverEncoder  # noqa: E402
+
+DIM = 256
+
+
+def _unit_rows(rng, n, dim):
+    v = rng.normal(size=(n, dim)).astype(np.float32)
+    return v / np.linalg.norm(v, axis=1, keepdims=True)
+
+
+def _make_cache(n_entries: int, capacity: int, rng) -> GenerativeCache:
+    cache = GenerativeCache(
+        NgramHashEmbedder(DIM), threshold=0.85, t_single=0.45, t_combined=1.0,
+        capacity=capacity, cache_synthesized=False,
+    )
+    for i, v in enumerate(_unit_rows(rng, n_entries, DIM)):
+        cache.insert(f"entry {i}", f"answer {i}", vec=v)
+    return cache
+
+
+def _probe_vecs(rng, cache, b: int) -> np.ndarray:
+    """Half near-duplicates of cached entries (hits), half random (misses)."""
+    entries = np.asarray(cache.store._buf)[: max(b // 2, 1)]
+    near = entries + 0.05 * rng.normal(size=entries.shape).astype(np.float32)
+    probes = np.concatenate([near, _unit_rows(rng, b - len(near), DIM)])[:b]
+    return (probes / np.linalg.norm(probes, axis=1, keepdims=True)).astype(np.float32)
+
+
+def bench_lookup(batch_sizes, n_entries, capacity, repeats) -> dict:
+    rng = np.random.default_rng(0)
+    cache = _make_cache(n_entries, capacity, rng)
+    out = {}
+    for b in batch_sizes:
+        queries = [f"probe {i}" for i in range(b)]
+        vecs = _probe_vecs(rng, cache, b)
+        seq_s = time_it(
+            lambda: [cache.lookup(q, vec=v) for q, v in zip(queries, vecs)],
+            repeats=repeats, warmup=2,
+        )
+        bat_s = time_it(lambda: cache.lookup_batch(queries, vecs=vecs),
+                        repeats=repeats, warmup=2)
+        seq_us, bat_us = seq_s / b * 1e6, bat_s / b * 1e6
+        speedup = seq_us / bat_us if bat_us else float("inf")
+        emit(f"batchpipe_lookup_seq_b{b}", seq_us, f"n={n_entries}")
+        emit(f"batchpipe_lookup_batched_b{b}", bat_us, f"speedup={speedup:.1f}x")
+        out[b] = {"sequential_us_per_query": seq_us,
+                  "batched_us_per_query": bat_us, "speedup": speedup}
+    return out
+
+
+def bench_embed(batch_sizes, repeats) -> dict:
+    enc = ContrieverEncoder(contriever_smoke())
+    out = {}
+    for b in batch_sizes:
+        texts = [f"benchmark query number {i} about topic {i % 7}" for i in range(b)]
+        seq_s = time_it(lambda: [enc.embed_one(t) for t in texts],
+                        repeats=repeats, warmup=2)
+        bat_s = time_it(lambda: enc.embed_batch(texts), repeats=repeats, warmup=2)
+        seq_us, bat_us = seq_s / b * 1e6, bat_s / b * 1e6
+        speedup = seq_us / bat_us if bat_us else float("inf")
+        emit(f"batchpipe_embed_seq_b{b}", seq_us, "contriever-smoke")
+        emit(f"batchpipe_embed_batched_b{b}", bat_us, f"speedup={speedup:.1f}x")
+        out[b] = {"sequential_us_per_query": seq_us,
+                  "batched_us_per_query": bat_us, "speedup": speedup}
+    return out
+
+
+def bench_end_to_end(batch_sizes, n_entries, capacity, repeats) -> dict:
+    out = {}
+    for b in batch_sizes:
+        rng = np.random.default_rng(1)
+
+        def make_client():
+            client = EnhancedClient(cache=_make_cache(n_entries, capacity, rng))
+            client.register_backend(MockLLM("bench-llm"))
+            return client
+
+        prompts = [f"end to end probe {i} topic {i % 5}" for i in range(b)]
+        c_seq, c_bat = make_client(), make_client()
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            for p in prompts:
+                c_seq.query(p)
+        seq_us = (time.perf_counter() - t0) / (repeats * b) * 1e6
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            c_bat.complete_batch(prompts)
+        bat_us = (time.perf_counter() - t0) / (repeats * b) * 1e6
+        speedup = seq_us / bat_us if bat_us else float("inf")
+        emit(f"batchpipe_e2e_seq_b{b}", seq_us, "mock-llm")
+        emit(f"batchpipe_e2e_batched_b{b}", bat_us, f"speedup={speedup:.1f}x")
+        out[b] = {"sequential_us_per_query": seq_us,
+                  "batched_us_per_query": bat_us, "speedup": speedup}
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small CI-sized sweep")
+    ap.add_argument("--out", default="BENCH_batch_pipeline.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        batch_sizes, n_entries, capacity, repeats = [1, 8, 64], 256, 1024, 3
+    else:
+        batch_sizes, n_entries, capacity, repeats = [1, 8, 64, 256], 1024, 4096, 5
+
+    results = {
+        "config": {"batch_sizes": batch_sizes, "n_entries": n_entries,
+                   "capacity": capacity, "repeats": repeats, "smoke": args.smoke},
+        "lookup": bench_lookup(batch_sizes, n_entries, capacity, repeats),
+        "embed": bench_embed(batch_sizes, repeats),
+        "end_to_end": bench_end_to_end(batch_sizes, n_entries, capacity, repeats),
+    }
+    if 64 in results["lookup"]:
+        results["lookup_speedup_at_64"] = results["lookup"][64]["speedup"]
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {args.out}")
+    if "lookup_speedup_at_64" in results:
+        print(f"lookup speedup at batch 64: {results['lookup_speedup_at_64']:.1f}x")
+    return results
+
+
+if __name__ == "__main__":
+    main()

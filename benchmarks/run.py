@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
   hitrate_*   — §3: threshold sweep + generative uplift
   adaptive_*  — §3.1: controller convergence
   serve_*     — end-to-end serving with/without cache (smoke model)
+  batchpipe_* — batched pipeline: per-query latency vs batch size
 """
 from __future__ import annotations
 
@@ -17,6 +18,7 @@ from __future__ import annotations
 def main() -> None:
     from benchmarks import (
         adaptive_bench,
+        batch_pipeline,
         cache_ops,
         embedders,
         gptcache_compare,
@@ -31,6 +33,7 @@ def main() -> None:
     hitrate.main()
     adaptive_bench.main()
     serve_throughput.main()
+    batch_pipeline.main(["--smoke"])
 
 
 if __name__ == "__main__":

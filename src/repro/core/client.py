@@ -47,6 +47,13 @@ class LLMBackend:
     def generate(self, prompt: str, max_tokens: int = 256, temperature: float = 0.0) -> LLMResponse:
         raise NotImplementedError
 
+    def generate_batch(
+        self, prompts: Sequence[str], max_tokens: int = 256, temperature: float = 0.0
+    ) -> List[LLMResponse]:
+        """Serve a batch of prompts. Backends that batch natively (e.g. the
+        continuous-batching engine) override this; the default loops."""
+        return [self.generate(p, max_tokens, temperature) for p in prompts]
+
 
 class MockLLM(LLMBackend):
     """Deterministic offline backend with a configurable latency/price profile."""
@@ -79,6 +86,30 @@ class MockLLM(LLMBackend):
             text, self.name, tokens_in=len(prompt.split()), tokens_out=min(len(words), max_tokens),
             latency_s=time.perf_counter() - t0,
         )
+
+    def generate_batch(
+        self, prompts: Sequence[str], max_tokens: int = 256, temperature: float = 0.0
+    ) -> List[LLMResponse]:
+        # batched endpoint semantics: the batch travels together, so the
+        # simulated RTT is paid once, not once per prompt
+        if self.fail:
+            raise ConnectionError(f"{self.name} unresponsive")
+        t0 = time.perf_counter()
+        if self.latency_s:
+            time.sleep(self.latency_s)
+        out = []
+        for prompt in prompts:
+            self.calls += 1
+            text = self.responder(prompt)
+            words = text.split()
+            if len(words) > max_tokens:
+                text = " ".join(words[:max_tokens])
+            out.append(LLMResponse(
+                text, self.name, tokens_in=len(prompt.split()),
+                tokens_out=min(len(words), max_tokens),
+                latency_s=time.perf_counter() - t0,
+            ))
+        return out
 
 
 @dataclass
@@ -245,6 +276,109 @@ class EnhancedClient:
                 tried.append((name, repr(e)))
                 self.stats.llm_errors += 1
         raise ConnectionError(f"all backends failed: {tried}")
+
+    def _generate_batch_with_failover(
+        self, model, prompts, max_tokens, temperature
+    ) -> List[LLMResponse]:
+        """Batched failover: the whole miss batch moves to the next backend."""
+        tried = []
+        names = [model] + [n for n in self._order if n != model]
+        for name in names:
+            backend = self.backends.get(name)
+            if backend is None:
+                continue
+            try:
+                return backend.generate_batch(prompts, max_tokens, temperature)
+            except Exception as e:  # noqa: BLE001 — failover on any backend error
+                tried.append((name, repr(e)))
+                self.stats.llm_errors += 1
+        raise ConnectionError(f"all backends failed: {tried}")
+
+    # -- batched request path (embed -> search -> synthesize, then one dispatch) --
+
+    def complete_batch(
+        self,
+        prompts: Sequence[str],
+        model: Optional[str] = None,
+        max_tokens: int = 256,
+        temperature: float = 0.0,
+        use_cache: bool = True,
+        force_fresh: bool = False,
+        cache_l1: bool = True,
+        connectivity: float = 1.0,
+    ) -> List[ClientResult]:
+        """Serve B prompts through the batched cache pipeline.
+
+        One embed forward + one store search covers the whole batch; hits and
+        generative hits are answered immediately and the remaining misses fan
+        out to the backend in a single pool submit (backends that batch
+        natively serve them in one continuous-batching pass). Results come
+        back in prompt order.
+        """
+        t0 = time.perf_counter()
+        n = len(prompts)
+        if n == 0:
+            return []
+        if self.hierarchy is not None and use_cache:
+            # no batched multi-level path yet (ROADMAP): fan out per request
+            return self.query_many(prompts, models=[model] * n, max_tokens=max_tokens,
+                                   temperature=temperature, use_cache=use_cache,
+                                   force_fresh=force_fresh, cache_l1=cache_l1,
+                                   connectivity=connectivity)
+        self.stats.requests += n
+        rids = list(range(self._next_id, self._next_id + n))
+        self._next_id += n
+        chosen = self._select_model(model)
+        ctx = {
+            "model_info": self._price(chosen),
+            "max_tokens": max_tokens,
+            "connectivity": connectivity,
+        }
+
+        results: List[Optional[ClientResult]] = [None] * n
+        vecs = None
+        if use_cache and self.cache is not None:
+            vecs = self.cache.embed_batch(list(prompts))
+            if not force_fresh:
+                cache_results = self.cache.lookup_batch(list(prompts), [ctx] * n, vecs=vecs)
+                for i, cr in enumerate(cache_results):
+                    if cr.hit:
+                        self.stats.cache_hits += 1
+                        if self.cost_ctl:
+                            self.cost_ctl.record(0.0, True)
+                        results[i] = ClientResult(
+                            cr.response, True, cr, None, "cache", 0.0,
+                            time.perf_counter() - t0, rids[i],
+                        )
+
+        miss_idx = [i for i in range(n) if results[i] is None]
+        if miss_idx:
+            # one batched dispatch for the whole miss set (async fan-out is a
+            # ROADMAP item; submitting to the shared pool just to block here
+            # would only steal a worker from query_many traffic)
+            resps = self._generate_batch_with_failover(
+                chosen, [prompts[i] for i in miss_idx], max_tokens, temperature
+            )
+            for i, resp in zip(miss_idx, resps):
+                cost = self._cost_of(resp.model, resp)
+                resp.cost_usd = cost
+                self.stats.llm_calls += 1
+                self.stats.total_cost_usd += cost
+                if self.cost_ctl:
+                    self.cost_ctl.record(cost, False)
+                if use_cache and self.cache is not None and cache_l1:
+                    self.cache.insert(prompts[i], resp.text, {"model": resp.model},
+                                      vec=None if vecs is None else vecs[i])
+                results[i] = ClientResult(
+                    resp.text, False, None, resp, resp.model, cost,
+                    time.perf_counter() - t0, rids[i],
+                )
+
+        for r in results:
+            if not r.from_cache:  # match query(): hits don't accrue latency
+                self.stats.total_latency_s += r.latency_s
+            self._results[r.request_id] = r
+        return results  # type: ignore[return-value]
 
     # -- parallel multi-LLM dispatch (§5.2) ---------------------------------------
 

@@ -37,6 +37,17 @@ class EmbeddingModel:
     def embed_one(self, text: str) -> np.ndarray:
         return self.embed([text])[0]
 
+    def embed_batch(self, texts: List[str]) -> np.ndarray:
+        """Batched entry point for the cache pipeline.
+
+        Semantically identical to ``embed``; models whose forward is jitted
+        override/benefit from shape bucketing so one device dispatch covers
+        the whole request batch instead of one per query.
+        """
+        if not texts:
+            return np.zeros((0, self.dim), np.float32)
+        return self.embed(texts)
+
 
 # ---------------------------------------------------------------------------
 # N-gram feature-hash embedder (deterministic, overlap-sensitive)
@@ -141,18 +152,27 @@ class ContrieverEncoder(EmbeddingModel):
         self.params = _init_encoder(cfg, jax.random.PRNGKey(seed))
         self._fwd = jax.jit(lambda p, ids, mask: _encoder_forward(p, cfg, ids, mask))
 
+    @staticmethod
+    def _bucket(n: int, start: int) -> int:
+        b = start
+        while b < n:
+            b *= 2
+        return b
+
     def embed(self, texts: List[str]) -> np.ndarray:
+        if not texts:
+            return np.zeros((0, self.dim), np.float32)
         ids, mask = self.tok.encode_batch(texts)
-        # pad L to a bucket to bound recompilation
-        L = ids.shape[1]
-        bucket = 8
-        while bucket < L:
-            bucket *= 2
-        pad = bucket - L
-        if pad:
-            ids = np.pad(ids, ((0, 0), (0, pad)))
-            mask = np.pad(mask, ((0, 0), (0, pad)))
-        return np.asarray(self._fwd(self.params, ids, mask))
+        # pad both L and B to power-of-two buckets to bound recompilation:
+        # the [B, L] forward then compiles O(log B * log L) variants total and
+        # a request batch of any size rides one jitted dispatch.
+        n, L = ids.shape
+        Lb = self._bucket(L, 8)
+        Bb = self._bucket(n, 1)
+        if (Bb - n) or (Lb - L):
+            ids = np.pad(ids, ((0, Bb - n), (0, Lb - L)))
+            mask = np.pad(mask, ((0, Bb - n), (0, Lb - L)))
+        return np.asarray(self._fwd(self.params, ids, mask))[:n]
 
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,7 @@ semantically similar to Q5 hit directly.
 from __future__ import annotations
 
 import time
-from typing import Callable, Optional
+from typing import Callable, List, Optional
 
 import numpy as np
 
@@ -101,3 +101,67 @@ class GenerativeCache(SemanticCache):
             return CacheResult(True, e.response, s, s, False, [(s, e)], t_s,
                                time.perf_counter() - t_start, "semantic")
         return self._generative_lookup(query, vec, t_s, t_start)
+
+    def lookup_batch(
+        self,
+        queries: List[str],
+        contexts: Optional[List[Optional[dict]]] = None,
+        vecs: Optional[np.ndarray] = None,
+    ) -> List[CacheResult]:
+        """Batched generative lookup: one embed + ONE top-max_sources search.
+
+        Every query is decided against the same store snapshot (the top-1 of
+        the shared candidate set equals the sequential secondary probe, so
+        decisions match B sequential ``lookup`` calls on that snapshot);
+        synthesized answers are inserted after all decisions, so in-batch
+        queries never hit each other's synthesized entries.
+        """
+        t_start = time.perf_counter()
+        n = len(queries)
+        if n == 0:
+            return []
+        contexts = list(contexts) if contexts is not None else [None] * n
+        self.stats.lookups += n
+        thresholds = np.asarray(
+            [self.effective_threshold(q, c) for q, c in zip(queries, contexts)]
+        )
+        if vecs is None:
+            vecs = self.embed_batch(list(queries))
+        t0 = time.perf_counter()
+        matches = self.store.search_batch(np.asarray(vecs), k=max(self.max_sources, 1))
+        self.stats.search_time_s += time.perf_counter() - t0
+
+        per_query_s = (time.perf_counter() - t_start) / n
+        results: List[CacheResult] = []
+        to_insert: List[tuple] = []  # synthesized answers, applied post-batch
+        for i, m in enumerate(matches):
+            t_s = float(thresholds[i])
+            best = m[0][0] if m else -1.0
+            if self.mode == "secondary" and m and best > t_s:
+                s, e = m[0]
+                self.stats.hits += 1
+                results.append(CacheResult(True, e.response, s, s, False, [(s, e)],
+                                           t_s, per_query_s, "semantic"))
+                continue
+            X = [(s, e) for s, e in m if s > self.t_single]
+            combined = float(sum(s for s, _ in X))
+            if X and combined > self.t_combined:
+                if X[0][0] > t_s:
+                    s, e = X[0]
+                    self.stats.hits += 1
+                    results.append(CacheResult(True, e.response, s, combined, False,
+                                               X[:1], t_s, per_query_s, "semantic"))
+                    continue
+                response = synthesis.combine(queries[i], X, self.synthesis_mode, self.summarizer)
+                self.stats.hits += 1
+                self.stats.generative_hits += 1
+                if self.cache_synthesized:
+                    to_insert.append((queries[i], response, np.asarray(vecs[i])))
+                results.append(CacheResult(True, response, best, combined, True, X,
+                                           t_s, per_query_s, "generative"))
+            else:
+                results.append(CacheResult(False, None, best, combined, False, X,
+                                           t_s, per_query_s))
+        for q, r, v in to_insert:
+            self.insert(q, r, {"generative": True}, vec=v)
+        return results

@@ -84,6 +84,13 @@ class SemanticCache:
         self.stats.embed_time_s += time.perf_counter() - t0
         return v
 
+    def embed_batch(self, queries: List[str]) -> np.ndarray:
+        """Embed a request batch in one model forward ([B, L] tokens)."""
+        t0 = time.perf_counter()
+        v = self.embedder.embed_batch(list(queries))
+        self.stats.embed_time_s += time.perf_counter() - t0
+        return v
+
     # -- lookup / insert --------------------------------------------------------
 
     def lookup(
@@ -108,6 +115,53 @@ class SemanticCache:
         return CacheResult(
             False, None, best, best, False, matches[:1], t_s, time.perf_counter() - t_start
         )
+
+    def lookup_batch(
+        self,
+        queries: List[str],
+        contexts: Optional[List[Optional[dict]]] = None,
+        vecs: Optional[np.ndarray] = None,
+    ) -> List[CacheResult]:
+        """Batched lookup: one embed forward + one store search for B queries.
+
+        Decision-identical to B sequential ``lookup`` calls against the same
+        store snapshot (per-query effective thresholds applied vectorized);
+        store contents are not mutated, so results do not depend on the order
+        of queries within the batch.
+        """
+        t_start = time.perf_counter()
+        n = len(queries)
+        if n == 0:
+            return []
+        contexts = list(contexts) if contexts is not None else [None] * n
+        self.stats.lookups += n
+        thresholds = np.asarray(
+            [self.effective_threshold(q, c) for q, c in zip(queries, contexts)]
+        )
+        if vecs is None:
+            vecs = self.embed_batch(list(queries))
+        t0 = time.perf_counter()
+        matches = self.store.search_batch(np.asarray(vecs), k=1)
+        self.stats.search_time_s += time.perf_counter() - t0
+        best = np.asarray([m[0][0] if m else -1.0 for m in matches])
+        hit_mask = best > thresholds
+        per_query_s = (time.perf_counter() - t_start) / n
+        results: List[CacheResult] = []
+        for i in range(n):
+            t_s = float(thresholds[i])
+            if hit_mask[i]:
+                score, entry = matches[i][0]
+                self.stats.hits += 1
+                results.append(
+                    CacheResult(True, entry.response, score, score, False,
+                                [(score, entry)], t_s, per_query_s, "semantic")
+                )
+            else:
+                b = float(best[i])
+                results.append(
+                    CacheResult(False, None, b, b, False, matches[i][:1], t_s, per_query_s)
+                )
+        return results
 
     def insert(
         self,

@@ -55,8 +55,11 @@ class InMemoryVectorStore:
         self._access_count = np.zeros((capacity,), np.int64)
         self._insert_seq = np.zeros((capacity,), np.int64)
         self._seq = 0
-        self.size = 0
+        self.size = 0  # live entries
         self._next_key = 0
+        self._key_to_slot: Dict[int, int] = {}
+        self._free: List[int] = []  # slots freed by remove(), reused before eviction
+        self._tail = 0  # slots ever occupied; grows monotonically to capacity
 
         self._add_fn = jax.jit(
             lambda buf, valid, vec, idx: (buf.at[idx].set(vec), valid.at[idx].set(True)),
@@ -67,8 +70,11 @@ class InMemoryVectorStore:
     # -- internals ----------------------------------------------------------
 
     def _victim(self) -> int:
-        if self.size < self.capacity:
-            return self.size
+        if self._free:
+            return self._free.pop()
+        if self._tail < self.capacity:
+            return self._tail
+        # every slot holds a live entry: evict per policy
         if self.eviction == "fifo":
             return int(np.argmin(self._insert_seq))
         if self.eviction == "lfu":
@@ -96,40 +102,29 @@ class InMemoryVectorStore:
 
     def add(self, vec: np.ndarray, query: str, response: str, meta: Optional[dict] = None) -> int:
         idx = self._victim()
+        evicted = self._entries[idx]
+        if evicted is not None:
+            self._key_to_slot.pop(evicted.key, None)
+            self.size -= 1
+        if idx == self._tail:
+            self._tail += 1
         self._buf, self._valid = self._add_fn(
             self._buf, self._valid, jnp.asarray(vec, jnp.float32), idx
         )
         key = self._next_key
         self._next_key += 1
         self._entries[idx] = Entry(key, query, response, dict(meta or {}))
+        self._key_to_slot[key] = idx
         now = time.monotonic()
         self._last_access[idx] = now
         self._access_count[idx] = 0
         self._insert_seq[idx] = self._seq
         self._seq += 1
-        self.size = min(self.size + 1, self.capacity)
+        self.size += 1
         return key
 
     def search(self, q_vec: np.ndarray, k: int = 4) -> List[Tuple[float, Entry]]:
-        if self.size == 0:
-            return []
-        k_eff = min(k, self.capacity)
-        q = jnp.asarray(q_vec, jnp.float32)[None]
-        s, idx = self._search_fn(k_eff)(self._buf, self._valid, q)
-        s = np.asarray(s[0])
-        idx = np.asarray(idx[0])
-        out = []
-        now = time.monotonic()
-        for score, i in zip(s, idx):
-            if not np.isfinite(score):
-                continue
-            e = self._entries[int(i)]
-            if e is None:
-                continue
-            self._last_access[int(i)] = now
-            self._access_count[int(i)] += 1
-            out.append((float(score), e))
-        return out
+        return self.search_batch(np.asarray(q_vec)[None], k)[0]
 
     def search_batch(self, q_vecs: np.ndarray, k: int = 4) -> List[List[Tuple[float, Entry]]]:
         if self.size == 0:
@@ -137,25 +132,34 @@ class InMemoryVectorStore:
         k_eff = min(k, self.capacity)
         s, idx = self._search_fn(k_eff)(self._buf, self._valid, jnp.asarray(q_vecs, jnp.float32))
         s, idx = np.asarray(s), np.asarray(idx)
-        return [
-            [
-                (float(sc), self._entries[int(i)])
-                for sc, i in zip(srow, irow)
-                if np.isfinite(sc) and self._entries[int(i)] is not None
-            ]
-            for srow, irow in zip(s, idx)
-        ]
+        now = time.monotonic()
+        out: List[List[Tuple[float, Entry]]] = []
+        for srow, irow in zip(s, idx):
+            row = []
+            for sc, i in zip(srow, irow):
+                e = self._entries[int(i)]
+                if not np.isfinite(sc) or e is None:
+                    continue
+                # same recency/frequency bookkeeping as the single-query path,
+                # so eviction behaves identically under batched lookups
+                self._last_access[int(i)] = now
+                self._access_count[int(i)] += 1
+                row.append((float(sc), e))
+            out.append(row)
+        return out
 
     def remove(self, key: int) -> bool:
-        for idx, e in enumerate(self._entries):
-            if e is not None and e.key == key:
-                self._entries[idx] = None
-                self._valid = self._valid.at[idx].set(False)
-                return True
-        return False
+        idx = self._key_to_slot.pop(key, None)
+        if idx is None:
+            return False
+        self._entries[idx] = None
+        self._valid = self._valid.at[idx].set(False)
+        self._free.append(idx)
+        self.size -= 1
+        return True
 
     def __len__(self) -> int:
-        return sum(1 for e in self._entries[: self.size] if e is not None)
+        return self.size
 
     # -- persistence (fault tolerance / warm start) ---------------------------
 
@@ -175,6 +179,7 @@ class InMemoryVectorStore:
             "metric": self.metric,
             "eviction": self.eviction,
             "size": self.size,
+            "tail": self._tail,
             "next_key": self._next_key,
             "seq": self._seq,
             "entries": [
@@ -205,4 +210,9 @@ class InMemoryVectorStore:
             None if e is None else Entry(e["key"], e["query"], e["response"], e.get("meta", {}))
             for e in m["entries"]
         ]
+        store._tail = m.get("tail", m["size"])
+        store._key_to_slot = {
+            e.key: i for i, e in enumerate(store._entries) if e is not None
+        }
+        store._free = [i for i in range(store._tail) if store._entries[i] is None]
         return store

@@ -61,7 +61,7 @@ def make_sharded_lookup(mesh, *, k: int, metric: str = "cosine", hierarchical: b
         mul = 1
         for a in reversed(axes):
             shard_id = shard_id + jax.lax.axis_index(a) * mul
-            mul = mul * jax.lax.axis_size(a)
+            mul = mul * mesh.shape[a]  # static axis size (jax.lax.axis_size needs jax>=0.5)
         top_i = top_i + shard_id * cap_local
         if hierarchical:
             # hierarchical candidate exchange: gather k per shard over the
@@ -150,3 +150,36 @@ class ShardedVectorStore:
     def search(self, q_vecs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         s, i = self._lookup(self._db, self._valid, jnp.asarray(q_vecs, jnp.float32))
         return np.asarray(s), np.asarray(i)
+
+    def search_batch(self, q_vecs: np.ndarray) -> List[List[Tuple[float, tuple]]]:
+        """Batched payload-joined lookup for Q queries in ONE shard_map dot.
+
+        The replicated [Q, D] query block rides the same per-shard MXU matmul
+        and hierarchical candidate exchange as a single query — only the
+        all-gathered [Q, k] candidate sets grow with Q. Returns, per query,
+        the finite (score, (query, response)) candidates in score order, i.e.
+        the same join ``InMemoryVectorStore.search_batch`` performs.
+        """
+        q = np.atleast_2d(np.asarray(q_vecs, np.float32))
+        s, idx = self.search(q)
+        out: List[List[Tuple[float, tuple]]] = []
+        for srow, irow in zip(s, idx):
+            row = []
+            for sc, i in zip(srow, irow):
+                payload = self.payloads[int(i)] if 0 <= int(i) < self.capacity else None
+                if np.isfinite(sc) and payload is not None:
+                    row.append((float(sc), payload))
+            out.append(row)
+        return out
+
+    def lookup_batch(
+        self, q_vecs: np.ndarray, thresholds
+    ) -> List[Optional[Tuple[float, tuple]]]:
+        """Apply per-query thresholds vectorized over the batched search:
+        returns the best (score, payload) when score > threshold, else None."""
+        q = np.atleast_2d(np.asarray(q_vecs, np.float32))
+        thr = np.broadcast_to(np.asarray(thresholds, np.float32), (q.shape[0],))
+        rows = self.search_batch(q)
+        best = np.asarray([r[0][0] if r else -np.inf for r in rows])
+        hit = best > thr
+        return [rows[i][0] if hit[i] else None for i in range(q.shape[0])]

@@ -4,18 +4,26 @@ Runs batched requests (paraphrase-clustered synthetic queries) through the
 full stack — embed -> semantic/generative lookup -> miss -> continuous-
 batching engine -> insert — and prints hit-rate / latency / cost stats.
 
+With ``--coalesce`` the driver simulates concurrent users: requests arrive
+from a thread pool and the BatchCoalescer micro-batches them into
+``EnhancedClient.complete_batch`` calls, so one embed forward + one store
+search + one engine pass covers each admitted batch.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --requests 40
+  PYTHONPATH=src python -m repro.launch.serve --coalesce --coalesce-batch 8
 """
 from __future__ import annotations
 
 import argparse
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 from repro.configs import get_config
 from repro.core import EnhancedClient, GenerativeCache, NgramHashEmbedder
 from repro.core.adaptive import ModelCostInfo
 from repro.data.synthetic import squad_like_qa
+from repro.serving.coalescer import BatchCoalescer
 from repro.serving.engine import ModelBackend, ServingEngine
 
 
@@ -26,6 +34,12 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--threshold", type=float, default=0.6)
+    ap.add_argument("--coalesce", action="store_true",
+                    help="serve concurrent requests through the batched pipeline")
+    ap.add_argument("--coalesce-batch", type=int, default=8)
+    ap.add_argument("--max-wait-ms", type=float, default=4.0)
+    ap.add_argument("--concurrency", type=int, default=16,
+                    help="simulated concurrent users (--coalesce only)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=True)
@@ -42,12 +56,23 @@ def main(argv=None):
     queries = [q for q, _, _ in qa][: args.requests]
 
     t0 = time.perf_counter()
-    hits = 0
-    for i, q in enumerate(queries):
-        r = client.query(q, max_tokens=args.max_new_tokens)
-        hits += r.from_cache
-        tag = "HIT " if r.from_cache else "MISS"
-        print(f"[{i:3d}] {tag} {r.latency_s*1e3:7.1f} ms  {q[:60]}")
+    if args.coalesce:
+        coalescer = BatchCoalescer(
+            lambda prompts: client.complete_batch(prompts, max_tokens=args.max_new_tokens),
+            max_batch=args.coalesce_batch, max_wait_ms=args.max_wait_ms,
+        )
+        with coalescer, ThreadPoolExecutor(max_workers=args.concurrency) as users:
+            results = list(users.map(coalescer, queries))
+        for i, (q, r) in enumerate(zip(queries, results)):
+            tag = "HIT " if r.from_cache else "MISS"
+            print(f"[{i:3d}] {tag} {r.latency_s*1e3:7.1f} ms  {q[:60]}")
+        cst = coalescer.stats
+        print(f"coalescer: batches={cst.batches} avg_batch={cst.avg_batch:.1f}")
+    else:
+        for i, q in enumerate(queries):
+            r = client.query(q, max_tokens=args.max_new_tokens)
+            tag = "HIT " if r.from_cache else "MISS"
+            print(f"[{i:3d}] {tag} {r.latency_s*1e3:7.1f} ms  {q[:60]}")
     wall = time.perf_counter() - t0
 
     s = client.stats

@@ -1,2 +1,3 @@
+from repro.serving.coalescer import BatchCoalescer, CoalescerStats  # noqa: F401
 from repro.serving.engine import ServingEngine, ModelBackend  # noqa: F401
 from repro.serving.sampler import sample_tokens  # noqa: F401

@@ -1,0 +1,142 @@
+"""Micro-batching request coalescer (serving front door for the cache).
+
+Concurrent callers submit single prompts; a collector thread drains the
+bounded queue into batches of up to ``max_batch`` requests, waiting at most
+``max_wait_ms`` after the first arrival so a lone request is never stalled
+behind an empty batch. Each batch is handed to one ``handler`` call (e.g.
+``EnhancedClient.complete_batch``), which amortizes the embed forward, the
+device search dispatch, and the backend fan-out across every rider — the
+SCALM/MeanCache observation that semantic-cache wins only materialize when
+lookup overhead is shared across concurrent users.
+
+Futures-based: ``submit`` returns a ``concurrent.futures.Future`` resolved
+with that prompt's element of the handler's returned list (or its exception).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Sequence
+
+
+@dataclass
+class CoalescerStats:
+    submitted: int = 0
+    batches: int = 0
+    batched_items: int = 0
+    rejected: int = 0  # queue-full rejections (bounded admission)
+    batch_sizes: List[int] = field(default_factory=list)
+
+    @property
+    def avg_batch(self) -> float:
+        return self.batched_items / self.batches if self.batches else 0.0
+
+
+class BatchCoalescer:
+    """Bounded-queue micro-batcher in front of a batch handler.
+
+    Knobs:
+      max_batch    — largest batch handed to the handler in one call
+      max_wait_ms  — how long the collector holds an open batch for riders
+      max_queue    — admission bound; ``submit`` raises queue.Full beyond it
+    """
+
+    def __init__(
+        self,
+        handler: Callable[[List[Any]], Sequence[Any]],
+        *,
+        max_batch: int = 8,
+        max_wait_ms: float = 2.0,
+        max_queue: int = 1024,
+    ):
+        assert max_batch >= 1
+        self.handler = handler
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_ms / 1e3
+        self.stats = CoalescerStats()
+        self._q: "queue.Queue" = queue.Queue(maxsize=max_queue)
+        self._closed = False
+        # serializes submit() against close(): a submit that passed the
+        # closed-check has enqueued before close() flips the flag, so the
+        # collector's (closed and empty) exit condition can't strand it
+        self._lifecycle = threading.Lock()
+        self._thread = threading.Thread(target=self._collect, daemon=True)
+        self._thread.start()
+
+    # -- client side -----------------------------------------------------------
+
+    def submit(self, item: Any) -> "Future":
+        with self._lifecycle:
+            if self._closed:
+                raise RuntimeError("coalescer is closed")
+            fut: Future = Future()
+            try:
+                self._q.put_nowait((item, fut))  # raises queue.Full when over max_queue
+            except queue.Full:
+                self.stats.rejected += 1
+                raise
+            self.stats.submitted += 1
+            return fut
+
+    def __call__(self, item: Any) -> Any:
+        """Blocking convenience wrapper: submit and wait for the answer."""
+        return self.submit(item).result()
+
+    # -- collector -------------------------------------------------------------
+
+    def _drain_batch(self) -> List[tuple]:
+        """Block for the first request, then ride out max_wait_ms / max_batch."""
+        try:
+            first = self._q.get(timeout=0.05)
+        except queue.Empty:
+            return []
+        batch = [first]
+        deadline = time.perf_counter() + self.max_wait_s
+        while len(batch) < self.max_batch:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                break
+            try:
+                batch.append(self._q.get(timeout=remaining))
+            except queue.Empty:
+                break
+        return batch
+
+    def _collect(self) -> None:
+        while not (self._closed and self._q.empty()):
+            batch = self._drain_batch()
+            if not batch:
+                continue
+            items = [it for it, _ in batch]
+            futs = [f for _, f in batch]
+            self.stats.batches += 1
+            self.stats.batched_items += len(batch)
+            self.stats.batch_sizes.append(len(batch))
+            try:
+                outs = self.handler(items)
+                if len(outs) != len(items):
+                    raise RuntimeError(
+                        f"handler returned {len(outs)} results for {len(items)} items"
+                    )
+            except Exception as e:  # noqa: BLE001 — propagate to every rider
+                for f in futs:
+                    f.set_exception(e)
+                continue
+            for f, out in zip(futs, outs):
+                f.set_result(out)
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def close(self, timeout: Optional[float] = 10.0) -> None:
+        with self._lifecycle:
+            self._closed = True
+        self._thread.join(timeout=timeout)
+
+    def __enter__(self) -> "BatchCoalescer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -204,13 +204,22 @@ class ModelBackend(LLMBackend):
         return np.asarray(ids, np.int32)
 
     def generate(self, prompt: str, max_tokens: int = 32, temperature: float = 0.0) -> LLMResponse:
+        return self.generate_batch([prompt], max_tokens, temperature)[0]
+
+    def generate_batch(
+        self, prompts: List[str], max_tokens: int = 32, temperature: float = 0.0
+    ) -> List[LLMResponse]:
+        """Serve the whole miss batch in ONE continuous-batching pass: all
+        prompts are submitted up front, so the engine keeps its decode slots
+        full instead of draining one request at a time."""
         t0 = time.perf_counter()
-        toks = self._tokenize(prompt)
         if self.engine.cfg.modality == "audio":
             raise NotImplementedError("audio backends serve token streams, not text prompts")
-        out = self.engine.generate([toks], max_new_tokens=max_tokens, temperature=temperature)[0]
-        text = " ".join(f"t{t}" for t in out)
-        return LLMResponse(
-            text, self.name, tokens_in=len(toks), tokens_out=len(out),
-            latency_s=time.perf_counter() - t0,
-        )
+        toks = [self._tokenize(p) for p in prompts]
+        outs = self.engine.generate(toks, max_new_tokens=max_tokens, temperature=temperature)
+        latency = time.perf_counter() - t0
+        return [
+            LLMResponse(" ".join(f"t{t}" for t in out), self.name,
+                        tokens_in=len(tk), tokens_out=len(out), latency_s=latency)
+            for tk, out in zip(toks, outs)
+        ]

@@ -1,0 +1,87 @@
+"""Optional-hypothesis shim.
+
+The property tests use a small slice of the hypothesis API (``given``,
+``settings``, ``st.integers``, ``st.sampled_from``). When hypothesis is
+installed we re-export the real thing; on a bare interpreter we fall back to
+a deterministic fixed-example runner so the tier-1 suite still collects and
+exercises every property with a handful of seeded examples.
+
+Usage in test modules (replaces ``from hypothesis import ...``):
+
+    from _compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    # examples per property when running without hypothesis; small enough to
+    # keep the suite fast, large enough to exercise the invariant.
+    _FALLBACK_EXAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def sample(self, rng: random.Random):
+            return self._draw(rng)
+
+        # strategy combinators used by hypothesis idiom `.map(...)` etc. are
+        # intentionally unsupported: the suite only needs plain draws.
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            pool = list(elements)
+            return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    st = _Strategies()
+
+    def settings(max_examples=None, deadline=None, **_kw):  # noqa: ARG001
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                declared = getattr(wrapper, "_compat_max_examples", None)
+                n = min(declared or _FALLBACK_EXAMPLES, _FALLBACK_EXAMPLES)
+                rng = random.Random(0xC0FFEE)
+                for _ in range(n):
+                    drawn = {name: s.sample(rng) for name, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # pytest resolves fixtures from the (followed) signature; hide the
+            # strategy-drawn parameters so they are not mistaken for fixtures.
+            sig = inspect.signature(fn)
+            remaining = [p for name, p in sig.parameters.items() if name not in strategies]
+            wrapper.__signature__ = sig.replace(parameters=remaining)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

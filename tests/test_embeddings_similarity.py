@@ -3,8 +3,7 @@ properties on the similarity invariants the cache relies on)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _compat import given, settings, st
 
 from repro.core import similarity as sim
 from repro.core.embeddings import ContrieverEncoder, NgramHashEmbedder, get_embedder

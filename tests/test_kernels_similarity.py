@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _compat import given, settings, st
 
 from repro.kernels.similarity_topk.ops import similarity_topk
 from repro.kernels.similarity_topk.ref import similarity_topk_ref

@@ -1,0 +1,142 @@
+"""InMemoryVectorStore slot management: all three eviction policies under
+wraparound, O(1) remove via the key->slot map, and freed-slot reuse (a removed
+slot must be recycled before any live entry is evicted)."""
+import numpy as np
+import pytest
+
+from repro.core.vector_store import InMemoryVectorStore
+
+DIM = 8
+
+
+def unit(i: int) -> np.ndarray:
+    v = np.zeros(DIM, np.float32)
+    v[i] = 1.0
+    return v
+
+
+def keys_of(store, q, k=8):
+    return [e.key for _, e in store.search(q, k=k)]
+
+
+@pytest.fixture
+def full3():
+    def make(eviction):
+        s = InMemoryVectorStore(DIM, capacity=3, eviction=eviction)
+        ks = [s.add(unit(i), f"q{i}", f"a{i}") for i in range(3)]
+        return s, ks
+
+    return make
+
+
+def test_lru_evicts_least_recently_accessed(full3):
+    s, (k0, k1, k2) = full3("lru")
+    s.search(unit(0), k=1)  # touch entry 0; entry 1 is now least recent
+    k3 = s.add(unit(3), "q3", "a3")
+    live = {e.key for e in s._entries if e is not None}
+    assert live == {k0, k2, k3}
+
+
+def test_lfu_evicts_least_frequently_accessed(full3):
+    s, (k0, k1, k2) = full3("lfu")
+    for _ in range(2):
+        s.search(unit(0), k=1)
+    s.search(unit(2), k=1)
+    k3 = s.add(unit(3), "q3", "a3")  # entry 1 has count 0
+    live = {e.key for e in s._entries if e is not None}
+    assert live == {k0, k2, k3}
+
+
+def test_fifo_ignores_recency(full3):
+    s, (k0, k1, k2) = full3("fifo")
+    s.search(unit(0), k=1)  # recency must not save entry 0 under FIFO
+    k3 = s.add(unit(3), "q3", "a3")
+    k4 = s.add(unit(4), "q4", "a4")
+    live = {e.key for e in s._entries if e is not None}
+    assert live == {k2, k3, k4}
+
+
+@pytest.mark.parametrize("eviction", ["lru", "lfu", "fifo"])
+def test_wraparound_keeps_capacity_and_serves_survivors(eviction):
+    s = InMemoryVectorStore(DIM, capacity=3, eviction=eviction)
+    keys = [s.add(unit(i % DIM), f"q{i}", f"a{i}") for i in range(7)]
+    assert len(s) == 3
+    # the most recent insert always survives its own add
+    assert keys[-1] in {e.key for e in s._entries if e is not None}
+
+
+@pytest.mark.parametrize("eviction", ["lru", "lfu", "fifo"])
+def test_remove_frees_slot_for_reuse(eviction):
+    s = InMemoryVectorStore(DIM, capacity=3, eviction=eviction)
+    ka = s.add(unit(0), "a", "A")
+    kb = s.add(unit(1), "b", "B")
+    kc = s.add(unit(2), "c", "C")
+    slot_b = s._key_to_slot[kb]
+    assert s.remove(kb)
+    assert len(s) == 2
+    # the freed slot is recycled: no live entry is evicted by the next add
+    kd = s.add(unit(3), "d", "D")
+    assert s._key_to_slot[kd] == slot_b
+    live = {e.key for e in s._entries if e is not None}
+    assert live == {ka, kc, kd}
+    assert s._tail == 3  # no extra slot consumed
+
+
+def test_remove_unknown_and_double_remove():
+    s = InMemoryVectorStore(DIM, capacity=3)
+    k = s.add(unit(0), "a", "A")
+    assert not s.remove(999)
+    assert s.remove(k)
+    assert not s.remove(k)
+    assert len(s) == 0
+    assert s.search(unit(0), k=2) == []
+
+
+def test_multiple_removes_then_wraparound_evicts_live_last():
+    s = InMemoryVectorStore(DIM, capacity=3, eviction="lru")
+    ka = s.add(unit(0), "a", "A")
+    kb = s.add(unit(1), "b", "B")
+    kc = s.add(unit(2), "c", "C")
+    s.remove(ka)
+    s.remove(kc)
+    kd = s.add(unit(3), "d", "D")
+    ke = s.add(unit(4), "e", "E")
+    assert len(s) == 3  # both freed slots reused, b survived
+    kf = s.add(unit(5), "f", "F")  # now full: LRU evicts b (oldest access)
+    live = {e.key for e in s._entries if e is not None}
+    assert live == {kd, ke, kf}
+
+
+def test_removed_entry_not_returned_by_search():
+    s = InMemoryVectorStore(DIM, capacity=4)
+    k0 = s.add(unit(0), "a", "A")
+    s.add(unit(1), "b", "B")
+    assert s.remove(k0)
+    assert k0 not in keys_of(s, unit(0))
+
+
+def test_persistence_roundtrip_preserves_free_slots(tmp_path):
+    s = InMemoryVectorStore(DIM, capacity=3, eviction="lru")
+    ka = s.add(unit(0), "a", "A")
+    kb = s.add(unit(1), "b", "B")
+    slot_a = s._key_to_slot[ka]
+    s.remove(ka)
+    s.save(str(tmp_path / "store"))
+    s2 = InMemoryVectorStore.load(str(tmp_path / "store"))
+    assert len(s2) == 1
+    assert s2._key_to_slot == {kb: s._key_to_slot[kb]}
+    # freed slot survives the roundtrip and is reused first
+    kc = s2.add(unit(2), "c", "C")
+    assert s2._key_to_slot[kc] == slot_a
+    assert {e.key for e in s2._entries if e is not None} == {kb, kc}
+
+
+def test_search_batch_updates_recency_like_search():
+    s = InMemoryVectorStore(DIM, capacity=3, eviction="lru")
+    k0 = s.add(unit(0), "a", "A")
+    k1 = s.add(unit(1), "b", "B")
+    k2 = s.add(unit(2), "c", "C")
+    s.search_batch(np.stack([unit(0), unit(2)]), k=1)  # batched touch of 0 and 2
+    k3 = s.add(unit(3), "d", "D")  # must evict entry 1
+    live = {e.key for e in s._entries if e is not None}
+    assert live == {k0, k2, k3}

@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _compat import given, settings, st
 
 from repro.training.grad_compress import compress_with_error_feedback, init_error_state
 from repro.training.optimizer import (
