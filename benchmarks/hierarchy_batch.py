@@ -1,0 +1,163 @@
+"""Batched hierarchical lookup benchmark: per-query latency vs batch size.
+
+Sweeps batch sizes {1, 8, 64, 256} over an L1 + L2 + 2-peer topology (§4) and
+compares
+
+  * sequential — B x ``HierarchicalCache.lookup``   (one device dispatch per
+    level per query, one per promotion)
+  * batched    — 1 x ``HierarchicalCache.lookup_batch`` (one dispatch per
+    level for the whole batch, promotions in one ``add_batch`` scatter)
+
+plus the insert path (N x ``InMemoryVectorStore.add`` vs one ``add_batch``
+multi-row scatter). Results land in ``BENCH_hierarchy_batch.json`` so CI can
+enforce the speedup floor per PR.
+
+Run:  PYTHONPATH=src python benchmarks/hierarchy_batch.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import emit, time_it  # noqa: E402
+from repro.core import (  # noqa: E402
+    GenerativeCache,
+    HierarchicalCache,
+    NgramHashEmbedder,
+)
+from repro.core.vector_store import InMemoryVectorStore  # noqa: E402
+
+DIM = 256
+N_PEERS = 2
+
+
+def _unit_rows(rng, n, dim):
+    v = rng.normal(size=(n, dim)).astype(np.float32)
+    return v / np.linalg.norm(v, axis=1, keepdims=True)
+
+
+def _make_hierarchy(n_entries: int, capacity: int, seed: int) -> HierarchicalCache:
+    """L1 + L2 + 2 peers, each level seeded with its own slice of entries."""
+    rng = np.random.default_rng(seed)
+    emb = NgramHashEmbedder(DIM)
+
+    def gc():
+        return GenerativeCache(emb, threshold=0.85, t_single=0.45, t_combined=1.0,
+                               capacity=capacity)
+
+    levels = [gc() for _ in range(2 + N_PEERS)]
+    for li, cache in enumerate(levels):
+        rows = _unit_rows(rng, n_entries, DIM)
+        cache.insert_batch(
+            [f"L{li} entry {i}" for i in range(n_entries)],
+            [f"L{li} answer {i}" for i in range(n_entries)],
+            vecs=rows,
+        )
+    return HierarchicalCache(levels[0], levels[1], peers=levels[2:])
+
+
+def _probe_vecs(rng, hier: HierarchicalCache, b: int) -> np.ndarray:
+    """Half near-duplicates spread round-robin over the levels (hits resolve
+    at L1/L2/peers), half random unit rows (misses)."""
+    levels = [c for _, c in hier._levels()]
+    near = []
+    for j in range(max(b // 2, 1)):
+        src = np.asarray(levels[j % len(levels)].store._buf)[j % 4]
+        near.append(src + 0.05 * rng.normal(size=DIM).astype(np.float32))
+    probes = np.concatenate([np.stack(near), _unit_rows(rng, b - len(near), DIM)])[:b]
+    return (probes / np.linalg.norm(probes, axis=1, keepdims=True)).astype(np.float32)
+
+
+def bench_lookup(batch_sizes, n_entries, capacity, repeats) -> dict:
+    out = {}
+    for b in batch_sizes:
+        rng = np.random.default_rng(1)
+        queries = [f"probe {i}" for i in range(b)]
+        h_seq = _make_hierarchy(n_entries, capacity, seed=0)
+        h_bat = _make_hierarchy(n_entries, capacity, seed=0)
+        vecs = _probe_vecs(rng, h_seq, b)
+        seq_s = time_it(
+            lambda: [h_seq.lookup(q, vec=v) for q, v in zip(queries, vecs)],
+            repeats=repeats, warmup=2,
+        )
+        bat_s = time_it(lambda: h_bat.lookup_batch(queries, vecs=vecs),
+                        repeats=repeats, warmup=2)
+        # decision parity on the (now steady-state) stores rides along for free
+        seq_dec = [(r.hit, r.generative) for r in
+                   [h_seq.lookup(q, vec=v) for q, v in zip(queries, vecs)]]
+        bat_dec = [(r.hit, r.generative) for r in h_bat.lookup_batch(queries, vecs=vecs)]
+        assert seq_dec == bat_dec, "batched hierarchy diverged from sequential"
+        seq_us, bat_us = seq_s / b * 1e6, bat_s / b * 1e6
+        speedup = seq_us / bat_us if bat_us else float("inf")
+        emit(f"hierbatch_lookup_seq_b{b}", seq_us, f"levels={2 + N_PEERS}")
+        emit(f"hierbatch_lookup_batched_b{b}", bat_us, f"speedup={speedup:.1f}x")
+        out[b] = {"sequential_us_per_query": seq_us,
+                  "batched_us_per_query": bat_us, "speedup": speedup}
+    return out
+
+
+def bench_insert(batch_sizes, capacity, repeats) -> dict:
+    """N sequential device updates vs one multi-row scatter."""
+    rng = np.random.default_rng(2)
+    out = {}
+    for b in batch_sizes:
+        rows = _unit_rows(rng, b, DIM)
+        qs = [f"q{i}" for i in range(b)]
+        rs = [f"a{i}" for i in range(b)]
+        # long-lived stores: steady-state adds (wraparound eviction included),
+        # not jit compile time
+        s_seq = InMemoryVectorStore(DIM, capacity)
+        s_bat = InMemoryVectorStore(DIM, capacity)
+        seq_s = time_it(
+            lambda: [s_seq.add(v, q, r) for v, q, r in zip(rows, qs, rs)],
+            repeats=repeats, warmup=2,
+        )
+        bat_s = time_it(lambda: s_bat.add_batch(rows, qs, rs),
+                        repeats=repeats, warmup=2)
+        seq_us, bat_us = seq_s / b * 1e6, bat_s / b * 1e6
+        speedup = seq_us / bat_us if bat_us else float("inf")
+        emit(f"hierbatch_insert_seq_b{b}", seq_us, f"cap={capacity}")
+        emit(f"hierbatch_insert_batched_b{b}", bat_us, f"speedup={speedup:.1f}x")
+        out[b] = {"sequential_us_per_add": seq_us,
+                  "batched_us_per_add": bat_us, "speedup": speedup}
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small CI-sized sweep")
+    ap.add_argument("--out", default="BENCH_hierarchy_batch.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        batch_sizes, n_entries, capacity, repeats = [1, 8, 64], 128, 1024, 3
+    else:
+        batch_sizes, n_entries, capacity, repeats = [1, 8, 64, 256], 512, 4096, 5
+
+    results = {
+        "config": {"batch_sizes": batch_sizes, "n_entries_per_level": n_entries,
+                   "levels": 2 + N_PEERS, "capacity": capacity,
+                   "repeats": repeats, "smoke": args.smoke},
+        "lookup": bench_lookup(batch_sizes, n_entries, capacity, repeats),
+        "insert": bench_insert(batch_sizes, capacity, repeats),
+    }
+    if 64 in results["lookup"]:
+        results["lookup_speedup_at_64"] = results["lookup"][64]["speedup"]
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {args.out}")
+    if "lookup_speedup_at_64" in results:
+        print(f"hierarchy lookup speedup at batch 64: {results['lookup_speedup_at_64']:.1f}x")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -50,20 +50,41 @@ def host_side_hierarchy():
     print(f"   hit={r.hit} level={r.level} generative={r.generative}")
 
 
-def mesh_sharded_store():
-    import jax
-    from jax.sharding import AxisType
+def batched_hierarchy():
+    emb = NgramHashEmbedder()
 
+    def gc(cap):
+        # looser thresholds than the walkthrough above so the n-gram
+        # embedder's paraphrase scores (~0.6-0.7) register as hits
+        return GenerativeCache(emb, threshold=0.55, t_single=0.4, t_combined=1.0, capacity=cap)
+
+    l1, l2, peer = gc(64), gc(512), gc(512)
+    h = HierarchicalCache(l1, l2, peers=[peer])
+    l2.insert("What is tcp congestion control?", "TCP answer")
+    peer.insert("What is raft consensus?", "raft answer")
+
+    print("\n== batched hierarchy: one search dispatch per level for the batch")
+    rs = h.lookup_batch([
+        "Please explain tcp congestion control.",
+        "Explain the raft consensus protocol",
+        "What is the airspeed velocity of an unladen swallow?",
+    ])
+    for r in rs:
+        print(f"   hit={r.hit} level={r.level}")
+    print(f"   lower-level winners promoted: L1 now has {len(l1.store)} entries")
+
+
+def mesh_sharded_store():
     from repro.distributed.sharded_store import ShardedVectorStore
+    from repro.launch.mesh import make_test_mesh
 
     print("\n== mesh-sharded store: pod-local shards + cross-pod top-k merge")
-    mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_test_mesh(shape=(2, 4), axes=("pod", "data"))
     emb = NgramHashEmbedder(dim=64)
     store = ShardedVectorStore(mesh, dim=64, capacity=256, k=4)
     questions = [f"What is topic number {i}?" for i in range(24)]
     vecs = emb.embed(questions)
-    for q, v in zip(questions, vecs):
-        store.add(v, q, f"answer to {q}")
+    store.add_batch(vecs, questions, [f"answer to {q}" for q in questions])
     probe = emb.embed(["Please explain topic number 7"])
     scores, idx = store.search(probe)
     q, a = store.payloads[int(idx[0, 0])]
@@ -72,4 +93,5 @@ def mesh_sharded_store():
 
 if __name__ == "__main__":
     host_side_hierarchy()
+    batched_hierarchy()
     mesh_sharded_store()

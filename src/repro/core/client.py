@@ -17,6 +17,8 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.adaptive import (
     DEFAULT_PRICE_TABLE,
     CostController,
@@ -305,26 +307,21 @@ class EnhancedClient:
         use_cache: bool = True,
         force_fresh: bool = False,
         cache_l1: bool = True,
+        cache_l2: bool = True,  # privacy hints (§4); only meaningful with a hierarchy
         connectivity: float = 1.0,
     ) -> List[ClientResult]:
         """Serve B prompts through the batched cache pipeline.
 
-        One embed forward + one store search covers the whole batch; hits and
-        generative hits are answered immediately and the remaining misses fan
-        out to the backend in a single pool submit (backends that batch
-        natively serve them in one continuous-batching pass). Results come
-        back in prompt order.
+        One embed forward + one store search (per hierarchy level, when one is
+        configured) covers the whole batch; hits and generative hits are
+        answered immediately and the remaining misses fan out to the backend
+        in a single batched dispatch, then backfill the cache with one
+        ``add_batch`` scatter per level. Results come back in prompt order.
         """
         t0 = time.perf_counter()
         n = len(prompts)
         if n == 0:
             return []
-        if self.hierarchy is not None and use_cache:
-            # no batched multi-level path yet (ROADMAP): fan out per request
-            return self.query_many(prompts, models=[model] * n, max_tokens=max_tokens,
-                                   temperature=temperature, use_cache=use_cache,
-                                   force_fresh=force_fresh, cache_l1=cache_l1,
-                                   connectivity=connectivity)
         self.stats.requests += n
         rids = list(range(self._next_id, self._next_id + n))
         self._next_id += n
@@ -336,11 +333,13 @@ class EnhancedClient:
         }
 
         results: List[Optional[ClientResult]] = [None] * n
+        target = self.hierarchy if self.hierarchy is not None else self.cache
         vecs = None
-        if use_cache and self.cache is not None:
-            vecs = self.cache.embed_batch(list(prompts))
+        if use_cache and target is not None:
+            embedder_owner = self.hierarchy.l1 if self.hierarchy is not None else self.cache
+            vecs = embedder_owner.embed_batch(list(prompts))
             if not force_fresh:
-                cache_results = self.cache.lookup_batch(list(prompts), [ctx] * n, vecs=vecs)
+                cache_results = target.lookup_batch(list(prompts), [ctx] * n, vecs=vecs)
                 for i, cr in enumerate(cache_results):
                     if cr.hit:
                         self.stats.cache_hits += 1
@@ -359,6 +358,10 @@ class EnhancedClient:
             resps = self._generate_batch_with_failover(
                 chosen, [prompts[i] for i in miss_idx], max_tokens, temperature
             )
+            if len(resps) != len(miss_idx):  # fail fast on a short batch
+                raise RuntimeError(
+                    f"backend returned {len(resps)} responses for {len(miss_idx)} prompts"
+                )
             for i, resp in zip(miss_idx, resps):
                 cost = self._cost_of(resp.model, resp)
                 resp.cost_usd = cost
@@ -366,13 +369,26 @@ class EnhancedClient:
                 self.stats.total_cost_usd += cost
                 if self.cost_ctl:
                     self.cost_ctl.record(cost, False)
-                if use_cache and self.cache is not None and cache_l1:
-                    self.cache.insert(prompts[i], resp.text, {"model": resp.model},
-                                      vec=None if vecs is None else vecs[i])
                 results[i] = ClientResult(
                     resp.text, False, None, resp, resp.model, cost,
                     time.perf_counter() - t0, rids[i],
                 )
+            if use_cache and target is not None:
+                miss_vecs = np.asarray(vecs)[miss_idx]
+                miss_prompts = [prompts[i] for i in miss_idx]
+                miss_texts = [results[i].text for i in miss_idx]
+                if self.hierarchy is not None:
+                    # whole miss set backfills each permitted level in one scatter
+                    self.hierarchy.insert_batch(
+                        miss_prompts, miss_texts, cache_l1=cache_l1,
+                        cache_l2=cache_l2, vecs=miss_vecs,
+                    )
+                elif cache_l1:
+                    self.cache.insert_batch(
+                        miss_prompts, miss_texts,
+                        metas=[{"model": results[i].model} for i in miss_idx],
+                        vecs=miss_vecs,
+                    )
 
         for r in results:
             if not r.from_cache:  # match query(): hits don't accrue latency

@@ -131,7 +131,31 @@ class GenerativeCache(SemanticCache):
         matches = self.store.search_batch(np.asarray(vecs), k=max(self.max_sources, 1))
         self.stats.search_time_s += time.perf_counter() - t0
 
+        results, to_insert = self._decide_batch(queries, thresholds, matches)
         per_query_s = (time.perf_counter() - t_start) / n
+        for r in results:
+            r.latency_s = per_query_s
+        if to_insert:
+            # whole synthesized set lands in one add_batch scatter
+            self.insert_batch(
+                [queries[i] for i, _ in to_insert],
+                [r for _, r in to_insert],
+                metas=[{"generative": True}] * len(to_insert),
+                vecs=np.stack([np.asarray(vecs[i]) for i, _ in to_insert]),
+            )
+        return results
+
+    def _decide_batch(self, queries, thresholds, matches, lazy_synth=False):
+        """Generative-rule decisions over pre-searched candidates (§3).
+
+        ``matches`` rows may hold more than ``max_sources`` candidates (the
+        hierarchy searches each level once with a shared k); the rule only
+        ever sees the top ``max_sources``, like the sequential path. Deferred
+        synthesized inserts come back as ``(query_index, response)`` so the
+        caller controls when (and whether) they land. With ``lazy_synth``,
+        generative hits carry ``response=None`` and no deferred inserts — the
+        hierarchy synthesizes only for levels that actually win a query (the
+        summarizer may be an LLM call; losers must not pay for it)."""
         results: List[CacheResult] = []
         to_insert: List[tuple] = []  # synthesized answers, applied post-batch
         for i, m in enumerate(matches):
@@ -141,27 +165,28 @@ class GenerativeCache(SemanticCache):
                 s, e = m[0]
                 self.stats.hits += 1
                 results.append(CacheResult(True, e.response, s, s, False, [(s, e)],
-                                           t_s, per_query_s, "semantic"))
+                                           t_s, 0.0, "semantic"))
                 continue
-            X = [(s, e) for s, e in m if s > self.t_single]
+            X = [(s, e) for s, e in m[: self.max_sources] if s > self.t_single]
             combined = float(sum(s for s, _ in X))
             if X and combined > self.t_combined:
                 if X[0][0] > t_s:
                     s, e = X[0]
                     self.stats.hits += 1
                     results.append(CacheResult(True, e.response, s, combined, False,
-                                               X[:1], t_s, per_query_s, "semantic"))
+                                               X[:1], t_s, 0.0, "semantic"))
                     continue
-                response = synthesis.combine(queries[i], X, self.synthesis_mode, self.summarizer)
+                if lazy_synth:
+                    response = None
+                else:
+                    response = synthesis.combine(queries[i], X, self.synthesis_mode, self.summarizer)
+                    if self.cache_synthesized:
+                        to_insert.append((i, response))
                 self.stats.hits += 1
                 self.stats.generative_hits += 1
-                if self.cache_synthesized:
-                    to_insert.append((queries[i], response, np.asarray(vecs[i])))
                 results.append(CacheResult(True, response, best, combined, True, X,
-                                           t_s, per_query_s, "generative"))
+                                           t_s, 0.0, "generative"))
             else:
                 results.append(CacheResult(False, None, best, combined, False, X,
-                                           t_s, per_query_s))
-        for q, r, v in to_insert:
-            self.insert(q, r, {"generative": True}, vec=v)
-        return results
+                                           t_s, 0.0))
+        return results, to_insert

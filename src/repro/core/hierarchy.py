@@ -6,7 +6,19 @@ levels (the paper: "If the L2 cache is able to satisfy the request with a
 query-response pair q1, q1 is then stored in the L1 cache"). The same
 similarity threshold t_s(1) (the requesting client's effective threshold) is
 used at every level. Privacy hints let users keep personal entries out of
-the shared levels (§4).
+the shared levels (§4) — and they always win: ``cache_l2=False`` is a hard
+veto, even in an inclusive hierarchy. ``inclusive=True`` makes the shared L2
+a superset of what this client serves: peer-level winners are mirrored into
+L2 alongside their L1 promotion (safe — they already live in a shared
+level), so cooperating clients converge on one shared working set.
+
+``lookup_batch`` serves B queries with one embed forward and ONE search
+dispatch per level: each level's candidates go through that level's own
+decision rule (``SemanticCache._decide_batch`` / the generative override),
+the per-query winning level is resolved host-side (L1 beats L2 beats peers),
+lower-level winners are promoted into L1 via one ``add_batch`` scatter, and
+residual misses get a batched cross-level generative pass over the already
+searched candidates.
 
 On the TPU mesh this topology maps to pod-local L1 shards and cross-pod L2
 exchange (DESIGN.md §3); this module is the level-coordination logic, shared
@@ -47,6 +59,24 @@ class HierarchicalCache:
         out.extend((f"L2-peer{i}", p) for i, p in enumerate(self.peers))
         return out
 
+    # -- cross-level generative pool (§3 rule applied over every level) --------
+
+    def _pool_candidates(self, level_matches: List[list]) -> List[tuple]:
+        """Merge one query's per-level candidates into the generative pool:
+        filter by the requesting client's t_single, dedupe across levels,
+        best-first, capped at L1's max_sources (so N levels x k weak matches
+        cannot clear t_combined when no single level would)."""
+        pooled = []
+        seen = set()
+        for m in level_matches:
+            for s, e in m:
+                sig = (e.query, e.response[:64])
+                if s > self.l1.t_single and sig not in seen:
+                    seen.add(sig)
+                    pooled.append((s, e))
+        pooled.sort(key=lambda se: se[0], reverse=True)
+        return pooled[: self.l1.max_sources]
+
     def lookup(
         self, query: str, context: Optional[dict] = None, vec: Optional[np.ndarray] = None
     ) -> CacheResult:
@@ -59,20 +89,21 @@ class HierarchicalCache:
             if res.hit:
                 if self.promote and cache is not self.l1:
                     self.l1.insert(query, res.response, {"promoted_from": name}, vec=vec)
+                    if self.inclusive and self.l2 is not None and cache is not self.l2:
+                        # inclusive hierarchy: peer winners also land in our
+                        # shared L2 (they came from a shared level, so the
+                        # copy exposes nothing new)
+                        self.l2.insert(query, res.response, {"promoted_from": name}, vec=vec)
                 res.level = f"{name}:{res.level}"
                 res.latency_s = time.perf_counter() - t0
                 return res
 
         if self.generative_across_levels and len(levels) > 1:
             # pool candidates from every level and apply the generative rule
-            pooled = []
-            seen = set()
-            for _, cache in levels:
-                for s, e in cache.store.search(vec, k=cache.max_sources if hasattr(cache, "max_sources") else 4):
-                    sig = (e.query, e.response[:64])
-                    if s > self.l1.t_single and sig not in seen:
-                        seen.add(sig)
-                        pooled.append((s, e))
+            pooled = self._pool_candidates([
+                cache.store.search(vec, k=getattr(cache, "max_sources", 4))
+                for _, cache in levels
+            ])
             combined = float(sum(s for s, _ in pooled))
             if pooled and combined > self.l1.t_combined:
                 from repro.core import synthesis
@@ -89,6 +120,162 @@ class HierarchicalCache:
         res.latency_s = time.perf_counter() - t0
         return res
 
+    def lookup_batch(
+        self,
+        queries: List[str],
+        contexts: Optional[List[Optional[dict]]] = None,
+        vecs: Optional[np.ndarray] = None,
+    ) -> List[CacheResult]:
+        """Serve B queries with one embed forward + one search per level.
+
+        Decision-identical to B sequential ``lookup`` calls against the same
+        level snapshots: every level is searched once for the whole batch,
+        each level's decision rule runs over its own candidates, and the
+        first level in L1 -> L2 -> peers order that hits wins. All store
+        mutations (L1 promotion of lower-level winners, per-level synthesized
+        answers, cross-level synthesized answers) are deferred past the last
+        decision and applied as ``add_batch`` scatters, so in-batch queries
+        never observe each other.
+        """
+        t0 = time.perf_counter()
+        n = len(queries)
+        if n == 0:
+            return []
+        contexts = list(contexts) if contexts is not None else [None] * n
+        if vecs is None:
+            vecs = self.l1.embed_batch(list(queries))
+        vecs = np.asarray(vecs)
+        levels = self._levels()
+
+        level_results: List[List[CacheResult]] = []
+        level_matches: List[list] = []
+        for _, cache in levels:
+            thresholds = np.asarray(
+                [cache.effective_threshold(q, c) for q, c in zip(queries, contexts)]
+            )
+            ts = time.perf_counter()
+            matches = cache.store.search_batch(vecs, k=max(getattr(cache, "max_sources", 4), 1))
+            cache.stats.search_time_s += time.perf_counter() - ts
+            # lazy_synth: only levels that win a query synthesize (below)
+            results, _ = cache._decide_batch(queries, thresholds, matches, lazy_synth=True)
+            level_results.append(results)
+            level_matches.append(matches)
+
+        out: List[Optional[CacheResult]] = [None] * n
+        winner_idx = [len(levels)] * n  # level index that served each query
+        promotions: List[tuple] = []  # (query index, response, from_name)
+        l2_copies: List[tuple] = []  # inclusive: peer winners mirrored into L2
+        synth_memo: dict = {}  # duplicate in-batch queries synthesize once
+        # (cache, index, response, meta): deferred writebacks. A level's
+        # synthesized answer only lands if that level actually won the query —
+        # sequentially, levels below a hit are never probed.
+        deferred: List[tuple] = []
+        for i in range(n):
+            for li, ((name, cache), results) in enumerate(zip(levels, level_results)):
+                res = results[i]
+                if res.hit:
+                    if res.generative and res.response is None:
+                        key = (id(cache), queries[i])
+                        if key not in synth_memo:
+                            from repro.core import synthesis
+
+                            synth_memo[key] = synthesis.combine(
+                                queries[i], res.sources, cache.synthesis_mode, cache.summarizer
+                            )
+                            if cache.cache_synthesized:
+                                deferred.append((cache, i, synth_memo[key], {"generative": True}))
+                        res.response = synth_memo[key]
+                    if self.promote and cache is not self.l1:
+                        promotions.append((i, res.response, name))
+                        if self.inclusive and self.l2 is not None and cache is not self.l2:
+                            l2_copies.append((i, res.response, name))
+                    res.level = f"{name}:{res.level}"
+                    winner_idx[i] = li
+                    out[i] = res
+                    break
+
+        # stats fidelity: the sequential walk stops at the winning level, so
+        # levels below it were never looked up — retract the counters the
+        # all-levels batch decision provisionally credited them with
+        for li, ((_, cache), results) in enumerate(zip(levels, level_results)):
+            cache.stats.lookups += sum(1 for i in range(n) if winner_idx[i] >= li)
+            for i in range(n):
+                if winner_idx[i] < li and results[i].hit:
+                    cache.stats.hits -= 1
+                    if results[i].generative:
+                        cache.stats.generative_hits -= 1
+
+        if self.generative_across_levels and len(levels) > 1:
+            for i in range(n):
+                if out[i] is not None:
+                    continue
+                pooled = self._pool_candidates([m[i] for m in level_matches])
+                combined = float(sum(s for s, _ in pooled))
+                if pooled and combined > self.l1.t_combined:
+                    key = ("multi-level", queries[i])
+                    if key not in synth_memo:
+                        from repro.core import synthesis
+
+                        synth_memo[key] = synthesis.combine(
+                            queries[i], pooled, self.l1.synthesis_mode, self.l1.summarizer
+                        )
+                        deferred.append((self.l1, i, synth_memo[key], {"generative": True}))
+                    response = synth_memo[key]
+                    self.l1.stats.generative_hits += 1
+                    out[i] = CacheResult(
+                        True, response, pooled[0][0], combined, True, pooled,
+                        self.l1.effective_threshold(queries[i], contexts[i]),
+                        0.0, "multi-level:generative",
+                    )
+
+        # batched writebacks: one scatter per destination cache. Dedupe
+        # repeated in-batch queries first — sequentially only the first
+        # occurrence writes (later ones would hit the fresh L1 copy), and a
+        # coalesced batch of duplicates must not flush L1 with clones.
+        def _dedupe(items: List[tuple]) -> List[tuple]:
+            seen, out = set(), []
+            for it in items:
+                key = (queries[it[0]], it[1])
+                if key not in seen:
+                    seen.add(key)
+                    out.append(it)
+            return out
+
+        promotions = _dedupe(promotions)
+        l2_copies = _dedupe(l2_copies)
+        if promotions:
+            self.l1.insert_batch(
+                [queries[i] for i, _, _ in promotions],
+                [r for _, r, _ in promotions],
+                metas=[{"promoted_from": name} for _, _, name in promotions],
+                vecs=np.stack([vecs[i] for i, _, _ in promotions]),
+            )
+        if l2_copies:
+            self.l2.insert_batch(
+                [queries[i] for i, _, _ in l2_copies],
+                [r for _, r, _ in l2_copies],
+                metas=[{"promoted_from": name} for _, _, name in l2_copies],
+                vecs=np.stack([vecs[i] for i, _, _ in l2_copies]),
+            )
+        by_cache: dict = {}
+        for cache, i, r, meta in deferred:
+            by_cache.setdefault(id(cache), (cache, []))[1].append((i, r, meta))
+        for cache, items in by_cache.values():
+            items = _dedupe(items)
+            cache.insert_batch(
+                [queries[i] for i, _, _ in items],
+                [r for _, r, _ in items],
+                metas=[m for _, _, m in items],
+                vecs=np.stack([vecs[i] for i, _, _ in items]),
+            )
+
+        per_query_s = (time.perf_counter() - t0) / n
+        for i in range(n):
+            if out[i] is None:
+                out[i] = CacheResult(False)
+            out[i].latency_s = per_query_s
+        return out  # type: ignore[return-value]
+
     def insert(
         self,
         query: str,
@@ -98,12 +285,35 @@ class HierarchicalCache:
         cache_l2: bool = True,
         vec: Optional[np.ndarray] = None,
     ) -> None:
-        """Privacy hints (§4): callers may exclude either level."""
+        """Privacy hints (§4): callers may exclude either level.
+
+        ``cache_l2=False`` is absolute — inclusivity never copies a private
+        entry into the shared level.
+        """
         if vec is None:
             vec = self.l1.embed(query)
         if cache_l1:
             self.l1.insert(query, response, meta, vec=vec)
         if cache_l2 and self.l2 is not None:
             self.l2.insert(query, response, meta, vec=vec)
-        elif self.inclusive and cache_l1 and self.l2 is not None:
-            self.l2.insert(query, response, meta, vec=vec)
+
+    def insert_batch(
+        self,
+        queries: List[str],
+        responses: List[str],
+        metas: Optional[List[Optional[dict]]] = None,
+        cache_l1: bool = True,
+        cache_l2: bool = True,
+        vecs: Optional[np.ndarray] = None,
+    ) -> None:
+        """Batched ``insert``: one embed forward + one scatter per level the
+        privacy hints allow (same veto semantics as ``insert``)."""
+        if not queries:
+            return
+        if vecs is None:
+            vecs = self.l1.embed_batch(list(queries))
+        vecs = np.asarray(vecs)
+        if cache_l1:
+            self.l1.insert_batch(list(queries), list(responses), metas, vecs=vecs)
+        if cache_l2 and self.l2 is not None:
+            self.l2.insert_batch(list(queries), list(responses), metas, vecs=vecs)

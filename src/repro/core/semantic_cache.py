@@ -143,25 +143,43 @@ class SemanticCache:
         t0 = time.perf_counter()
         matches = self.store.search_batch(np.asarray(vecs), k=1)
         self.stats.search_time_s += time.perf_counter() - t0
-        best = np.asarray([m[0][0] if m else -1.0 for m in matches])
-        hit_mask = best > thresholds
+        results, _ = self._decide_batch(queries, thresholds, matches)
         per_query_s = (time.perf_counter() - t_start) / n
+        for r in results:
+            r.latency_s = per_query_s
+        return results
+
+    def _decide_batch(
+        self,
+        queries: List[str],
+        thresholds: np.ndarray,
+        matches: List[List[Tuple[float, Entry]]],
+        lazy_synth: bool = False,
+    ) -> Tuple[List[CacheResult], List[tuple]]:
+        """Per-query hit decisions over pre-searched candidates.
+
+        Shared by ``lookup_batch`` and ``HierarchicalCache.lookup_batch`` (the
+        hierarchy runs one search per level and feeds each level's candidates
+        through that level's own decision rule). Returns the results (latency
+        left at 0 for the caller to fill) plus deferred ``(query_index,
+        response)`` inserts — empty here, used by the generative subclass.
+        """
         results: List[CacheResult] = []
-        for i in range(n):
+        for i, m in enumerate(matches):
             t_s = float(thresholds[i])
-            if hit_mask[i]:
-                score, entry = matches[i][0]
+            best = m[0][0] if m else -1.0
+            if m and best > t_s:
+                score, entry = m[0]
                 self.stats.hits += 1
                 results.append(
                     CacheResult(True, entry.response, score, score, False,
-                                [(score, entry)], t_s, per_query_s, "semantic")
+                                [(score, entry)], t_s, 0.0, "semantic")
                 )
             else:
-                b = float(best[i])
                 results.append(
-                    CacheResult(False, None, b, b, False, matches[i][:1], t_s, per_query_s)
+                    CacheResult(False, None, best, best, False, m[:1], t_s, 0.0)
                 )
-        return results
+        return results, []
 
     def insert(
         self,
@@ -178,13 +196,31 @@ class SemanticCache:
         self.stats.adds += 1
         return key
 
+    def insert_batch(
+        self,
+        queries: List[str],
+        responses: List[str],
+        metas: Optional[List[Optional[Dict[str, Any]]]] = None,
+        vecs: Optional[np.ndarray] = None,
+    ) -> List[int]:
+        """Insert N pairs with one embed forward + one ``add_batch`` scatter."""
+        n = len(queries)
+        if n == 0:
+            return []
+        if vecs is None:
+            vecs = self.embed_batch(list(queries))
+        t0 = time.perf_counter()
+        keys = self.store.add_batch(np.asarray(vecs), list(queries), list(responses), metas)
+        self.stats.add_time_s += time.perf_counter() - t0
+        self.stats.adds += n
+        return keys
+
     def warm_start(self, pairs: List[Tuple[str, str]]) -> None:
         """Load query-answer pairs from past sessions (paper §4)."""
         if not pairs:
             return
         vecs = self.embedder.embed([q for q, _ in pairs])
-        for (q, a), v in zip(pairs, vecs):
-            self.insert(q, a, vec=v)
+        self.insert_batch([q for q, _ in pairs], [a for _, a in pairs], vecs=vecs)
 
     # -- persistence ------------------------------------------------------------
 
@@ -192,7 +228,9 @@ class SemanticCache:
         self.store.save(path)
 
     def load_store(self, path: str) -> None:
-        self.store = InMemoryVectorStore.load(path)
+        # reload through the live store's class with its flags, so a
+        # use_pallas store (or a custom subclass) survives the round-trip
+        self.store = type(self.store).load(path, use_pallas=self.store.use_pallas)
 
 
 class GPTCacheLike:

@@ -12,6 +12,7 @@ repro.distributed.sharded_store.
 """
 from __future__ import annotations
 
+import functools
 import json
 import os
 import time
@@ -31,6 +32,41 @@ class Entry:
     query: str
     response: str
     meta: Dict[str, Any] = field(default_factory=dict)
+
+
+# module-level jits: compiled once per (capacity, dim) shape and shared by
+# every store instance — a 4-level hierarchy's stores reuse one executable
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _scatter_one(buf, valid, vec, idx):
+    return buf.at[idx].set(vec), valid.at[idx].set(True)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _scatter_rows(buf, valid, rows, idxs):
+    return buf.at[idxs].set(rows), valid.at[idxs].set(True)
+
+
+def prepare_scatter(idxs: List[int], rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Build the (rows, idxs) update for a multi-row ``buf.at[idxs].set``.
+
+    Deduplicates repeated slots last-write-wins (a batch that wraps capacity
+    may pick the same victim twice; XLA scatter order for conflicting updates
+    is implementation-defined, the sequential loop's is not) and pads to the
+    next power-of-two bucket by repeating the final update (identical
+    duplicate writes are order-independent) so the scatter jit compiles per
+    bucket, not per batch size. Shared by the in-memory and sharded stores.
+    """
+    slot_to_row: Dict[int, int] = {}
+    for j, idx in enumerate(idxs):
+        slot_to_row[idx] = j
+    out_idx = np.fromiter(slot_to_row.keys(), np.int32, len(slot_to_row))
+    out_rows = rows[np.fromiter(slot_to_row.values(), np.int64, len(slot_to_row))]
+    bucket = 1 << (len(out_idx) - 1).bit_length() if len(out_idx) > 1 else 1
+    if bucket > len(out_idx):
+        pad = bucket - len(out_idx)
+        out_idx = np.concatenate([out_idx, np.repeat(out_idx[-1:], pad)])
+        out_rows = np.concatenate([out_rows, np.repeat(out_rows[-1:], pad, axis=0)])
+    return out_rows, out_idx
 
 
 class InMemoryVectorStore:
@@ -61,10 +97,10 @@ class InMemoryVectorStore:
         self._free: List[int] = []  # slots freed by remove(), reused before eviction
         self._tail = 0  # slots ever occupied; grows monotonically to capacity
 
-        self._add_fn = jax.jit(
-            lambda buf, valid, vec, idx: (buf.at[idx].set(vec), valid.at[idx].set(True)),
-            donate_argnums=(0, 1),
-        )
+        self._add_fn = _scatter_one
+        # multi-row scatter for add_batch; rows/idxs are padded to power-of-two
+        # buckets so the jit only retraces per bucket, not per batch size
+        self._add_batch_fn = _scatter_rows
         self._search_fns: Dict[int, Any] = {}
 
     # -- internals ----------------------------------------------------------
@@ -122,6 +158,53 @@ class InMemoryVectorStore:
         self._seq += 1
         self.size += 1
         return key
+
+    def add_batch(
+        self,
+        vecs: np.ndarray,
+        queries: List[str],
+        responses: List[str],
+        metas: Optional[List[Optional[dict]]] = None,
+    ) -> List[int]:
+        """Insert N rows with ONE jitted scatter instead of N device updates.
+
+        Victim selection, eviction bookkeeping, and key assignment run
+        host-side in insertion order, so the result is entry-for-entry
+        identical to N sequential ``add`` calls (freed-slot reuse, tail
+        growth, and policy eviction included); only the device work is fused
+        into a single donated ``buf.at[idxs].set(rows)``.
+        """
+        n = len(queries)
+        if n == 0:
+            return []
+        metas = list(metas) if metas is not None else [None] * n
+        rows = np.asarray(vecs, np.float32).reshape(n, self.dim)
+        keys: List[int] = []
+        idxs: List[int] = []
+        for j in range(n):
+            idx = self._victim()
+            evicted = self._entries[idx]
+            if evicted is not None:
+                self._key_to_slot.pop(evicted.key, None)
+                self.size -= 1
+            if idx == self._tail:
+                self._tail += 1
+            key = self._next_key
+            self._next_key += 1
+            self._entries[idx] = Entry(key, queries[j], responses[j], dict(metas[j] or {}))
+            self._key_to_slot[key] = idx
+            self._last_access[idx] = time.monotonic()
+            self._access_count[idx] = 0
+            self._insert_seq[idx] = self._seq
+            self._seq += 1
+            self.size += 1
+            keys.append(key)
+            idxs.append(idx)
+        sel, scatter_idx = prepare_scatter(idxs, rows)
+        self._buf, self._valid = self._add_batch_fn(
+            self._buf, self._valid, jnp.asarray(sel), jnp.asarray(scatter_idx)
+        )
+        return keys
 
     def search(self, q_vec: np.ndarray, k: int = 4) -> List[Tuple[float, Entry]]:
         return self.search_batch(np.asarray(q_vec)[None], k)[0]

@@ -23,6 +23,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core.vector_store import prepare_scatter
 from repro.distributed.sharding import resolve_spec
 
 
@@ -129,6 +130,11 @@ class ShardedVectorStore:
             donate_argnums=(0, 1),
             out_shardings=(self._db_sharding, self._valid_sharding),
         )
+        self._add_many = jax.jit(
+            lambda db, valid, rows, idxs: (db.at[idxs].set(rows), valid.at[idxs].set(True)),
+            donate_argnums=(0, 1),
+            out_shardings=(self._db_sharding, self._valid_sharding),
+        )
         self.size = 0
         self.payloads: List[Optional[tuple]] = [None] * self.capacity
         self._rr = 0  # round-robin shard cursor for balanced placement
@@ -146,6 +152,30 @@ class ShardedVectorStore:
         self.payloads[idx] = (query, response)
         self.size = min(self.size + 1, self.capacity)
         return idx
+
+    def add_batch(self, vecs: np.ndarray, queries, responses) -> List[int]:
+        """N round-robin placements in ONE donated scatter into the sharded DB.
+
+        Placement order (and therefore the shard each entry lands on) matches
+        N sequential ``add`` calls; a batch larger than the capacity wraps the
+        round-robin cursor, in which case the last write to a slot wins —
+        exactly what the sequential loop would leave behind.
+        """
+        n = len(queries)
+        if n == 0:
+            return []
+        rows = np.asarray(vecs, np.float32).reshape(n, self.dim)
+        idxs: List[int] = []
+        for j in range(n):
+            idx = self._next_index()
+            self.payloads[idx] = (queries[j], responses[j])
+            idxs.append(idx)
+        self.size = min(self.size + n, self.capacity)
+        scatter_rows, scatter_idx = prepare_scatter(idxs, rows)
+        self._db, self._valid = self._add_many(
+            self._db, self._valid, jnp.asarray(scatter_rows), jnp.asarray(scatter_idx)
+        )
+        return idxs
 
     def search(self, q_vecs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         s, i = self._lookup(self._db, self._valid, jnp.asarray(q_vecs, jnp.float32))

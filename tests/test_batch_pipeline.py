@@ -162,6 +162,36 @@ def test_sharded_search_batch_matches_single_and_inmemory():
     assert [h is None for h in mixed] == [False, True, False, True, False]
 
 
+def test_sharded_add_batch_matches_sequential():
+    jax = pytest.importorskip("jax")
+    from repro.distributed.sharded_store import ShardedVectorStore
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh(shape=(len(jax.devices()),), axes=("data",))
+    dim, n = 16, 12
+    rng = np.random.default_rng(7)
+    vecs = rng.normal(size=(n, dim)).astype(np.float32)
+    qs, rs = [f"q{i}" for i in range(n)], [f"a{i}" for i in range(n)]
+    seq = ShardedVectorStore(mesh, dim=dim, capacity=8, k=3)  # wraps round-robin
+    bat = ShardedVectorStore(mesh, dim=dim, capacity=8, k=3)
+    idx_seq = [seq.add(v, q, r) for v, q, r in zip(vecs, qs, rs)]
+    idx_bat = bat.add_batch(vecs, qs, rs)
+    assert idx_seq == idx_bat
+    assert seq.payloads == bat.payloads
+    assert seq.size == bat.size and seq._rr == bat._rr
+    np.testing.assert_allclose(np.asarray(seq._db), np.asarray(bat._db), atol=0)
+    assert np.array_equal(np.asarray(seq._valid), np.asarray(bat._valid))
+    probes = vecs[-3:]
+    for row_s, row_b in zip(seq.search_batch(probes), bat.search_batch(probes)):
+        assert [(s, p) for s, p in row_s] == [(s, p) for s, p in row_b]
+    # odd-sized batches ride the power-of-two bucket padding unchanged
+    extra = rng.normal(size=(3, dim)).astype(np.float32)
+    assert bat.add_batch(extra, ["x0", "x1", "x2"], ["y0", "y1", "y2"]) == \
+        [seq.add(v, f"x{i}", f"y{i}") for i, v in enumerate(extra)]
+    assert seq.payloads == bat.payloads
+    np.testing.assert_allclose(np.asarray(seq._db), np.asarray(bat._db), atol=0)
+
+
 def test_embed_batch_matches_per_text_embedding():
     enc = ContrieverEncoder(contriever_smoke())
     texts = QUERIES[:3]  # batch of 3 pads to a bucket of 4

@@ -108,6 +108,39 @@ def test_persistence_roundtrip(tmp_path, emb):
     assert c2.lookup(Q2).response == "A2"
 
 
+def test_load_store_preserves_flags_and_class(tmp_path, emb):
+    """A save/load cycle must not silently rebuild the store with default
+    constructor flags: use_pallas (and any store subclass) survive."""
+    c = SemanticCache(emb, threshold=0.9, use_pallas=True, capacity=64)
+    c.insert(Q1, "A1")
+    c.save(str(tmp_path / "pallas"))
+    c.load_store(str(tmp_path / "pallas"))
+    assert c.store.use_pallas
+    assert c.store.capacity == 64
+    assert c.lookup(Q1).hit
+
+    class TracingStore(InMemoryVectorStore):
+        pass
+
+    c2 = SemanticCache(emb, threshold=0.9, store=TracingStore(emb.dim, 32))
+    c2.insert(Q2, "A2")
+    c2.save(str(tmp_path / "custom"))
+    c2.load_store(str(tmp_path / "custom"))
+    assert type(c2.store) is TracingStore
+    assert c2.lookup(Q2).response == "A2"
+
+
+def test_insert_batch_matches_sequential_inserts(emb):
+    a, b = SemanticCache(emb, threshold=0.9), SemanticCache(emb, threshold=0.9)
+    pairs = [(Q1, "A1"), (Q2, "A2"), (Q3, "A3")]
+    for q, ans in pairs:
+        a.insert(q, ans)
+    keys = b.insert_batch([q for q, _ in pairs], [ans for _, ans in pairs])
+    assert len(keys) == 3 and b.stats.adds == 3
+    for q, ans in pairs:
+        assert a.lookup(q).response == b.lookup(q).response == ans
+
+
 def test_warm_start(emb):
     c = SemanticCache(emb, threshold=0.9)
     c.warm_start([(Q1, "A1"), (Q2, "A2")])

@@ -131,6 +131,62 @@ def test_persistence_roundtrip_preserves_free_slots(tmp_path):
     assert {e.key for e in s2._entries if e is not None} == {kb, kc}
 
 
+def _assert_stores_identical(a, b):
+    np.testing.assert_allclose(np.asarray(a._buf), np.asarray(b._buf), atol=0)
+    assert np.array_equal(np.asarray(a._valid), np.asarray(b._valid))
+    assert [(e.key, e.query, e.response) if e else None for e in a._entries] == \
+           [(e.key, e.query, e.response) if e else None for e in b._entries]
+    assert a._key_to_slot == b._key_to_slot
+    assert a.size == b.size and a._tail == b._tail and a._next_key == b._next_key
+
+
+@pytest.mark.parametrize("eviction", ["lru", "lfu", "fifo"])
+def test_add_batch_matches_sequential_adds_under_wraparound(eviction):
+    """One multi-row scatter must leave the store entry-for-entry identical to
+    N sequential adds — including policy eviction once the batch wraps."""
+    a = InMemoryVectorStore(DIM, capacity=4, eviction=eviction)
+    b = InMemoryVectorStore(DIM, capacity=4, eviction=eviction)
+    rows = np.stack([unit(i % DIM) for i in range(11)])
+    qs = [f"q{i}" for i in range(11)]
+    rs = [f"a{i}" for i in range(11)]
+    keys_a = [a.add(v, q, r) for v, q, r in zip(rows, qs, rs)]
+    keys_b = b.add_batch(rows, qs, rs)
+    assert keys_a == keys_b
+    _assert_stores_identical(a, b)
+
+
+@pytest.mark.parametrize("eviction", ["lru", "lfu", "fifo"])
+def test_add_batch_reuses_freed_slots_before_evicting(eviction):
+    a = InMemoryVectorStore(DIM, capacity=3, eviction=eviction)
+    b = InMemoryVectorStore(DIM, capacity=3, eviction=eviction)
+    for s in (a, b):
+        k0 = s.add(unit(0), "a", "A")
+        s.add(unit(1), "b", "B")
+        s.add(unit(2), "c", "C")
+        s.remove(k0)
+    rows = np.stack([unit(3), unit(4)])
+    keys_a = [a.add(v, q, r) for v, q, r in zip(rows, ["d", "e"], ["D", "E"])]
+    keys_b = b.add_batch(rows, ["d", "e"], ["D", "E"])
+    assert keys_a == keys_b
+    _assert_stores_identical(a, b)
+    assert b._tail == 3  # freed slot recycled, no extra slot consumed
+
+
+def test_add_batch_empty_and_single():
+    s = InMemoryVectorStore(DIM, capacity=4)
+    assert s.add_batch(np.zeros((0, DIM), np.float32), [], []) == []
+    assert len(s) == 0
+    (k,) = s.add_batch(unit(1)[None], ["q"], ["a"], metas=[{"m": 1}])
+    assert s._entries[s._key_to_slot[k]].meta == {"m": 1}
+    assert keys_of(s, unit(1)) == [k]
+
+
+def test_add_batch_then_search_serves_new_entries():
+    s = InMemoryVectorStore(DIM, capacity=8)
+    s.add_batch(np.stack([unit(0), unit(1)]), ["a", "b"], ["A", "B"])
+    assert [e.response for _, e in s.search(unit(1), k=1)] == ["B"]
+
+
 def test_search_batch_updates_recency_like_search():
     s = InMemoryVectorStore(DIM, capacity=3, eviction="lru")
     k0 = s.add(unit(0), "a", "A")
