@@ -22,5 +22,12 @@ from repro.core.embeddings import (  # noqa: F401
 )
 from repro.core.generative_cache import GenerativeCache  # noqa: F401
 from repro.core.hierarchy import HierarchicalCache  # noqa: F401
+from repro.core.request import (  # noqa: F401
+    DEADLINE_EXCEEDED,
+    GENERATED,
+    HIT,
+    CacheRequest,
+    CacheResponse,
+)
 from repro.core.semantic_cache import CacheResult, GPTCacheLike, SemanticCache  # noqa: F401
 from repro.core.vector_store import Entry, InMemoryVectorStore  # noqa: F401

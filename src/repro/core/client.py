@@ -2,9 +2,16 @@
 
 Coordinates multiple LLM backends behind one interface with the cache
 integrated: embed -> cache lookup -> hit: return / miss: dispatch to a
-backend, charge its cost, insert the answer. Parallel multi-backend fan-out
-uses a thread pool (the paper's asyncio/multiprocessing parallel dispatch —
-backends here release the GIL inside jitted generation or simulate IO).
+backend, charge its cost, insert the answer.
+
+The request path itself lives in ``repro.serving.service.CacheService``
+(async-first: ``submit(CacheRequest) -> Future[CacheResponse]`` with
+priority/deadline scheduling and admission control). This client is the
+thin synchronous facade kept for compatibility: ``query`` /
+``complete_batch`` build ``CacheRequest`` envelopes and run them inline
+through ``CacheService.complete``; ``query_many`` / ``broadcast`` ride the
+service's scheduler so concurrent dispatch shares one embed forward and
+one backend fan-out.
 
 Cost optimization knobs from §3.1/§5.3: model selection (serve from cheaper
 models while the user is satisfied, escalate on dissatisfaction), max_tokens
@@ -12,12 +19,10 @@ limits, and the feedback/cost controllers servoing t_s.
 """
 from __future__ import annotations
 
+import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.adaptive import (
     DEFAULT_PRICE_TABLE,
@@ -28,6 +33,7 @@ from repro.core.adaptive import (
 )
 from repro.core.generative_cache import GenerativeCache
 from repro.core.hierarchy import HierarchicalCache
+from repro.core.request import CacheRequest, CacheResponse
 from repro.core.semantic_cache import CacheResult
 
 
@@ -149,7 +155,7 @@ class EnhancedClient:
         price_table: Optional[Dict[str, ModelCostInfo]] = None,
         quality_target: float = 0.8,
         target_cost_per_request: Optional[float] = None,
-        max_workers: int = 8,
+        max_workers: int = 8,  # kept for signature compat; the service's schedulers replaced the pool
     ):
         if policy is not None:
             self.policy = policy
@@ -172,10 +178,41 @@ class EnhancedClient:
             else None
         )
         self.stats = ClientStats()
-        self._pool = ThreadPoolExecutor(max_workers=max_workers)
+        self.max_workers = max_workers
+        self._service = None  # lazily-built CacheService (repro.serving.service)
         self._results: Dict[int, ClientResult] = {}
         self._next_id = 0
+        # client-owned locks, so several CacheService instances sharing this
+        # client cannot tear them: _state_lock guards stats/_next_id/_results,
+        # _cache_lock serializes store lookups against backfill scatters
+        self._state_lock = threading.Lock()
+        self._cache_lock = threading.RLock()
         self._preferred_level = 0  # model-selection escalation state
+
+    # -- service delegation ----------------------------------------------------
+
+    @property
+    def service(self):
+        """The CacheService every request path delegates to. Built lazily
+        (runtime import: core and serving reference each other)."""
+        if self._service is None:
+            from repro.serving.service import CacheService
+
+            with self._state_lock:  # concurrent first use must not build two
+                if self._service is None:
+                    self._service = CacheService(self)
+        return self._service
+
+    def close(self) -> None:
+        if self._service is not None:
+            self._service.close()
+
+    @staticmethod
+    def _to_client_result(resp: CacheResponse) -> ClientResult:
+        return ClientResult(
+            resp.text, resp.from_cache, resp.cache_result, resp.llm_response,
+            resp.model, resp.cost_usd, resp.latency_s, resp.request_id,
+        )
 
     # -- backend management --------------------------------------------------
 
@@ -199,7 +236,15 @@ class EnhancedClient:
             raise RuntimeError("no backends registered")
         return self._order[min(self._preferred_level, len(self._order) - 1)]
 
-    # -- main request path ------------------------------------------------------
+    def _context_for(self, request: CacheRequest, chosen: str) -> dict:
+        """ThresholdPolicy context (§2) for one request."""
+        return {
+            "model_info": self._price(chosen),
+            "max_tokens": request.max_tokens,
+            "connectivity": request.connectivity,
+        }
+
+    # -- main request path (thin sync wrappers over CacheService) ----------------
 
     def query(
         self,
@@ -213,71 +258,57 @@ class EnhancedClient:
         cache_l2: bool = True,
         connectivity: float = 1.0,
     ) -> ClientResult:
-        t0 = time.perf_counter()
-        self.stats.requests += 1
-        rid = self._next_id
-        self._next_id += 1
-        chosen = self._select_model(model)
-        ctx = {
-            "model_info": self._price(chosen),
-            "max_tokens": max_tokens,
-            "connectivity": connectivity,
-        }
+        return self.complete_requests([
+            CacheRequest(
+                prompt, model=model, max_tokens=max_tokens, temperature=temperature,
+                use_cache=use_cache, force_fresh=force_fresh, cache_l1=cache_l1,
+                cache_l2=cache_l2, connectivity=connectivity,
+            )
+        ])[0]
 
-        cache_res: Optional[CacheResult] = None
-        vec = None
-        if use_cache and (self.cache is not None or self.hierarchy is not None):
-            embedder_owner = self.hierarchy.l1 if self.hierarchy is not None else self.cache
-            vec = embedder_owner.embed(prompt)  # embed once; reused for insert
-        if use_cache and not force_fresh and (self.cache or self.hierarchy):
-            target = self.hierarchy or self.cache
-            cache_res = target.lookup(prompt, ctx, vec=vec)
-            if cache_res.hit:
-                self.stats.cache_hits += 1
-                if self.cost_ctl:
-                    self.cost_ctl.record(0.0, True)
-                out = ClientResult(
-                    cache_res.response, True, cache_res, None, "cache", 0.0,
-                    time.perf_counter() - t0, rid,
-                )
-                self._results[rid] = out
-                return out
+    def complete_requests(self, requests: Sequence[CacheRequest]) -> List[ClientResult]:
+        """Serve CacheRequests inline (one embed forward + one search +
+        one batched miss dispatch) and return in request order."""
+        return [self._to_client_result(r) for r in self.service.complete(requests)]
 
-        resp = self._generate_with_failover(chosen, prompt, max_tokens, temperature)
-        cost = self._cost_of(resp.model, resp)
-        resp.cost_usd = cost
-        self.stats.llm_calls += 1
-        self.stats.total_cost_usd += cost
-        if self.cost_ctl:
-            self.cost_ctl.record(cost, False)
-        if use_cache and (self.cache or self.hierarchy):
-            if self.hierarchy is not None:
-                self.hierarchy.insert(prompt, resp.text, cache_l1=cache_l1,
-                                      cache_l2=cache_l2, vec=vec)
-            else:
-                if cache_l1:
-                    self.cache.insert(prompt, resp.text, {"model": resp.model}, vec=vec)
-        out = ClientResult(
-            resp.text, False, cache_res, resp, resp.model, cost, time.perf_counter() - t0, rid
-        )
-        self.stats.total_latency_s += out.latency_s
-        self._results[rid] = out
-        return out
+    def complete_batch(
+        self,
+        prompts: Sequence[str],
+        model: Optional[str] = None,
+        max_tokens: int = 256,
+        temperature: float = 0.0,
+        use_cache: bool = True,
+        force_fresh: bool = False,
+        cache_l1: bool = True,
+        cache_l2: bool = True,  # privacy hints (§4); only meaningful with a hierarchy
+        connectivity: float = 1.0,
+    ) -> List[ClientResult]:
+        """Serve B prompts through the batched cache pipeline (uniform knobs;
+        build ``CacheRequest``s directly for per-request hints/priorities)."""
+        return self.complete_requests([
+            CacheRequest(
+                p, model=model, max_tokens=max_tokens, temperature=temperature,
+                use_cache=use_cache, force_fresh=force_fresh, cache_l1=cache_l1,
+                cache_l2=cache_l2, connectivity=connectivity,
+            )
+            for p in prompts
+        ])
+
+    # -- async API (futures) -----------------------------------------------------
+
+    def submit(self, request: CacheRequest):
+        """Async entry: ``Future[CacheResponse]`` that resolves at hit speed
+        for hits even when slow misses share the stream."""
+        return self.service.submit(request)
+
+    def asubmit(self, request: CacheRequest):
+        return self.service.asubmit(request)
+
+    # -- failover (used by the service's dispatch phase) -------------------------
 
     def _generate_with_failover(self, model, prompt, max_tokens, temperature) -> LLMResponse:
         """If an LLM is unresponsive, fall through to the other backends (§2)."""
-        tried = []
-        names = [model] + [n for n in self._order if n != model]
-        for name in names:
-            backend = self.backends.get(name)
-            if backend is None:
-                continue
-            try:
-                return backend.generate(prompt, max_tokens, temperature)
-            except Exception as e:  # noqa: BLE001 — failover on any backend error
-                tried.append((name, repr(e)))
-                self.stats.llm_errors += 1
-        raise ConnectionError(f"all backends failed: {tried}")
+        return self._generate_batch_with_failover(model, [prompt], max_tokens, temperature)[0]
 
     def _generate_batch_with_failover(
         self, model, prompts, max_tokens, temperature
@@ -296,106 +327,6 @@ class EnhancedClient:
                 self.stats.llm_errors += 1
         raise ConnectionError(f"all backends failed: {tried}")
 
-    # -- batched request path (embed -> search -> synthesize, then one dispatch) --
-
-    def complete_batch(
-        self,
-        prompts: Sequence[str],
-        model: Optional[str] = None,
-        max_tokens: int = 256,
-        temperature: float = 0.0,
-        use_cache: bool = True,
-        force_fresh: bool = False,
-        cache_l1: bool = True,
-        cache_l2: bool = True,  # privacy hints (§4); only meaningful with a hierarchy
-        connectivity: float = 1.0,
-    ) -> List[ClientResult]:
-        """Serve B prompts through the batched cache pipeline.
-
-        One embed forward + one store search (per hierarchy level, when one is
-        configured) covers the whole batch; hits and generative hits are
-        answered immediately and the remaining misses fan out to the backend
-        in a single batched dispatch, then backfill the cache with one
-        ``add_batch`` scatter per level. Results come back in prompt order.
-        """
-        t0 = time.perf_counter()
-        n = len(prompts)
-        if n == 0:
-            return []
-        self.stats.requests += n
-        rids = list(range(self._next_id, self._next_id + n))
-        self._next_id += n
-        chosen = self._select_model(model)
-        ctx = {
-            "model_info": self._price(chosen),
-            "max_tokens": max_tokens,
-            "connectivity": connectivity,
-        }
-
-        results: List[Optional[ClientResult]] = [None] * n
-        target = self.hierarchy if self.hierarchy is not None else self.cache
-        vecs = None
-        if use_cache and target is not None:
-            embedder_owner = self.hierarchy.l1 if self.hierarchy is not None else self.cache
-            vecs = embedder_owner.embed_batch(list(prompts))
-            if not force_fresh:
-                cache_results = target.lookup_batch(list(prompts), [ctx] * n, vecs=vecs)
-                for i, cr in enumerate(cache_results):
-                    if cr.hit:
-                        self.stats.cache_hits += 1
-                        if self.cost_ctl:
-                            self.cost_ctl.record(0.0, True)
-                        results[i] = ClientResult(
-                            cr.response, True, cr, None, "cache", 0.0,
-                            time.perf_counter() - t0, rids[i],
-                        )
-
-        miss_idx = [i for i in range(n) if results[i] is None]
-        if miss_idx:
-            # one batched dispatch for the whole miss set (async fan-out is a
-            # ROADMAP item; submitting to the shared pool just to block here
-            # would only steal a worker from query_many traffic)
-            resps = self._generate_batch_with_failover(
-                chosen, [prompts[i] for i in miss_idx], max_tokens, temperature
-            )
-            if len(resps) != len(miss_idx):  # fail fast on a short batch
-                raise RuntimeError(
-                    f"backend returned {len(resps)} responses for {len(miss_idx)} prompts"
-                )
-            for i, resp in zip(miss_idx, resps):
-                cost = self._cost_of(resp.model, resp)
-                resp.cost_usd = cost
-                self.stats.llm_calls += 1
-                self.stats.total_cost_usd += cost
-                if self.cost_ctl:
-                    self.cost_ctl.record(cost, False)
-                results[i] = ClientResult(
-                    resp.text, False, None, resp, resp.model, cost,
-                    time.perf_counter() - t0, rids[i],
-                )
-            if use_cache and target is not None:
-                miss_vecs = np.asarray(vecs)[miss_idx]
-                miss_prompts = [prompts[i] for i in miss_idx]
-                miss_texts = [results[i].text for i in miss_idx]
-                if self.hierarchy is not None:
-                    # whole miss set backfills each permitted level in one scatter
-                    self.hierarchy.insert_batch(
-                        miss_prompts, miss_texts, cache_l1=cache_l1,
-                        cache_l2=cache_l2, vecs=miss_vecs,
-                    )
-                elif cache_l1:
-                    self.cache.insert_batch(
-                        miss_prompts, miss_texts,
-                        metas=[{"model": results[i].model} for i in miss_idx],
-                        vecs=miss_vecs,
-                    )
-
-        for r in results:
-            if not r.from_cache:  # match query(): hits don't accrue latency
-                self.stats.total_latency_s += r.latency_s
-            self._results[r.request_id] = r
-        return results  # type: ignore[return-value]
-
     # -- parallel multi-LLM dispatch (§5.2) ---------------------------------------
 
     def query_many(
@@ -408,16 +339,22 @@ class EnhancedClient:
         models = models or [None] * len(prompts)
         if not parallel:
             return [self.query(p, m, **kwargs) for p, m in zip(prompts, models)]
-        futures = [self._pool.submit(self.query, p, m, **kwargs) for p, m in zip(prompts, models)]
-        return [f.result() for f in futures]
+        # concurrent requests ride the service scheduler: one admitted batch
+        # shares one embed forward and one backend fan-out per model group
+        # (submit_many blocks for capacity instead of shedding, so a bulk
+        # sync call never abandons already-submitted work)
+        futures = self.service.submit_many(
+            [CacheRequest(p, model=m, **kwargs) for p, m in zip(prompts, models)]
+        )
+        return [self._to_client_result(f.result()) for f in futures]
 
     def broadcast(self, prompt: str, models: Optional[Sequence[str]] = None, **kwargs) -> Dict[str, ClientResult]:
         """Ask several LLMs the same question concurrently (§5.2)."""
         models = list(models or self._order)
-        futures = {
-            m: self._pool.submit(self.query, prompt, m, use_cache=False, **kwargs) for m in models
-        }
-        return {m: f.result() for m, f in futures.items()}
+        futures = self.service.submit_many(
+            [CacheRequest(prompt, model=m, use_cache=False, **kwargs) for m in models]
+        )
+        return {m: self._to_client_result(f.result()) for m, f in zip(models, futures)}
 
     # -- feedback (§3.1) ------------------------------------------------------------
 

@@ -153,9 +153,13 @@ class HierarchicalCache:
             thresholds = np.asarray(
                 [cache.effective_threshold(q, c) for q, c in zip(queries, contexts)]
             )
-            ts = time.perf_counter()
-            matches = cache.store.search_batch(vecs, k=max(getattr(cache, "max_sources", 4), 1))
-            cache.stats.search_time_s += time.perf_counter() - ts
+            # touch=False: every level is probed speculatively here, but the
+            # sequential walk stops at the winning level — recency/frequency
+            # bookkeeping is applied after winners resolve, only on levels
+            # the walk would actually have searched (eviction hygiene)
+            matches = cache.search_candidates(
+                vecs, k=max(getattr(cache, "max_sources", 4), 1), touch=False
+            )
             # lazy_synth: only levels that win a query synthesize (below)
             results, _ = cache._decide_batch(queries, thresholds, matches, lazy_synth=True)
             level_results.append(results)
@@ -204,6 +208,15 @@ class HierarchicalCache:
                     cache.stats.hits -= 1
                     if results[i].generative:
                         cache.stats.generative_hits -= 1
+
+        # eviction hygiene: level li's LRU/LFU counters only see query i's
+        # candidates when the sequential walk would have probed level li,
+        # i.e. every level above it missed (winner_idx[i] >= li)
+        for li, ((_, cache), matches_l) in enumerate(zip(levels, level_matches)):
+            cache.touch(
+                [e.key for i in range(n) if winner_idx[i] >= li
+                 for _, e in matches_l[i] if hasattr(e, "key")]
+            )
 
         if self.generative_across_levels and len(levels) > 1:
             for i in range(n):

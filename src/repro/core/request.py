@@ -1,0 +1,60 @@
+"""Request/response envelope for the cache serving path (§5).
+
+``CacheRequest`` replaces the kwargs sprawl that was duplicated across
+``EnhancedClient.query`` / ``complete_batch`` / ``query_many`` /
+``broadcast`` with one dataclass carrying every per-request knob — the
+cache hints (``use_cache``, ``force_fresh``, the §4 privacy hints) plus the
+async-serving fields the scheduler acts on (``priority``, ``deadline_s``).
+
+``CacheResponse`` is the typed result every submitted future resolves
+with. Hits and generated answers carry text; a miss whose deadline expired
+in queue resolves with ``status == DEADLINE_EXCEEDED`` and ``text=None``
+instead of generating — the caller gets a typed result, never a silent
+stall behind a slow backend.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Any, Dict, Optional
+
+if TYPE_CHECKING:  # typing only — avoids a runtime cycle with repro.core.client
+    from repro.core.client import LLMResponse
+    from repro.core.semantic_cache import CacheResult
+
+# CacheResponse.status values
+HIT = "hit"  # served from cache (semantic or generative)
+GENERATED = "generated"  # miss: a backend generated the answer
+DEADLINE_EXCEEDED = "deadline_exceeded"  # miss expired in queue; no backend call
+
+
+@dataclass
+class CacheRequest:
+    prompt: str
+    model: Optional[str] = None  # None -> the client's escalation ladder picks
+    max_tokens: int = 256
+    temperature: float = 0.0
+    use_cache: bool = True
+    force_fresh: bool = False  # skip lookup, still insert the fresh answer (§5.2)
+    cache_l1: bool = True  # privacy hints (§4); cache_l2 only matters with a hierarchy
+    cache_l2: bool = True
+    connectivity: float = 1.0
+    priority: int = 0  # higher is scheduled sooner
+    deadline_s: Optional[float] = None  # relative to submit; expired misses don't generate
+    metadata: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class CacheResponse:
+    text: Optional[str]
+    status: str  # HIT | GENERATED | DEADLINE_EXCEEDED
+    from_cache: bool
+    cache_result: Optional["CacheResult"]
+    llm_response: Optional["LLMResponse"]
+    model: str
+    cost_usd: float
+    latency_s: float
+    request_id: int
+
+    @property
+    def expired(self) -> bool:
+        return self.status == DEADLINE_EXCEEDED

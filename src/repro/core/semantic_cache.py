@@ -91,6 +91,29 @@ class SemanticCache:
         self.stats.embed_time_s += time.perf_counter() - t0
         return v
 
+    # -- candidate search (shared with the hierarchy) ----------------------------
+
+    def search_candidates(
+        self, vecs: np.ndarray, k: int, touch: bool = True
+    ) -> List[List[Tuple[float, Entry]]]:
+        """One timed store search for the whole batch. ``touch=False`` defers
+        LRU/LFU bookkeeping to the caller — the hierarchy probes every level
+        speculatively and bumps only levels a sequential walk would reach."""
+        t0 = time.perf_counter()
+        try:
+            matches = self.store.search_batch(np.asarray(vecs), k=k, touch=touch)
+        except TypeError:  # store without deferred-bookkeeping support
+            matches = self.store.search_batch(np.asarray(vecs), k=k)
+        self.stats.search_time_s += time.perf_counter() - t0
+        return matches
+
+    def touch(self, keys) -> None:
+        """Apply deferred recency/frequency bookkeeping (no-op for stores
+        without eviction counters, e.g. the sharded store)."""
+        touch_keys = getattr(self.store, "touch_keys", None)
+        if touch_keys is not None and keys:
+            touch_keys(keys)
+
     # -- lookup / insert --------------------------------------------------------
 
     def lookup(

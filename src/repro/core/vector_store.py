@@ -46,6 +46,24 @@ def _scatter_rows(buf, valid, rows, idxs):
     return buf.at[idxs].set(rows), valid.at[idxs].set(True)
 
 
+def pad_to_bucket(rows: np.ndarray) -> Tuple[np.ndarray, int]:
+    """Zero-pad a [N, D] block to the next power-of-two row bucket.
+
+    Serving drains variable-size micro-batches; an unbucketed jit would
+    recompile per distinct N (stalling the lookup scheduler for hundreds of
+    ms at each new size). Returns the padded block and the original N so the
+    caller can slice the result back down. Shared by the in-memory and
+    sharded search paths.
+    """
+    n = rows.shape[0]
+    bucket = 1 << (n - 1).bit_length() if n > 1 else 1
+    if bucket > n:
+        rows = np.concatenate(
+            [rows, np.zeros((bucket - n, *rows.shape[1:]), rows.dtype)]
+        )
+    return rows, n
+
+
 def prepare_scatter(idxs: List[int], rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     """Build the (rows, idxs) update for a multi-row ``buf.at[idxs].set``.
 
@@ -209,12 +227,22 @@ class InMemoryVectorStore:
     def search(self, q_vec: np.ndarray, k: int = 4) -> List[Tuple[float, Entry]]:
         return self.search_batch(np.asarray(q_vec)[None], k)[0]
 
-    def search_batch(self, q_vecs: np.ndarray, k: int = 4) -> List[List[Tuple[float, Entry]]]:
+    def search_batch(
+        self, q_vecs: np.ndarray, k: int = 4, touch: bool = True
+    ) -> List[List[Tuple[float, Entry]]]:
+        """Top-k candidates for Q queries in one device dispatch.
+
+        ``touch=False`` returns candidates without bumping LRU/LFU
+        recency/frequency counters — callers that search speculatively (the
+        hierarchy probes every level up front) apply ``touch_keys`` later,
+        only on the levels a sequential walk would actually have probed.
+        """
         if self.size == 0:
             return [[] for _ in range(len(q_vecs))]
         k_eff = min(k, self.capacity)
-        s, idx = self._search_fn(k_eff)(self._buf, self._valid, jnp.asarray(q_vecs, jnp.float32))
-        s, idx = np.asarray(s), np.asarray(idx)
+        q, n_q = pad_to_bucket(np.asarray(q_vecs, np.float32))
+        s, idx = self._search_fn(k_eff)(self._buf, self._valid, jnp.asarray(q))
+        s, idx = np.asarray(s)[:n_q], np.asarray(idx)[:n_q]
         now = time.monotonic()
         out: List[List[Tuple[float, Entry]]] = []
         for srow, irow in zip(s, idx):
@@ -225,11 +253,23 @@ class InMemoryVectorStore:
                     continue
                 # same recency/frequency bookkeeping as the single-query path,
                 # so eviction behaves identically under batched lookups
-                self._last_access[int(i)] = now
-                self._access_count[int(i)] += 1
+                if touch:
+                    self._last_access[int(i)] = now
+                    self._access_count[int(i)] += 1
                 row.append((float(sc), e))
             out.append(row)
         return out
+
+    def touch_keys(self, keys) -> None:
+        """Deferred LRU/LFU bookkeeping: one bump per occurrence, matching
+        what per-query sequential probes would have recorded. Keys evicted
+        since the search are skipped."""
+        now = time.monotonic()
+        for key in keys:
+            idx = self._key_to_slot.get(key)
+            if idx is not None:
+                self._last_access[idx] = now
+                self._access_count[idx] += 1
 
     def remove(self, key: int) -> bool:
         idx = self._key_to_slot.pop(key, None)

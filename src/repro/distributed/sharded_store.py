@@ -15,7 +15,7 @@ score matrix. This is the step the dry-run lowers on the production mesh
 from __future__ import annotations
 
 import functools
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.vector_store import prepare_scatter
+from repro.core.vector_store import pad_to_bucket, prepare_scatter
 from repro.distributed.sharding import resolve_spec
 
 
@@ -135,63 +135,116 @@ class ShardedVectorStore:
             donate_argnums=(0, 1),
             out_shardings=(self._db_sharding, self._valid_sharding),
         )
+        self._invalidate = jax.jit(
+            lambda valid, idx: valid.at[idx].set(False),
+            donate_argnums=(0,),
+            out_shardings=self._valid_sharding,
+        )
         self.size = 0
         self.payloads: List[Optional[tuple]] = [None] * self.capacity
         self._rr = 0  # round-robin shard cursor for balanced placement
+        # key -> slot map + freed-slot reuse (ported from InMemoryVectorStore)
+        # so sharded caches can evict: remove() frees the slot, the next add
+        # reclaims it before the round-robin cursor advances
+        self._next_key = 0
+        self._key_to_slot: Dict[int, int] = {}
+        self._slot_key: List[Optional[int]] = [None] * self.capacity
+        self._free: List[int] = []
 
     def _next_index(self) -> int:
+        if self._free:
+            return self._free.pop()
         cap_local = self.capacity // self.n_shards
         shard = self._rr % self.n_shards
         within = (self._rr // self.n_shards) % cap_local
         self._rr += 1
         return shard * cap_local + within
 
+    def _claim_slot(self, idx: int, query: str, response: str) -> int:
+        """Host-side bookkeeping for one placement (shared by add/add_batch)."""
+        old = self._slot_key[idx]
+        if old is not None:  # round-robin wrap overwrote a live entry
+            self._key_to_slot.pop(old, None)
+        else:
+            self.size += 1
+        key = self._next_key
+        self._next_key += 1
+        self.payloads[idx] = (query, response)
+        self._slot_key[idx] = key
+        self._key_to_slot[key] = idx
+        return key
+
     def add(self, vec: np.ndarray, query: str, response: str) -> int:
         idx = self._next_index()
+        key = self._claim_slot(idx, query, response)
         self._db, self._valid = self._add(self._db, self._valid, jnp.asarray(vec, jnp.float32), idx)
-        self.payloads[idx] = (query, response)
-        self.size = min(self.size + 1, self.capacity)
-        return idx
+        return key
 
     def add_batch(self, vecs: np.ndarray, queries, responses) -> List[int]:
         """N round-robin placements in ONE donated scatter into the sharded DB.
 
         Placement order (and therefore the shard each entry lands on) matches
-        N sequential ``add`` calls; a batch larger than the capacity wraps the
-        round-robin cursor, in which case the last write to a slot wins —
-        exactly what the sequential loop would leave behind.
+        N sequential ``add`` calls, freed-slot reuse included; a batch larger
+        than the capacity wraps the round-robin cursor, in which case the
+        last write to a slot wins — exactly what the sequential loop would
+        leave behind.
         """
         n = len(queries)
         if n == 0:
             return []
         rows = np.asarray(vecs, np.float32).reshape(n, self.dim)
         idxs: List[int] = []
+        keys: List[int] = []
         for j in range(n):
             idx = self._next_index()
-            self.payloads[idx] = (queries[j], responses[j])
+            keys.append(self._claim_slot(idx, queries[j], responses[j]))
             idxs.append(idx)
-        self.size = min(self.size + n, self.capacity)
         scatter_rows, scatter_idx = prepare_scatter(idxs, rows)
         self._db, self._valid = self._add_many(
             self._db, self._valid, jnp.asarray(scatter_rows), jnp.asarray(scatter_idx)
         )
-        return idxs
+        return keys
+
+    def remove(self, key: int) -> bool:
+        """Evict one entry: clears its validity lane on-device and frees the
+        slot for reuse by the next add (before the cursor advances)."""
+        idx = self._key_to_slot.pop(key, None)
+        if idx is None:
+            return False
+        self.payloads[idx] = None
+        self._slot_key[idx] = None
+        self._valid = self._invalidate(self._valid, idx)
+        self._free.append(idx)
+        self.size -= 1
+        return True
+
+    def __len__(self) -> int:
+        return self.size
 
     def search(self, q_vecs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        s, i = self._lookup(self._db, self._valid, jnp.asarray(q_vecs, jnp.float32))
-        return np.asarray(s), np.asarray(i)
+        # Q padded to a power-of-two bucket so variable serving batch sizes
+        # reuse O(log Q) compiled variants instead of retracing per size
+        q, n_q = pad_to_bucket(np.atleast_2d(np.asarray(q_vecs, np.float32)))
+        s, i = self._lookup(self._db, self._valid, jnp.asarray(q))
+        return np.asarray(s)[:n_q], np.asarray(i)[:n_q]
 
-    def search_batch(self, q_vecs: np.ndarray) -> List[List[Tuple[float, tuple]]]:
+    def search_batch(
+        self, q_vecs: np.ndarray, k: Optional[int] = None, touch: bool = True
+    ) -> List[List[Tuple[float, tuple]]]:
         """Batched payload-joined lookup for Q queries in ONE shard_map dot.
 
         The replicated [Q, D] query block rides the same per-shard MXU matmul
         and hierarchical candidate exchange as a single query — only the
         all-gathered [Q, k] candidate sets grow with Q. Returns, per query,
         the finite (score, (query, response)) candidates in score order, i.e.
-        the same join ``InMemoryVectorStore.search_batch`` performs.
+        the same join ``InMemoryVectorStore.search_batch`` performs. ``k``
+        caps the candidates per query (at most the configured search k);
+        ``touch`` is accepted for signature uniformity — the sharded store
+        keeps no recency/frequency counters yet.
         """
         q = np.atleast_2d(np.asarray(q_vecs, np.float32))
         s, idx = self.search(q)
+        k_eff = self.k if k is None else min(k, self.k)
         out: List[List[Tuple[float, tuple]]] = []
         for srow, irow in zip(s, idx):
             row = []
@@ -199,7 +252,7 @@ class ShardedVectorStore:
                 payload = self.payloads[int(i)] if 0 <= int(i) < self.capacity else None
                 if np.isfinite(sc) and payload is not None:
                     row.append((float(sc), payload))
-            out.append(row)
+            out.append(row[:k_eff])
         return out
 
     def lookup_batch(

@@ -4,14 +4,19 @@ Runs batched requests (paraphrase-clustered synthetic queries) through the
 full stack — embed -> semantic/generative lookup -> miss -> continuous-
 batching engine -> insert — and prints hit-rate / latency / cost stats.
 
-With ``--coalesce`` the driver simulates concurrent users: requests arrive
-from a thread pool and the BatchCoalescer micro-batches them into
-``EnhancedClient.complete_batch`` calls, so one embed forward + one store
-search + one engine pass covers each admitted batch.
+With ``--coalesce`` the driver simulates concurrent users against the
+async-first ``CacheService``: each user submits a ``CacheRequest`` and gets
+a future; the priority-aware front scheduler micro-batches the lookups (one
+embed forward + one store search per admitted batch), hit futures resolve
+immediately, and the miss residue coalesces by priority into engine passes
+in the background. ``--deadline-ms`` attaches a deadline to every request:
+misses that would outwait it resolve with a typed ``deadline_exceeded``
+response instead of generating.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --requests 40
   PYTHONPATH=src python -m repro.launch.serve --coalesce --coalesce-batch 8
+  PYTHONPATH=src python -m repro.launch.serve --coalesce --deadline-ms 2000
 """
 from __future__ import annotations
 
@@ -20,11 +25,11 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 
 from repro.configs import get_config
-from repro.core import EnhancedClient, GenerativeCache, NgramHashEmbedder
+from repro.core import CacheRequest, EnhancedClient, GenerativeCache, NgramHashEmbedder
 from repro.core.adaptive import ModelCostInfo
 from repro.data.synthetic import squad_like_qa
-from repro.serving.coalescer import BatchCoalescer
 from repro.serving.engine import ModelBackend, ServingEngine
+from repro.serving.service import CacheService
 
 
 def main(argv=None):
@@ -35,11 +40,13 @@ def main(argv=None):
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--threshold", type=float, default=0.6)
     ap.add_argument("--coalesce", action="store_true",
-                    help="serve concurrent requests through the batched pipeline")
+                    help="serve concurrent requests through the async CacheService")
     ap.add_argument("--coalesce-batch", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=4.0)
     ap.add_argument("--concurrency", type=int, default=16,
                     help="simulated concurrent users (--coalesce only)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request deadline; 0 disables (--coalesce only)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=True)
@@ -57,17 +64,28 @@ def main(argv=None):
 
     t0 = time.perf_counter()
     if args.coalesce:
-        coalescer = BatchCoalescer(
-            lambda prompts: client.complete_batch(prompts, max_tokens=args.max_new_tokens),
-            max_batch=args.coalesce_batch, max_wait_ms=args.max_wait_ms,
+        service = CacheService(
+            client, max_batch=args.coalesce_batch, max_wait_ms=args.max_wait_ms
         )
-        with coalescer, ThreadPoolExecutor(max_workers=args.concurrency) as users:
-            results = list(users.map(coalescer, queries))
-        for i, (q, r) in enumerate(zip(queries, results)):
-            tag = "HIT " if r.from_cache else "MISS"
-            print(f"[{i:3d}] {tag} {r.latency_s*1e3:7.1f} ms  {q[:60]}")
-        cst = coalescer.stats
-        print(f"coalescer: batches={cst.batches} avg_batch={cst.avg_batch:.1f}")
+        deadline_s = args.deadline_ms / 1e3 if args.deadline_ms > 0 else None
+
+        def one(q: str):
+            t = time.perf_counter()
+            resp = service.submit(
+                CacheRequest(q, max_tokens=args.max_new_tokens, deadline_s=deadline_s)
+            ).result()
+            return resp, time.perf_counter() - t
+
+        with service, ThreadPoolExecutor(max_workers=args.concurrency) as users:
+            results = list(users.map(one, queries))
+        for i, (q, (r, wall)) in enumerate(zip(queries, results)):
+            tag = {"hit": "HIT ", "generated": "MISS", "deadline_exceeded": "EXPD"}[r.status]
+            print(f"[{i:3d}] {tag} {wall*1e3:7.1f} ms  {q[:60]}")
+        sst = service.stats
+        lk, dp = service.scheduler_stats
+        print(f"service: hits={sst.hits} generated={sst.generated} expired={sst.expired} "
+              f"rejected={sst.rejected} lookup_avg_batch={lk.avg_batch:.1f} "
+              f"dispatch_avg_batch={dp.avg_batch if dp else 0.0:.1f}")
     else:
         for i, q in enumerate(queries):
             r = client.query(q, max_tokens=args.max_new_tokens)

@@ -1,3 +1,10 @@
-from repro.serving.coalescer import BatchCoalescer, CoalescerStats  # noqa: F401
+from repro.serving.coalescer import (  # noqa: F401
+    AdmissionRejected,
+    BatchCoalescer,
+    CoalescerStats,
+    DeadlineExceeded,
+    ServiceClosed,
+)
 from repro.serving.engine import ServingEngine, ModelBackend  # noqa: F401
 from repro.serving.sampler import sample_tokens  # noqa: F401
+from repro.serving.service import CacheService, ServiceStats  # noqa: F401

@@ -12,6 +12,7 @@ with GenerativeCache — embed -> lookup -> miss -> engine.generate -> insert.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -186,6 +187,9 @@ class ModelBackend(LLMBackend):
         self.name = name
         self.engine = engine
         self.max_prompt_tokens = max_prompt_tokens
+        # the engine's slot/cache state is not reentrant: the CacheService
+        # dispatcher and any sync caller must serialize their batches
+        self._lock = threading.Lock()
 
     def _tokenize(self, prompt: str) -> np.ndarray:
         import hashlib
@@ -216,7 +220,8 @@ class ModelBackend(LLMBackend):
         if self.engine.cfg.modality == "audio":
             raise NotImplementedError("audio backends serve token streams, not text prompts")
         toks = [self._tokenize(p) for p in prompts]
-        outs = self.engine.generate(toks, max_new_tokens=max_tokens, temperature=temperature)
+        with self._lock:
+            outs = self.engine.generate(toks, max_new_tokens=max_tokens, temperature=temperature)
         latency = time.perf_counter() - t0
         return [
             LLMResponse(" ".join(f"t{t}" for t in out), self.name,

@@ -1,0 +1,459 @@
+"""Async-first cache serving layer — the paper's latency story as an API.
+
+The paper's headline numbers are a latency *gap*: hits answer in
+milliseconds while misses wait seconds-to-minutes on a backend. A blocking
+batch call erases the gap — a hit sharing a batch with one slow miss
+returns at miss latency. ``CacheService`` keeps it:
+
+    service.submit(CacheRequest(...)) -> concurrent.futures.Future[CacheResponse]
+
+A priority-aware front scheduler micro-batches submissions through the
+batched embed -> search -> decide stage (one embed forward + one search
+dispatch per admitted batch, exactly like ``complete_batch``); hit and
+generative-hit futures resolve right there. The miss residue is forwarded
+— original future, priority, and deadline intact — to a background
+dispatcher that coalesces misses by priority, resolves deadline-expired
+ones with a typed ``DEADLINE_EXCEEDED`` response instead of generating,
+and fans each (model, max_tokens, temperature) group to the backend in one
+``generate_batch``, backfilling the cache with one scatter per level.
+
+Backpressure is explicit: ``submit`` fast-fails with ``AdmissionRejected``
+once ``max_inflight`` futures are unresolved, and raises ``ServiceClosed``
+after ``close()`` (which drains both schedulers so every accepted future
+resolves).
+
+``complete(requests)`` runs the same two phases inline in the caller's
+thread — the compatibility path behind ``EnhancedClient.query`` /
+``complete_batch``, which are now thin sync wrappers. ``asubmit`` /
+``acomplete`` wrap the futures for asyncio callers.
+"""
+from __future__ import annotations
+
+import asyncio
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.client import ClientResult, EnhancedClient, LLMResponse
+from repro.core.request import (
+    DEADLINE_EXCEEDED,
+    GENERATED,
+    HIT,
+    CacheRequest,
+    CacheResponse,
+)
+from repro.serving.coalescer import (  # noqa: F401 — re-exported service errors
+    AdmissionRejected,
+    BatchCoalescer,
+    DeadlineExceeded,
+    ServiceClosed,
+)
+
+
+@dataclass
+class _Pending:
+    """A submitted request in flight through the service."""
+
+    request: CacheRequest
+    rid: int
+    chosen: str  # backend resolved at submit (escalation ladder state then)
+    t_submit: float
+    deadline_t: Optional[float]  # absolute perf_counter stamp, None = no deadline
+    vec: Optional[np.ndarray] = None  # set by the lookup stage, reused at backfill
+
+
+@dataclass
+class ServiceStats:
+    submitted: int = 0
+    hits: int = 0
+    generated: int = 0
+    expired: int = 0
+    rejected: int = 0
+
+
+class CacheService:
+    def __init__(
+        self,
+        client: EnhancedClient,
+        *,
+        max_batch: int = 8,
+        max_wait_ms: float = 2.0,
+        dispatch_batch: Optional[int] = None,
+        dispatch_wait_ms: Optional[float] = None,
+        max_inflight: int = 1024,
+    ):
+        self.client = client
+        self.max_batch = max_batch
+        self.max_wait_ms = max_wait_ms
+        self.dispatch_batch = dispatch_batch if dispatch_batch is not None else max_batch
+        self.dispatch_wait_ms = (
+            dispatch_wait_ms if dispatch_wait_ms is not None else max_wait_ms
+        )
+        self.max_inflight = max_inflight
+        self.stats = ServiceStats()
+        self._inflight = 0
+        self._lock = threading.Lock()  # service counters + lifecycle
+        self._capacity = threading.Condition(self._lock)  # blocking-submit waits
+        # client-owned: every service sharing this client serializes its store
+        # lookups against backfill scatters through the same lock
+        self._cache_lock = client._cache_lock
+        self._closed = False
+        # schedulers start lazily: the sync complete() path never spawns threads
+        self._lookup_sched: Optional[BatchCoalescer] = None
+        self._miss_sched: Optional[BatchCoalescer] = None
+
+    # -- async API -------------------------------------------------------------
+
+    def submit(self, request: CacheRequest, *, block: bool = False) -> "Future[CacheResponse]":
+        """Admit one request; the returned future resolves with a typed
+        ``CacheResponse`` (hit in milliseconds, generated at backend pace,
+        or ``DEADLINE_EXCEEDED``). Raises ``AdmissionRejected`` when the
+        in-flight budget is spent (``block=True`` waits for capacity
+        instead), ``ServiceClosed`` after ``close``."""
+        client = self.client
+        with self._lock:
+            while block and self._inflight >= self.max_inflight and not self._closed:
+                self._capacity.wait()
+            if self._closed:
+                raise ServiceClosed("service is closed")
+            if self._inflight >= self.max_inflight:
+                self.stats.rejected += 1
+                raise AdmissionRejected(
+                    f"in-flight budget exhausted ({self.max_inflight} requests)"
+                )
+            self._inflight += 1
+            self.stats.submitted += 1
+            # under the same lock as the closed-check: close() cannot slip in
+            # between admission and scheduler startup and strand the request
+            self._ensure_started()
+        with client._state_lock:
+            client.stats.requests += 1
+            rid = client._next_id
+            client._next_id += 1
+        pending = self._pending(request, rid, time.perf_counter())
+        try:
+            fut = self._lookup_sched.submit(pending, priority=request.priority)
+        except BaseException:
+            self._release(None)
+            raise
+        fut.add_done_callback(self._release)
+        return fut
+
+    def submit_many(self, requests: Sequence[CacheRequest]) -> List["Future[CacheResponse]"]:
+        """Bulk submit that blocks for capacity instead of shedding — the
+        sync helpers (``query_many``/``broadcast``) must never abandon
+        futures they already hold. ``ServiceClosed`` still propagates."""
+        return [self.submit(r, block=True) for r in requests]
+
+    def asubmit(self, request: CacheRequest) -> "asyncio.Future[CacheResponse]":
+        """Awaitable ``submit`` for asyncio callers (needs a running loop)."""
+        return asyncio.wrap_future(self.submit(request))
+
+    async def acomplete(
+        self, request: Union[CacheRequest, str], **hints
+    ) -> CacheResponse:
+        """One-shot asyncio facade: ``await service.acomplete("prompt")``."""
+        if not isinstance(request, CacheRequest):
+            request = CacheRequest(request, **hints)
+        return await self.asubmit(request)
+
+    # -- sync compatibility path ------------------------------------------------
+
+    def complete(self, requests: Sequence[CacheRequest]) -> List[CacheResponse]:
+        """Serve a batch inline in the caller's thread (no scheduler hop):
+        the same lookup + dispatch phases, resolved before returning. This
+        is the path behind ``EnhancedClient.query`` / ``complete_batch``.
+
+        Misses dispatch in (model, max_tokens, temperature) groups; if one
+        group's generation fails on every backend, its error raises after
+        earlier groups already generated and backfilled (their results are
+        dropped — the stats and the cache keep them, matching what a retry
+        would then hit)."""
+        reqs = list(requests)
+        n = len(reqs)
+        if n == 0:
+            return []
+        client = self.client
+        t0 = time.perf_counter()
+        with self._lock:
+            if self._closed:
+                raise ServiceClosed("service is closed")
+            self.stats.submitted += n
+        with client._state_lock:
+            rid0 = client._next_id
+            client._next_id += n
+            client.stats.requests += n
+        pendings = [self._pending(r, rid0 + i, t0) for i, r in enumerate(reqs)]
+        with self._cache_lock:
+            responses = self._lookup_phase(pendings)
+        miss = [i for i in range(n) if responses[i] is None]
+        if miss:
+            outcomes = self._dispatch_phase([pendings[i] for i in miss])
+            for i, out in zip(miss, outcomes):
+                if isinstance(out, Exception):
+                    raise out
+                responses[i] = out
+        return responses  # type: ignore[return-value]
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def close(self, timeout: Optional[float] = 10.0) -> None:
+        """Stop admissions and drain: lookup first (misses forward to the
+        dispatcher), then the dispatcher — every accepted future resolves."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._capacity.notify_all()  # wake blocking submitters -> ServiceClosed
+        if self._lookup_sched is not None:
+            self._lookup_sched.close(timeout=timeout)
+        if self._miss_sched is not None:
+            self._miss_sched.close(timeout=timeout)
+
+    def __enter__(self) -> "CacheService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def scheduler_stats(self) -> Tuple:
+        """(lookup, dispatch) CoalescerStats, None before the first submit."""
+        return (
+            self._lookup_sched.stats if self._lookup_sched else None,
+            self._miss_sched.stats if self._miss_sched else None,
+        )
+
+    # -- internals --------------------------------------------------------------
+
+    def _pending(self, request: CacheRequest, rid: int, t_submit: float) -> _Pending:
+        deadline_t = (
+            None if request.deadline_s is None else t_submit + request.deadline_s
+        )
+        return _Pending(
+            request, rid, self.client._select_model(request.model), t_submit, deadline_t
+        )
+
+    def _release(self, _fut: Optional[Future]) -> None:
+        with self._lock:
+            self._inflight -= 1
+            self._capacity.notify_all()
+
+    def _ensure_started(self) -> None:
+        """Start the schedulers on first use (caller holds ``self._lock``).
+        The sync ``complete`` path never calls this, so it spawns no threads."""
+        if self._lookup_sched is not None:
+            return
+        self._miss_sched = BatchCoalescer(
+            self._run_dispatch,
+            max_batch=self.dispatch_batch,
+            max_wait_ms=self.dispatch_wait_ms,
+            max_queue=0,  # max_inflight already bounds admissions
+            owns_futures=True,
+            on_expired=self._expire,
+        )
+        self._lookup_sched = BatchCoalescer(
+            self._run_lookup,
+            max_batch=self.max_batch,
+            max_wait_ms=self.max_wait_ms,
+            max_queue=0,
+            owns_futures=True,
+        )
+
+    def _expire(self, pending: _Pending, fut: Future) -> None:
+        """Scheduler hook: a queued miss outlived its deadline — resolve the
+        future with the typed response; the backend is never called."""
+        with self._lock:
+            self.stats.expired += 1
+        resp = CacheResponse(
+            None, DEADLINE_EXCEEDED, False, None, None, pending.chosen, 0.0,
+            time.perf_counter() - pending.t_submit, pending.rid,
+        )
+        if not fut.done():
+            fut.set_result(resp)
+
+    # -- phase A: batched embed -> search -> decide ------------------------------
+
+    def _run_lookup(self, pendings: List[_Pending], futs: List[Future]) -> None:
+        with self._cache_lock:
+            responses = self._lookup_phase(pendings)
+        for pending, fut, resp in zip(pendings, futs, responses):
+            if resp is not None:  # hit/generative hit: resolve NOW
+                if not fut.done():
+                    fut.set_result(resp)
+            else:  # miss residue: original future rides to the dispatcher
+                self._miss_sched.submit(
+                    pending,
+                    priority=pending.request.priority,
+                    deadline_t=pending.deadline_t,
+                    future=fut,
+                )
+
+    def _lookup_phase(
+        self, pendings: List[_Pending]
+    ) -> List[Optional[CacheResponse]]:
+        """One embed forward + one batched lookup for the admitted batch;
+        returns a response per hit and None for each miss (vec stashed on
+        the pending for the backfill scatter)."""
+        client = self.client
+        n = len(pendings)
+        responses: List[Optional[CacheResponse]] = [None] * n
+        target = client.hierarchy if client.hierarchy is not None else client.cache
+        if target is None:
+            return responses
+        owner = client.hierarchy.l1 if client.hierarchy is not None else client.cache
+        embed_idx = [i for i, p in enumerate(pendings) if p.request.use_cache]
+        if not embed_idx:
+            return responses
+        vecs = np.asarray(
+            owner.embed_batch([pendings[i].request.prompt for i in embed_idx])
+        )
+        for j, i in enumerate(embed_idx):
+            pendings[i].vec = vecs[j]
+        lk = [i for i in embed_idx if not pendings[i].request.force_fresh]
+        if not lk:
+            return responses
+        cache_results = target.lookup_batch(
+            [pendings[i].request.prompt for i in lk],
+            [client._context_for(pendings[i].request, pendings[i].chosen) for i in lk],
+            vecs=np.stack([pendings[i].vec for i in lk]),
+        )
+        now = time.perf_counter()
+        for i, cr in zip(lk, cache_results):
+            if not cr.hit:
+                continue
+            p = pendings[i]
+            resp = CacheResponse(
+                cr.response, HIT, True, cr, None, "cache", 0.0, now - p.t_submit, p.rid
+            )
+            with self._lock:
+                self.stats.hits += 1
+            with client._state_lock:
+                client.stats.cache_hits += 1
+                client._results[p.rid] = client._to_client_result(resp)
+                if client.cost_ctl:
+                    client.cost_ctl.record(0.0, True)
+            responses[i] = resp
+        return responses
+
+    # -- phase B: miss dispatch + backfill ---------------------------------------
+
+    def _run_dispatch(self, pendings: List[_Pending], futs: List[Future]) -> None:
+        outcomes = self._dispatch_phase(pendings)
+        for fut, out in zip(futs, outcomes):
+            if fut.done():
+                continue
+            if isinstance(out, Exception):
+                fut.set_exception(out)
+            else:
+                fut.set_result(out)
+
+    def _dispatch_phase(
+        self, pendings: List[_Pending]
+    ) -> List[Union[CacheResponse, Exception]]:
+        """Generate the miss residue: expired misses resolve typed (no
+        backend call), the rest group by (model, max_tokens, temperature)
+        into one ``generate_batch`` each, then backfill the cache with one
+        scatter per destination level before the futures resolve."""
+        client = self.client
+        n = len(pendings)
+        outcomes: List[Optional[Union[CacheResponse, Exception]]] = [None] * n
+        llm_resps: List[Optional[LLMResponse]] = [None] * n
+        now = time.perf_counter()
+        live: List[int] = []
+        for i, p in enumerate(pendings):
+            if p.deadline_t is not None and now > p.deadline_t:
+                with self._lock:
+                    self.stats.expired += 1
+                outcomes[i] = CacheResponse(
+                    None, DEADLINE_EXCEEDED, False, None, None, p.chosen, 0.0,
+                    now - p.t_submit, p.rid,
+                )
+            else:
+                live.append(i)
+
+        groups: Dict[tuple, List[int]] = {}
+        for i in live:
+            p = pendings[i]
+            key = (p.chosen, p.request.max_tokens, p.request.temperature)
+            groups.setdefault(key, []).append(i)
+        for (model, max_tokens, temperature), idxs in groups.items():
+            prompts = [pendings[i].request.prompt for i in idxs]
+            try:
+                resps = client._generate_batch_with_failover(
+                    model, prompts, max_tokens, temperature
+                )
+                if len(resps) != len(idxs):  # fail fast on a short batch
+                    raise RuntimeError(
+                        f"backend returned {len(resps)} responses for {len(idxs)} prompts"
+                    )
+            except Exception as e:  # noqa: BLE001 — the group's futures carry it
+                for i in idxs:
+                    outcomes[i] = e
+                continue
+            for i, resp in zip(idxs, resps):
+                cost = client._cost_of(resp.model, resp)
+                resp.cost_usd = cost
+                with self._lock:
+                    self.stats.generated += 1
+                with client._state_lock:
+                    client.stats.llm_calls += 1
+                    client.stats.total_cost_usd += cost
+                    if client.cost_ctl:
+                        client.cost_ctl.record(cost, False)
+                llm_resps[i] = resp
+
+        generated = [i for i in live if llm_resps[i] is not None]
+        self._backfill(
+            [pendings[i] for i in generated], [llm_resps[i] for i in generated]
+        )
+        done = time.perf_counter()
+        for i in generated:
+            p, resp = pendings[i], llm_resps[i]
+            out = CacheResponse(
+                resp.text, GENERATED, False, None, resp, resp.model, resp.cost_usd,
+                done - p.t_submit, p.rid,
+            )
+            with client._state_lock:
+                client.stats.total_latency_s += out.latency_s
+                client._results[p.rid] = client._to_client_result(out)
+            outcomes[i] = out
+        return outcomes  # type: ignore[return-value]
+
+    def _backfill(
+        self, pendings: List[_Pending], resps: List[LLMResponse]
+    ) -> None:
+        """Insert generated answers: per-request privacy hints group into at
+        most one ``insert_batch`` scatter per (cache_l1, cache_l2) class."""
+        client = self.client
+        eligible = [
+            (p, r)
+            for p, r in zip(pendings, resps)
+            if p.request.use_cache and p.vec is not None
+        ]
+        if not eligible:
+            return
+        groups: Dict[tuple, List[tuple]] = {}
+        for p, r in eligible:
+            groups.setdefault((p.request.cache_l1, p.request.cache_l2), []).append((p, r))
+        with self._cache_lock:
+            for (l1_ok, l2_ok), members in groups.items():
+                prompts = [p.request.prompt for p, _ in members]
+                texts = [r.text for _, r in members]
+                vecs = np.stack([p.vec for p, _ in members])
+                if client.hierarchy is not None:
+                    if l1_ok or l2_ok:
+                        client.hierarchy.insert_batch(
+                            prompts, texts, cache_l1=l1_ok, cache_l2=l2_ok, vecs=vecs
+                        )
+                elif l1_ok:
+                    client.cache.insert_batch(
+                        prompts,
+                        texts,
+                        metas=[{"model": r.model} for _, r in members],
+                        vecs=vecs,
+                    )

@@ -1,0 +1,386 @@
+"""Async-first CacheService + priority scheduler: hits resolve before
+co-batched misses generate, priority ordering under contention, deadline
+expiry without a backend call, typed admission control / close errors, and
+the asyncio facade (stdlib ``asyncio.run`` harness — no pytest-asyncio)."""
+import asyncio
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import pytest
+
+from repro.core import (
+    CacheRequest,
+    EnhancedClient,
+    GenerativeCache,
+    LLMBackend,
+    LLMResponse,
+    MockLLM,
+    NgramHashEmbedder,
+)
+from repro.core.request import DEADLINE_EXCEEDED, GENERATED, HIT
+from repro.serving.coalescer import (
+    AdmissionRejected,
+    BatchCoalescer,
+    DeadlineExceeded,
+    ServiceClosed,
+)
+from repro.serving.service import CacheService
+
+
+def _client(latency_s: float = 0.0, backend=None):
+    cache = GenerativeCache(
+        NgramHashEmbedder(), threshold=0.85, t_single=0.45, t_combined=1.0
+    )
+    client = EnhancedClient(cache=cache)
+    client.register_backend(backend or MockLLM("backend", latency_s=latency_s))
+    return client, cache
+
+
+class GatedLLM(LLMBackend):
+    """First generate_batch call blocks on ``gate``; later calls record the
+    prompt order — lets tests pile work behind a busy dispatcher."""
+
+    name = "gated"
+
+    def __init__(self):
+        self.order = []
+        self.gate = threading.Event()
+        self.entered = threading.Event()
+
+    def generate_batch(self, prompts, max_tokens: int = 256, temperature: float = 0.0):
+        if not self.entered.is_set():
+            self.entered.set()
+            assert self.gate.wait(timeout=10)
+        self.order.extend(prompts)
+        return [LLMResponse(f"generated: {p}", self.name) for p in prompts]
+
+
+# -- the headline invariant ----------------------------------------------------
+
+
+def test_hit_future_resolves_before_cobatched_miss_generates():
+    client, cache = _client(latency_s=0.5)
+    cache.insert("what is a cache", "a cache stores answers")
+    cache.lookup_batch(["warm", "warm 2"])  # compile outside the assertion window
+    with CacheService(client, max_batch=8, max_wait_ms=20.0) as svc:
+        miss_fut = svc.submit(CacheRequest("completely unrelated question zq"))
+        hit_fut = svc.submit(CacheRequest("what is a cache"))
+        hit = hit_fut.result(timeout=5)
+        assert hit.status == HIT and hit.from_cache
+        assert hit.text == "a cache stores answers"
+        assert not miss_fut.done()  # the 0.5s generation is still in flight
+        miss = miss_fut.result(timeout=5)
+        assert miss.status == GENERATED and not miss.from_cache
+    assert svc.stats.hits == 1 and svc.stats.generated == 1
+
+
+def test_generated_answer_backfills_cache():
+    client, cache = _client()
+    with CacheService(client, max_wait_ms=1.0) as svc:
+        first = svc.submit(CacheRequest("novel question about jax")).result(timeout=5)
+        assert first.status == GENERATED
+        again = svc.submit(CacheRequest("novel question about jax")).result(timeout=5)
+        assert again.status == HIT and again.text == first.text
+
+
+# -- priority / deadline scheduling --------------------------------------------
+
+
+def test_priority_ordering_under_contention():
+    backend = GatedLLM()
+    client, _ = _client(backend=backend)
+    svc = CacheService(client, max_wait_ms=1.0, dispatch_batch=1, dispatch_wait_ms=1.0)
+    filler = svc.submit(CacheRequest("filler"))
+    assert backend.entered.wait(timeout=10)  # dispatcher now blocked in the backend
+    futs = [
+        svc.submit(CacheRequest(p, priority=pr))
+        for p, pr in [("low prio q", 0), ("high prio q", 9), ("mid prio q", 3)]
+    ]
+    time.sleep(0.05)  # let the lookup stage forward all three misses
+    backend.gate.set()
+    for f in [filler] + futs:
+        assert f.result(timeout=10).status == GENERATED
+    svc.close()
+    assert backend.order[1:] == ["high prio q", "mid prio q", "low prio q"]
+
+
+def test_deadline_expiry_resolves_without_backend_call():
+    backend = GatedLLM()
+    client, _ = _client(backend=backend)
+    svc = CacheService(client, max_wait_ms=1.0)
+    filler = svc.submit(CacheRequest("filler"))
+    assert backend.entered.wait(timeout=10)
+    doomed = svc.submit(CacheRequest("urgent but doomed", deadline_s=0.05))
+    time.sleep(0.15)  # deadline passes while the dispatcher is blocked
+    backend.gate.set()
+    resp = doomed.result(timeout=10)
+    assert resp.status == DEADLINE_EXCEEDED and resp.expired
+    assert resp.text is None
+    assert filler.result(timeout=10).status == GENERATED
+    svc.close()
+    assert "urgent but doomed" not in backend.order  # never generated
+    assert svc.stats.expired == 1
+
+
+def test_hit_served_even_past_deadline():
+    # deadlines shed *generation* load; an instant hit is still worth serving
+    client, cache = _client()
+    cache.insert("cached q", "cached a")
+    with CacheService(client, max_wait_ms=1.0) as svc:
+        resp = svc.submit(CacheRequest("cached q", deadline_s=30.0)).result(timeout=5)
+        assert resp.status == HIT
+
+
+# -- admission control ----------------------------------------------------------
+
+
+def test_admission_rejection_is_typed_and_drain_survives():
+    backend = GatedLLM()
+    client, _ = _client(backend=backend)
+    svc = CacheService(client, max_wait_ms=1.0, max_inflight=2)
+    f1 = svc.submit(CacheRequest("first"))
+    assert backend.entered.wait(timeout=10)
+    f2 = svc.submit(CacheRequest("second"))
+    with pytest.raises(AdmissionRejected):
+        svc.submit(CacheRequest("over budget"))
+    assert svc.stats.rejected == 1
+    backend.gate.set()
+    assert f1.result(timeout=10).status == GENERATED
+    assert f2.result(timeout=10).status == GENERATED
+    # the drain thread survived the rejection: new work is accepted and served
+    assert svc.submit(CacheRequest("after the storm")).result(timeout=10).status == GENERATED
+    svc.close()
+
+
+def test_submit_after_close_raises_typed_service_closed():
+    client, _ = _client()
+    svc = CacheService(client, max_wait_ms=1.0)
+    assert svc.submit(CacheRequest("one")).result(timeout=10).status == GENERATED
+    svc.close()
+    with pytest.raises(ServiceClosed):
+        svc.submit(CacheRequest("too late"))
+    with pytest.raises(ServiceClosed):
+        svc.complete([CacheRequest("too late")])
+
+
+# -- sync compatibility wrappers -------------------------------------------------
+
+
+def test_sync_wrappers_ride_the_service():
+    client, cache = _client()
+    r1 = client.query("some question")
+    assert not r1.from_cache
+    r2 = client.query("some question")
+    assert r2.from_cache and r2.cost_usd == 0.0
+    rs = client.complete_batch(["some question", "another question"])
+    assert rs[0].from_cache and not rs[1].from_cache
+    assert client.stats.requests == 4 and client.stats.cache_hits == 2
+
+
+def test_complete_requests_per_request_hints():
+    client, cache = _client()
+    reqs = [
+        CacheRequest("public question"),
+        CacheRequest("private question", cache_l1=False, cache_l2=False),
+    ]
+    rs = client.complete_requests(reqs)
+    assert all(not r.from_cache for r in rs)
+    stored = [e.query for e in cache.store._entries if e is not None]
+    assert "public question" in stored and "private question" not in stored
+
+
+def test_query_many_mixed_models_grouped_dispatch():
+    client, _ = _client()
+    m2 = MockLLM("m2")
+    client.register_backend(m2)
+    rs = client.query_many(["q a", "q b", "q c"], models=["backend", "m2", "backend"],
+                           use_cache=False)
+    assert [r.model for r in rs] == ["backend", "m2", "backend"]
+
+
+# -- scheduler (reworked BatchCoalescer) unit tests ------------------------------
+
+
+def test_coalescer_priority_order_under_contention():
+    batches = []
+    gate, entered = threading.Event(), threading.Event()
+
+    def handler(items):
+        if not entered.is_set():
+            entered.set()
+            assert gate.wait(timeout=10)
+        batches.append(list(items))
+        return items
+
+    with BatchCoalescer(handler, max_batch=2, max_wait_ms=1.0) as co:
+        warm = co.submit("warm")
+        assert entered.wait(timeout=10)
+        futs = [co.submit(x, priority=p) for x, p in [("lo", 0), ("hi", 9), ("mid", 5)]]
+        time.sleep(0.02)
+        gate.set()
+        for f in [warm] + futs:
+            f.result(timeout=10)
+    assert [x for b in batches[1:] for x in b] == ["hi", "mid", "lo"]
+
+
+def test_coalescer_deadline_default_exception():
+    gate, entered = threading.Event(), threading.Event()
+
+    def handler(items):
+        if not entered.is_set():
+            entered.set()
+            assert gate.wait(timeout=10)
+        return items
+
+    with BatchCoalescer(handler, max_batch=4, max_wait_ms=1.0) as co:
+        co.submit("warm")
+        assert entered.wait(timeout=10)
+        doomed = co.submit("doomed", deadline_s=0.01)
+        time.sleep(0.05)
+        gate.set()
+        with pytest.raises(DeadlineExceeded):
+            doomed.result(timeout=10)
+        assert co.stats.expired == 1
+
+
+def test_coalescer_close_flushes_pending_futures():
+    co = BatchCoalescer(lambda xs: [x + 1 for x in xs], max_batch=4, max_wait_ms=50.0)
+    futs = [co.submit(i) for i in range(10)]
+    co.close()
+    assert all(f.done() for f in futs)
+    assert sorted(f.result() for f in futs) == [i + 1 for i in range(10)]
+
+
+def test_coalescer_submit_after_close_typed():
+    co = BatchCoalescer(lambda xs: xs, max_batch=2)
+    co.close()
+    with pytest.raises(ServiceClosed):
+        co.submit(1)
+    assert isinstance(ServiceClosed("x"), RuntimeError)  # old callers still catch
+
+
+def test_coalescer_admission_rejected_is_queue_full():
+    import queue
+
+    gate, entered = threading.Event(), threading.Event()
+
+    def handler(items):
+        if not entered.is_set():
+            entered.set()
+            assert gate.wait(timeout=10)
+        return items
+
+    co = BatchCoalescer(handler, max_batch=1, max_wait_ms=1.0, max_queue=2)
+    f0 = co.submit("warm")
+    assert entered.wait(timeout=10)
+    fs = [co.submit(i) for i in range(2)]
+    with pytest.raises(AdmissionRejected):
+        co.submit("overflow")
+    assert isinstance(AdmissionRejected("x"), queue.Full)  # old callers still catch
+    assert co.stats.rejected == 1
+    gate.set()
+    for f in [f0] + fs:
+        f.result(timeout=10)
+    co.close()
+
+
+# -- asyncio facade --------------------------------------------------------------
+
+
+def test_asyncio_facade_roundtrip():
+    client, cache = _client(latency_s=0.05)
+    cache.insert("what is a cache", "a cache stores answers")
+
+    async def main():
+        with CacheService(client, max_wait_ms=2.0) as svc:
+            hit = await svc.acomplete("what is a cache")
+            miss = await svc.asubmit(CacheRequest("a new question xq"))
+            pair = await asyncio.gather(
+                svc.asubmit(CacheRequest("what is a cache")),
+                svc.asubmit(CacheRequest("another new question yq", priority=5)),
+            )
+            return hit, miss, pair
+
+    hit, miss, pair = asyncio.run(main())
+    assert hit.status == HIT and hit.from_cache
+    assert miss.status == GENERATED
+    assert pair[0].status == HIT and pair[1].status == GENERATED
+
+
+def test_asyncio_gather_mixed_stream_hits_fast():
+    client, cache = _client(latency_s=0.3)
+    cache.insert("hot query", "hot answer")
+    cache.lookup_batch(["warm", "warm 2"])
+
+    async def main():
+        with CacheService(client, max_wait_ms=5.0) as svc:
+            t0 = time.perf_counter()
+            miss_task = svc.asubmit(CacheRequest("cold query zz"))
+            hit = await svc.acomplete("hot query")
+            hit_elapsed = time.perf_counter() - t0
+            await miss_task
+            return hit, hit_elapsed, time.perf_counter() - t0
+
+    hit, hit_elapsed, total = asyncio.run(main())
+    assert hit.status == HIT
+    assert hit_elapsed < total  # the hit did not wait for the miss
+
+
+def test_concurrent_submitters_share_batches():
+    client, cache = _client()
+    hot = [f"hot question {i}" for i in range(8)]
+    cache.insert_batch(hot, [f"answer {i}" for i in range(8)])
+    with CacheService(client, max_batch=8, max_wait_ms=20.0) as svc:
+        with ThreadPoolExecutor(max_workers=8) as pool:
+            resps = list(pool.map(
+                lambda q: svc.submit(CacheRequest(q)).result(timeout=10), hot
+            ))
+    assert all(r.status == HIT for r in resps)
+    lookup_stats, _ = svc.scheduler_stats
+    assert max(lookup_stats.batch_sizes) > 1  # concurrency actually coalesced
+
+
+def test_submit_many_blocks_for_capacity_instead_of_shedding():
+    client, _ = _client(latency_s=0.05)
+    svc = CacheService(client, max_wait_ms=1.0, max_inflight=2)
+    prompts = ["alpha falcon dawn", "brine cobalt ember", "cedar glyph mirth",
+               "dune harbor nickel", "elm quartz saffron", "fjord lichen topaz"]
+    futs = svc.submit_many([CacheRequest(p) for p in prompts])
+    assert len(futs) == 6
+    assert [f.result(timeout=10).status for f in futs] == [GENERATED] * 6
+    assert svc.stats.rejected == 0  # waited, never shed
+    svc.close()
+
+
+def test_query_many_larger_than_inflight_budget():
+    client, _ = _client()
+    client.service.max_inflight = 3  # force capacity waits in the bulk path
+    rs = client.query_many([f"q {i}" for i in range(10)], use_cache=False)
+    assert len(rs) == 10 and all(r.text for r in rs)
+
+
+def test_coalescer_starved_low_priority_deadline_still_expires():
+    """A deadlined item that never wins a pop (sustained high-priority load)
+    must still resolve typed: expiry sweeps the whole heap at each drain."""
+    gate, entered = threading.Event(), threading.Event()
+
+    def handler(items):
+        if not entered.is_set():
+            entered.set()
+            assert gate.wait(timeout=10)
+        return items
+
+    co = BatchCoalescer(handler, max_batch=2, max_wait_ms=1.0)
+    warm = co.submit("warm")
+    assert entered.wait(timeout=10)
+    doomed = co.submit("doomed", priority=0, deadline_s=0.02)
+    highs = [co.submit(f"hi{i}", priority=9) for i in range(4)]
+    time.sleep(0.05)  # deadline passes while blocked behind the gated batch
+    gate.set()
+    with pytest.raises(DeadlineExceeded):
+        doomed.result(timeout=10)
+    for f in [warm] + highs:
+        f.result(timeout=10)
+    co.close()
+    assert co.stats.expired == 1

@@ -196,3 +196,68 @@ def test_search_batch_updates_recency_like_search():
     k3 = s.add(unit(3), "d", "D")  # must evict entry 1
     live = {e.key for e in s._entries if e is not None}
     assert live == {k0, k2, k3}
+
+
+# -- ShardedVectorStore: key->slot map + freed-slot reuse (ported remove path) --
+
+
+def _sharded(capacity=8, k=3, dim=DIM):
+    jax = pytest.importorskip("jax")
+    from repro.distributed.sharded_store import ShardedVectorStore
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh(shape=(len(jax.devices()),), axes=("data",))
+    return ShardedVectorStore(mesh, dim=dim, capacity=capacity, k=k)
+
+
+def test_sharded_remove_frees_slot_for_reuse():
+    s = _sharded()
+    keys = [s.add(unit(i), f"q{i}", f"a{i}") for i in range(3)]
+    assert len(s) == 3
+    victim_slot = s._key_to_slot[keys[1]]
+    assert s.remove(keys[1])
+    assert len(s) == 2
+    assert s.payloads[victim_slot] is None
+    # removed entry is no longer served
+    rows = s.search_batch(unit(1)[None])[0]
+    assert all(p != ("q1", "a1") for _, p in rows)
+    # the freed slot is recycled before the round-robin cursor advances
+    k_new = s.add(unit(5), "q5", "a5")
+    assert s._key_to_slot[k_new] == victim_slot
+    assert len(s) == 3
+    top = s.search_batch(unit(5)[None])[0]
+    assert top and top[0][1] == ("q5", "a5")
+
+
+def test_sharded_remove_unknown_and_double():
+    s = _sharded()
+    k0 = s.add(unit(0), "q0", "a0")
+    assert not s.remove(9999)
+    assert s.remove(k0)
+    assert not s.remove(k0)  # idempotent
+    assert len(s) == 0
+
+
+def test_sharded_add_batch_reuses_freed_slots():
+    s = _sharded(capacity=8)
+    keys = [s.add(unit(i), f"q{i}", f"a{i}") for i in range(4)]
+    freed = [s._key_to_slot[keys[1]], s._key_to_slot[keys[2]]]
+    s.remove(keys[1])
+    s.remove(keys[2])
+    new_keys = s.add_batch(
+        np.stack([unit(5), unit(6)]), ["q5", "q6"], ["a5", "a6"]
+    )
+    # both freed slots were recycled (LIFO pop order) before cursor growth
+    assert sorted(s._key_to_slot[k] for k in new_keys) == sorted(freed)
+    assert len(s) == 4
+
+
+def test_sharded_wraparound_retires_overwritten_keys():
+    s = _sharded(capacity=4)
+    keys = [s.add(unit(i % DIM), f"q{i}", f"a{i}") for i in range(6)]  # wraps
+    assert len(s) == 4
+    # the two overwritten entries' keys are gone from the map
+    assert keys[0] not in s._key_to_slot and keys[1] not in s._key_to_slot
+    assert all(k in s._key_to_slot for k in keys[2:])
+    # removing a retired key is a no-op
+    assert not s.remove(keys[0])
