@@ -1,0 +1,235 @@
+"""Fused StoreBank hierarchy search vs the PR-2 per-level loop.
+
+Measures the hierarchy's candidate-retrieval stage (the part this PR
+restructured) for B queries over an L-level topology, three ways:
+
+  * pr2-per-level — one ``top_k_scores`` device dispatch per level over that
+    level's [cap, D] buffer, re-normalizing the buffer inside every call
+    (faithful reproduction of the PR-2 ``search_batch``-per-level loop)
+  * banked-loop   — one StoreBank lane dispatch per level (rows already
+    unit-normalized at insert; the fused=False fallback path today)
+  * fused         — ONE ``search_lanes`` dispatch over the stacked
+    [L, cap, D] bank for the whole hierarchy
+
+plus an end-to-end ``lookup_batch`` comparison (fused=True vs fused=False)
+covering decisions/promotions. All variants return identical candidates.
+The CI gate enforces pr2/fused >= 1.5x at 3 levels, batch 64. Results land
+in ``BENCH_fused_search.json``.
+
+Run:  PYTHONPATH=src python benchmarks/fused_search.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import emit  # noqa: E402
+from repro.core import (  # noqa: E402
+    GenerativeCache,
+    HierarchicalCache,
+    NgramHashEmbedder,
+)
+from repro.core import similarity as sim  # noqa: E402
+from repro.core.store_bank import pad_to_bucket  # noqa: E402
+
+DIM = 256
+K = 4
+
+
+def _unit_rows(rng, n, dim):
+    v = rng.normal(size=(n, dim)).astype(np.float32)
+    return v / np.linalg.norm(v, axis=1, keepdims=True)
+
+
+def _make_hierarchy(n_levels: int, n_entries: int, capacity: int, seed: int,
+                    fused: bool = True) -> HierarchicalCache:
+    rng = np.random.default_rng(seed)
+    emb = NgramHashEmbedder(DIM)
+
+    def gc():
+        return GenerativeCache(emb, threshold=0.85, t_single=0.45, t_combined=1.0,
+                               capacity=capacity, max_sources=K)
+
+    levels = [gc() for _ in range(n_levels)]
+    for li, cache in enumerate(levels):
+        rows = _unit_rows(rng, n_entries, DIM)
+        cache.insert_batch(
+            [f"L{li} entry {i}" for i in range(n_entries)],
+            [f"L{li} answer {i}" for i in range(n_entries)],
+            vecs=rows,
+        )
+    return HierarchicalCache(levels[0], levels[1], peers=levels[2:], fused=fused)
+
+
+def _probe_vecs(rng, hier: HierarchicalCache, b: int) -> np.ndarray:
+    """Half near-duplicates spread round-robin over the levels, half misses."""
+    levels = [c for _, c in hier._levels()]
+    near = []
+    for j in range(max(b // 2, 1)):
+        src = np.asarray(levels[j % len(levels)].store._buf)[j % 4]
+        near.append(src + 0.05 * rng.normal(size=DIM).astype(np.float32))
+    probes = np.concatenate([np.stack(near), _unit_rows(rng, b - len(near), DIM)])[:b]
+    return (probes / np.linalg.norm(probes, axis=1, keepdims=True)).astype(np.float32)
+
+
+def _searchers(hier: HierarchicalCache):
+    """Build the three candidate-retrieval variants over one hierarchy."""
+    stores = [c.store for _, c in hier._levels()]
+    bank = hier.ensure_bank()
+    assert bank is not None
+
+    # PR-2 loop: per-level device buffers + a jit that normalizes per call
+    pr2_fn = jax.jit(lambda db, valid, q: sim.top_k_scores(db, valid, q, K, "cosine"))
+    level_bufs = [jax.device_put(np.asarray(s._buf)) for s in stores]
+    level_valid = [jax.device_put(np.asarray(s._valid)) for s in stores]
+
+    def pr2(probes):
+        q, n_q = pad_to_bucket(probes)
+        qj = jax.numpy.asarray(q)
+        out = []
+        for s, buf, valid in zip(stores, level_bufs, level_valid):
+            sc, idx = pr2_fn(buf, valid, qj)
+            out.append(s.join_candidates(np.asarray(sc)[:n_q], np.asarray(idx)[:n_q],
+                                         touch=False))
+        return out
+
+    def banked_loop(probes):
+        return [s.search_batch(probes, k=K, touch=False) for s in stores]
+
+    def fused(probes):
+        s_all, i_all = bank.search_lanes(probes, K)
+        return [
+            s.join_candidates(s_all[:, li], i_all[:, li], touch=False)
+            for li, s in enumerate(stores)
+        ]
+
+    return {"pr2_per_level": pr2, "banked_loop": banked_loop, "fused": fused}
+
+
+def bench_search(n_levels, batch_sizes, n_entries, capacity, repeats) -> dict:
+    out = {}
+    hier = _make_hierarchy(n_levels, n_entries, capacity, seed=0)
+    searchers = _searchers(hier)
+    for b in batch_sizes:
+        rng = np.random.default_rng(1)
+        probes = _probe_vecs(rng, hier, b)
+        # all variants must retrieve the same candidates (pr2 re-normalizes
+        # the already-unit rows, so scores may differ in the last float bits)
+        ref = searchers["fused"](probes)
+        for name, fn in searchers.items():
+            got = fn(probes)
+            for rows_g, rows_r in zip(got, ref):
+                for row_g, row_r in zip(rows_g, rows_r):
+                    assert [e.key for _, e in row_g] == [e.key for _, e in row_r], \
+                        f"{name} candidates diverge"
+                    np.testing.assert_allclose(
+                        [s for s, _ in row_g], [s for s, _ in row_r],
+                        atol=1e-5, err_msg=f"{name} scores diverge")
+        row = {}
+        for name, fn in searchers.items():
+            fn(probes)  # warm
+            times = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                fn(probes)
+                times.append(time.perf_counter() - t0)
+            times.sort()
+            row[name] = times[len(times) // 2]  # median: robust to GC/compile blips
+        speedup = row["pr2_per_level"] / row["fused"]
+        out[f"b{b}"] = {
+            "pr2_per_level_ms": row["pr2_per_level"] * 1e3,
+            "banked_loop_ms": row["banked_loop"] * 1e3,
+            "fused_ms": row["fused"] * 1e3,
+            "speedup_vs_pr2": speedup,
+            "speedup_vs_banked_loop": row["banked_loop"] / row["fused"],
+        }
+        emit(f"fusedsearch_L{n_levels}_b{b}", row["fused"] * 1e6,
+             f"vs pr2 {row['pr2_per_level'] * 1e6:.0f}us = {speedup:.2f}x")
+    return out
+
+
+def bench_end_to_end(n_levels, batch_sizes, n_entries, capacity, repeats) -> dict:
+    """Full lookup_batch (decide + winners + promotions) fused vs fused=False;
+    fresh snapshots per repeat — lookups mutate L1 via promotion."""
+    out = {}
+    for b in batch_sizes:
+        rng = np.random.default_rng(1)
+        probes = _probe_vecs(rng, _make_hierarchy(n_levels, n_entries, capacity, 0), b)
+        queries = [f"probe {i}" for i in range(b)]
+
+        def run(fused: bool):
+            times = []
+            for _ in range(repeats):
+                h = _make_hierarchy(n_levels, n_entries, capacity, seed=0, fused=fused)
+                if fused:
+                    h.ensure_bank()
+                h.lookup_batch(queries, vecs=probes)  # warm (jit is shared anyway)
+                t0 = time.perf_counter()
+                h.lookup_batch(queries, vecs=probes)
+                times.append(time.perf_counter() - t0)
+            times.sort()
+            return times[len(times) // 2]
+
+        loop_s, fused_s = run(False), run(True)
+        out[f"b{b}"] = {
+            "per_level_ms": loop_s * 1e3,
+            "fused_ms": fused_s * 1e3,
+            "speedup": loop_s / fused_s,
+        }
+        emit(f"fusedsearch_e2e_L{n_levels}_b{b}", fused_s * 1e6,
+             f"vs banked-loop {loop_s * 1e6:.0f}us = {loop_s / fused_s:.2f}x")
+    return out
+
+
+def bench_dispatch_counts(n_levels, n_entries, capacity) -> dict:
+    """Sanity row for the report: fused really is ONE dispatch per batch."""
+    h = _make_hierarchy(n_levels, n_entries, capacity, seed=0)
+    bank = h.ensure_bank()
+    rng = np.random.default_rng(2)
+    probes = _probe_vecs(rng, h, 16)
+    before = bank.dispatches
+    h.lookup_batch([f"p{i}" for i in range(16)], vecs=probes)
+    return {"levels": n_levels, "search_dispatches_per_batch": bank.dispatches - before}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    args = ap.parse_args()
+
+    if args.smoke:
+        batch_sizes, n_entries, capacity, repeats = [8, 64], 512, 1024, 9
+    else:
+        batch_sizes, n_entries, capacity, repeats = [1, 8, 64, 256], 1024, 2048, 8
+
+    results = {
+        "config": {"dim": DIM, "k": K, "batch_sizes": batch_sizes,
+                   "n_entries_per_level": n_entries, "capacity": capacity,
+                   "repeats": repeats},
+        "search_3_levels": bench_search(3, batch_sizes, n_entries, capacity, repeats),
+        "search_4_levels": bench_search(4, batch_sizes, n_entries, capacity, repeats),
+        "end_to_end_3_levels": bench_end_to_end(3, batch_sizes, n_entries, capacity,
+                                                max(repeats // 2, 3)),
+        "dispatch_counts": bench_dispatch_counts(3, n_entries, capacity),
+    }
+    results["fused_speedup_at_64"] = results["search_3_levels"]["b64"]["speedup_vs_pr2"]
+
+    path = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "BENCH_fused_search.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"\nwrote {path}")
+    print(f"fused search speedup vs PR-2 loop at 3 levels, batch 64: "
+          f"{results['fused_speedup_at_64']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -111,7 +111,11 @@ class ModelConfig:
     remat: bool = True
     loss_chunk: int = 0  # chunk CE over the sequence axis; 0 = off
     attn_chunk: int = 1024  # query-chunk for memory-safe jnp attention
-    use_pallas: bool = False  # use Pallas (interpret on CPU) kernels where available
+    # use Pallas kernels where available; the interpret-vs-compiled backend is
+    # auto-selected per jax.default_backend() (CPU -> interpret), overridable
+    # via kernel_interpret / REPRO_KERNEL_INTERPRET (repro.kernels.backend)
+    use_pallas: bool = False
+    kernel_interpret: Optional[bool] = None  # None = auto-select per backend
     optimizer: str = "adamw"  # "adamw" | "adamw8bit"
     grad_accum: int = 1  # microbatch count for train_step
     unroll: bool = False  # python-loop layers instead of lax.scan (exact HLO cost accounting)

@@ -30,4 +30,5 @@ from repro.core.request import (  # noqa: F401
     CacheResponse,
 )
 from repro.core.semantic_cache import CacheResult, GPTCacheLike, SemanticCache  # noqa: F401
+from repro.core.store_bank import StoreBank  # noqa: F401
 from repro.core.vector_store import Entry, InMemoryVectorStore  # noqa: F401

@@ -12,13 +12,18 @@ a superset of what this client serves: peer-level winners are mirrored into
 L2 alongside their L1 promotion (safe — they already live in a shared
 level), so cooperating clients converge on one shared working set.
 
-``lookup_batch`` serves B queries with one embed forward and ONE search
-dispatch per level: each level's candidates go through that level's own
-decision rule (``SemanticCache._decide_batch`` / the generative override),
-the per-query winning level is resolved host-side (L1 beats L2 beats peers),
-lower-level winners are promoted into L1 via one ``add_batch`` scatter, and
-residual misses get a batched cross-level generative pass over the already
-searched candidates.
+``lookup_batch`` serves B queries with one embed forward and ONE fused
+search dispatch for the WHOLE hierarchy: the level stores are stacked into
+a shared ``StoreBank`` ([L, cap, D]; see repro.core.store_bank), a single
+``search_lanes`` dispatch returns [B, L, k] candidates, and each level's
+slice goes through that level's own decision rule
+(``SemanticCache._decide_batch`` / the generative override). The per-query
+winning level is resolved host-side (L1 beats L2 beats peers) on the
+returned scores — masking lower levels for queries L1 already answered
+costs no extra dispatch — lower-level winners are promoted into L1 via one
+``add_batch`` scatter, and residual misses get a batched cross-level
+generative pass over the already searched candidates. Levels that cannot
+share a bank fall back to one dispatch per level.
 
 On the TPU mesh this topology maps to pod-local L1 shards and cross-pod L2
 exchange (DESIGN.md §3); this module is the level-coordination logic, shared
@@ -32,7 +37,9 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core.generative_cache import GenerativeCache
-from repro.core.semantic_cache import CacheResult
+from repro.core.semantic_cache import CacheResult, SemanticCache
+from repro.core.store_bank import StoreBank
+from repro.core.vector_store import InMemoryVectorStore
 
 
 class HierarchicalCache:
@@ -44,6 +51,7 @@ class HierarchicalCache:
         inclusive: bool = False,
         promote: bool = True,
         generative_across_levels: bool = True,
+        fused: bool = True,
     ):
         self.l1 = l1
         self.l2 = l2
@@ -51,6 +59,12 @@ class HierarchicalCache:
         self.inclusive = inclusive
         self.promote = promote
         self.generative_across_levels = generative_across_levels
+        # fused=True stacks the level stores into one StoreBank so a batched
+        # lookup searches every level in ONE device dispatch; levels whose
+        # stores cannot be banked (custom subclass, mixed dim/metric, aliased
+        # stores) transparently keep the per-level search loop
+        self.fused = fused
+        self._shared_bank: Optional[StoreBank] = None
 
     def _levels(self):
         out = [("L1", self.l1)]
@@ -58,6 +72,45 @@ class HierarchicalCache:
             out.append(("L2", self.l2))
         out.extend((f"L2-peer{i}", p) for i, p in enumerate(self.peers))
         return out
+
+    def ensure_bank(self) -> Optional[StoreBank]:
+        """Stack the level stores into one shared [L, cap, D] StoreBank (or
+        return the current one if every level still points at its lane).
+
+        Returns None — keeping the per-level search loop — when the levels
+        cannot share a bank: fewer than two levels, a store subclass that
+        overrides the search/join path, mixed dim/metric, or the same store
+        object mounted at two levels (its lane view can only track one).
+        A level whose store was swapped (e.g. ``load_store``) or adopted by
+        another hierarchy triggers a re-adoption, which copies the stores'
+        CURRENT lanes — never stale data."""
+        caches = [c for _, c in self._levels()]
+        stores = [c.store for c in caches]
+        if len(stores) < 2:
+            return None
+        for c in caches:
+            # the fused path replaces the cache-level retrieval hook too
+            if type(c).search_candidates is not SemanticCache.search_candidates:
+                return None
+        for s in stores:
+            if not isinstance(s, InMemoryVectorStore):
+                return None
+            if (
+                type(s).search_batch is not InMemoryVectorStore.search_batch
+                or type(s).join_candidates is not InMemoryVectorStore.join_candidates
+            ):
+                return None  # custom search semantics must keep running
+        if len({id(s) for s in stores}) != len(stores):
+            return None
+        if len({s.dim for s in stores}) != 1 or len({s.metric for s in stores}) != 1:
+            return None
+        bank = self._shared_bank
+        if bank is not None and all(
+            s._bank is bank and s._lane == li for li, s in enumerate(stores)
+        ):
+            return bank
+        self._shared_bank = StoreBank.adopt(stores)
+        return self._shared_bank
 
     # -- cross-level generative pool (§3 rule applied over every level) --------
 
@@ -149,21 +202,50 @@ class HierarchicalCache:
 
         level_results: List[List[CacheResult]] = []
         level_matches: List[list] = []
-        for _, cache in levels:
-            thresholds = np.asarray(
-                [cache.effective_threshold(q, c) for q, c in zip(queries, contexts)]
-            )
-            # touch=False: every level is probed speculatively here, but the
-            # sequential walk stops at the winning level — recency/frequency
-            # bookkeeping is applied after winners resolve, only on levels
-            # the walk would actually have searched (eviction hygiene)
-            matches = cache.search_candidates(
-                vecs, k=max(getattr(cache, "max_sources", 4), 1), touch=False
-            )
-            # lazy_synth: only levels that win a query synthesize (below)
-            results, _ = cache._decide_batch(queries, thresholds, matches, lazy_synth=True)
-            level_results.append(results)
-            level_matches.append(matches)
+        bank = self.ensure_bank() if self.fused else None
+        if bank is not None:
+            # fused path: every level's candidates come out of ONE stacked
+            # [L, cap, D] x [B, D] top-k dispatch; per-level decision rules
+            # (and the L1-beats-L2-beats-peers walk below) run host-side on
+            # the returned scores — no extra dispatches
+            ks = [
+                min(max(getattr(c, "max_sources", 4), 1), c.store.capacity)
+                for _, c in levels
+            ]
+            t0s = time.perf_counter()
+            s_all, i_all = bank.search_lanes(vecs, max(ks))  # [B, L, k_fused]
+            search_share = (time.perf_counter() - t0s) / len(levels)
+            for li, (_, cache) in enumerate(levels):
+                thresholds = np.asarray(
+                    [cache.effective_threshold(q, c) for q, c in zip(queries, contexts)]
+                )
+                # touch=False equivalent: the join skips the recency bump;
+                # counters move below, only on levels the walk would probe
+                matches = cache.store.join_candidates(
+                    s_all[:, li], i_all[:, li], touch=False
+                )
+                if ks[li] < max(ks):  # this level's own k, like its solo search
+                    matches = [m[: ks[li]] for m in matches]
+                cache.stats.search_time_s += search_share
+                results, _ = cache._decide_batch(queries, thresholds, matches, lazy_synth=True)
+                level_results.append(results)
+                level_matches.append(matches)
+        else:
+            for _, cache in levels:
+                thresholds = np.asarray(
+                    [cache.effective_threshold(q, c) for q, c in zip(queries, contexts)]
+                )
+                # touch=False: every level is probed speculatively here, but the
+                # sequential walk stops at the winning level — recency/frequency
+                # bookkeeping is applied after winners resolve, only on levels
+                # the walk would actually have searched (eviction hygiene)
+                matches = cache.search_candidates(
+                    vecs, k=max(getattr(cache, "max_sources", 4), 1), touch=False
+                )
+                # lazy_synth: only levels that win a query synthesize (below)
+                results, _ = cache._decide_batch(queries, thresholds, matches, lazy_synth=True)
+                level_results.append(results)
+                level_matches.append(matches)
 
         out: List[Optional[CacheResult]] = [None] * n
         winner_idx = [len(levels)] * n  # level index that served each query

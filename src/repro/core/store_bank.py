@@ -1,0 +1,319 @@
+"""StoreBank: one device-resident [L, cap, D] buffer for many vector stores.
+
+The cache's read path used to issue one ``search_batch`` dispatch per
+hierarchy level (and the sharded DB kept a separate flat buffer). The bank
+stacks every *lane* — a hierarchy level (private L1 / shared L2 / peers) or
+a DB shard — into a single [L, cap, D] embedding tensor with a [L, cap]
+validity mask, so a B-query lookup across the whole hierarchy is ONE fused
+top-k dispatch:
+
+    [L, cap, D] x [B, D] -> scores [B, L, k], lane-local idx [B, L, k]
+
+``InMemoryVectorStore`` and ``ShardedVectorStore`` are thin lane views over
+a bank: each keeps its public add/search/remove API and host-side entry
+metadata, while the device tensors, the per-lane recency/frequency counters
+(LRU/LFU over any lane, sharded included), and the search dispatch live
+here. A standalone store is just a 1-lane bank; ``StoreBank.adopt`` stacks
+live stores into a shared bank (repointing each store's lane view) so a
+hierarchy's levels become rows of one tensor.
+
+For cosine lanes the bank keeps rows unit-normalized at insert time (dot ==
+cosine on unit vectors), so searches skip the per-call [cap, D]
+re-normalization entirely. Search backends: a jitted jnp einsum+top_k path,
+or the ``similarity_topk`` Pallas kernel with its batched-lanes grid
+(``use_pallas=True``); the kernel backend (interpret vs compiled) is
+auto-selected per JAX backend via ``repro.kernels.backend``.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pad_to_bucket(rows: np.ndarray) -> Tuple[np.ndarray, int]:
+    """Zero-pad a [N, D] block to the next power-of-two row bucket.
+
+    Serving drains variable-size micro-batches; an unbucketed jit would
+    recompile per distinct N (stalling the lookup scheduler for hundreds of
+    ms at each new size). Returns the padded block and the original N so the
+    caller can slice the result back down. Shared by the in-memory and
+    sharded search paths.
+    """
+    n = rows.shape[0]
+    bucket = 1 << (n - 1).bit_length() if n > 1 else 1
+    if bucket > n:
+        rows = np.concatenate(
+            [rows, np.zeros((bucket - n, *rows.shape[1:]), rows.dtype)]
+        )
+    return rows, n
+
+
+def prepare_scatter(idxs: List[int], rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Build the (rows, idxs) update for a multi-row ``buf.at[idxs].set``.
+
+    Deduplicates repeated slots last-write-wins (a batch that wraps capacity
+    may pick the same victim twice; XLA scatter order for conflicting updates
+    is implementation-defined, the sequential loop's is not) and pads to the
+    next power-of-two bucket by repeating the final update (identical
+    duplicate writes are order-independent) so the scatter jit compiles per
+    bucket, not per batch size. Shared by the in-memory and sharded stores.
+    """
+    slot_to_row: Dict[int, int] = {}
+    for j, idx in enumerate(idxs):
+        slot_to_row[idx] = j
+    out_idx = np.fromiter(slot_to_row.keys(), np.int32, len(slot_to_row))
+    out_rows = rows[np.fromiter(slot_to_row.values(), np.int64, len(slot_to_row))]
+    bucket = 1 << (len(out_idx) - 1).bit_length() if len(out_idx) > 1 else 1
+    if bucket > len(out_idx):
+        pad = bucket - len(out_idx)
+        out_idx = np.concatenate([out_idx, np.repeat(out_idx[-1:], pad)])
+        out_rows = np.concatenate([out_rows, np.repeat(out_rows[-1:], pad, axis=0)])
+    return out_rows, out_idx
+
+
+def select_victim(
+    eviction: str,
+    last_access: np.ndarray,
+    access_count: np.ndarray,
+    insert_seq: np.ndarray,
+) -> int:
+    """Pick the slot an lru/lfu/fifo policy evicts (flat index into the
+    given counter views). One victim rule for every lane view — the
+    in-memory store and the sharded DB evict identically."""
+    if eviction == "fifo":
+        return int(np.argmin(insert_seq))
+    if eviction == "lfu":
+        return int(np.argmin(access_count))
+    return int(np.argmin(last_access))
+
+
+def _normalize_rows(rows: jax.Array) -> jax.Array:
+    return rows / jnp.maximum(jnp.linalg.norm(rows, axis=-1, keepdims=True), 1e-9)
+
+
+# -- module-level jits: compiled once per shape and shared by every bank ------
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1), static_argnames=("normalize",))
+def _bank_scatter(buf, valid, lane, idxs, rows, *, normalize: bool):
+    if normalize:
+        rows = _normalize_rows(rows)
+    return buf.at[lane, idxs].set(rows), valid.at[lane, idxs].set(True)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _bank_invalidate(valid, lane, idx):
+    return valid.at[lane, idx].set(False)
+
+
+def _lane_scores(db, q, metric: str, prenormalized: bool):
+    """db [.., N, D] x q [Q, D] -> scores [.., Q, N] (higher = more similar)."""
+    q = q.astype(jnp.float32)
+    db = db.astype(jnp.float32)
+    if metric == "cosine":
+        if not prenormalized:
+            db = _normalize_rows(db)
+        q = _normalize_rows(q)
+        return jnp.einsum("qd,...nd->...qn", q, db)
+    if metric == "dot":
+        return jnp.einsum("qd,...nd->...qn", q, db)
+    if metric == "euclidean":
+        d2 = (
+            jnp.sum(q * q, -1)[:, None]
+            - 2 * jnp.einsum("qd,...nd->...qn", q, db)
+            + jnp.sum(db * db, -1)[..., None, :]
+        )
+        return -jnp.sqrt(jnp.maximum(d2, 0.0))
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_search_jnp(k: int, metric: str, prenormalized: bool):
+    def fn(buf, valid, q):  # buf [L, cap, D], valid [L, cap], q [Q, D]
+        s = _lane_scores(buf, q, metric, prenormalized)  # [L, Q, cap]
+        s = jnp.where(valid[:, None, :], s, -jnp.inf)
+        ts, ti = jax.lax.top_k(s, k)  # [L, Q, k]
+        return ts.transpose(1, 0, 2), ti.transpose(1, 0, 2)
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _lane_search_jnp(k: int, metric: str, prenormalized: bool):
+    def fn(buf, valid, lane, q):  # one lane, sliced inside the jit (no copy hop)
+        s = _lane_scores(buf[lane], q, metric, prenormalized)  # [Q, cap]
+        s = jnp.where(valid[lane][None, :], s, -jnp.inf)
+        return jax.lax.top_k(s, k)
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _lane_search_pallas(k: int, metric: str, interpret: bool, prenormalized: bool):
+    from repro.kernels.similarity_topk.ops import _similarity_topk_lanes
+
+    def fn(buf, valid, lane, q):
+        s, i = _similarity_topk_lanes(
+            buf[lane][None], valid[lane][None], q, k=k, metric=metric,
+            block_n=512, interpret=interpret, prenormalized=prenormalized,
+        )
+        return s[:, 0], i[:, 0]
+
+    return jax.jit(fn)
+
+
+class StoreBank:
+    """Device-resident multi-lane store: stacked [L, cap, D] rows + masks +
+    per-lane eviction counters + the fused search dispatch."""
+
+    def __init__(
+        self,
+        dim: int,
+        capacities: Sequence[int],
+        *,
+        metric: str = "cosine",
+        use_pallas: bool = False,
+        interpret: Optional[bool] = None,
+        buf: Optional[jax.Array] = None,
+        valid: Optional[jax.Array] = None,
+    ):
+        self.dim = dim
+        self.metric = metric
+        self.use_pallas = use_pallas
+        self.interpret = interpret  # None = auto (repro.kernels.backend)
+        self.capacities = list(capacities)
+        self.L = len(self.capacities)
+        self.cap = max(self.capacities)
+        # cosine lanes hold unit rows: normalize once at insert, never at search
+        self.prenormalized = metric == "cosine"
+        self.buf = (
+            buf if buf is not None else jnp.zeros((self.L, self.cap, dim), jnp.float32)
+        )
+        self.valid = (
+            valid if valid is not None else jnp.zeros((self.L, self.cap), bool)
+        )
+        # per-lane recency/frequency/insertion counters (host-side, shared by
+        # every lane view's eviction policy — LRU/LFU over sharded lanes too)
+        self.last_access = np.zeros((self.L, self.cap), np.float64)
+        self.access_count = np.zeros((self.L, self.cap), np.int64)
+        self.insert_seq = np.zeros((self.L, self.cap), np.int64)
+        self.dispatches = 0  # fused/device search dispatches issued by this bank
+
+    # -- device updates --------------------------------------------------------
+
+    def set_rows(self, lane: int, idxs: List[int], rows: np.ndarray) -> None:
+        """Scatter N raw rows into one lane (ONE donated device update;
+        rows are unit-normalized in-jit for cosine banks)."""
+        sel, scatter_idx = prepare_scatter(idxs, np.asarray(rows, np.float32))
+        self.buf, self.valid = _bank_scatter(
+            self.buf, self.valid, lane, jnp.asarray(scatter_idx), jnp.asarray(sel),
+            normalize=self.prenormalized,
+        )
+
+    def invalidate(self, lane: int, idx: int) -> None:
+        self.valid = _bank_invalidate(self.valid, lane, idx)
+
+    # -- search ----------------------------------------------------------------
+
+    def _resolved_interpret(self) -> bool:
+        from repro.kernels.backend import resolve_interpret
+
+        return resolve_interpret(self.interpret)
+
+    def search_lane(
+        self, lane: int, q_vecs: np.ndarray, k: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Top-k of ONE lane for Q queries in one device dispatch ->
+        (scores [Q, k], lane-local idx [Q, k])."""
+        q, n_q = pad_to_bucket(np.atleast_2d(np.asarray(q_vecs, np.float32)))
+        self.dispatches += 1
+        if self.use_pallas:
+            from repro.kernels.similarity_topk import ops as st_ops
+
+            st_ops.record_dispatch()
+            fn = _lane_search_pallas(
+                k, self.metric, self._resolved_interpret(), self.prenormalized
+            )
+        else:
+            fn = _lane_search_jnp(k, self.metric, self.prenormalized)
+        s, i = fn(self.buf, self.valid, lane, jnp.asarray(q))
+        return np.asarray(s)[:n_q], np.asarray(i)[:n_q]
+
+    def search_lanes(
+        self, q_vecs: np.ndarray, k: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Fused all-lanes top-k for Q queries in ONE device dispatch ->
+        (scores [Q, L, k], lane-local idx [Q, L, k]). Candidates are never
+        merged across lanes — cross-lane policy (hierarchy walk order,
+        shard merge) stays with the caller, host-side, on these scores."""
+        q, n_q = pad_to_bucket(np.atleast_2d(np.asarray(q_vecs, np.float32)))
+        self.dispatches += 1
+        if self.use_pallas:
+            from repro.kernels.similarity_topk.ops import similarity_topk_lanes
+
+            s, i = similarity_topk_lanes(
+                self.buf, self.valid, jnp.asarray(q), k=k, metric=self.metric,
+                interpret=self.interpret, prenormalized=self.prenormalized,
+            )
+        else:
+            fn = _fused_search_jnp(k, self.metric, self.prenormalized)
+            s, i = fn(self.buf, self.valid, jnp.asarray(q))
+        return np.asarray(s)[:n_q], np.asarray(i)[:n_q]
+
+    # -- lane views ------------------------------------------------------------
+
+    def lane_buf(self, lane: int, capacity: Optional[int] = None) -> jax.Array:
+        cap = self.capacities[lane] if capacity is None else capacity
+        return self.buf[lane, :cap]
+
+    def lane_valid(self, lane: int, capacity: Optional[int] = None) -> jax.Array:
+        cap = self.capacities[lane] if capacity is None else capacity
+        return self.valid[lane, :cap]
+
+    def note_insert(self, lane: int, idx: int, seq: int) -> None:
+        self.last_access[lane, idx] = time.monotonic()
+        self.access_count[lane, idx] = 0
+        self.insert_seq[lane, idx] = seq
+
+    # -- composition -----------------------------------------------------------
+
+    @classmethod
+    def adopt(cls, stores: Sequence) -> "StoreBank":
+        """Stack live lane-view stores into ONE shared bank and repoint each
+        store at its row. Contents (rows, masks, counters) are copied from
+        each store's current bank lane, so adoption is transparent to the
+        stores' own add/search/remove paths — they just start resolving
+        against the shared tensor."""
+        dims = {s.dim for s in stores}
+        metrics = {s.metric for s in stores}
+        if len(dims) != 1 or len(metrics) != 1:
+            raise ValueError(
+                f"cannot stack stores with mixed dim/metric: {dims}/{metrics}"
+            )
+        bank = cls(
+            dims.pop(),
+            [s.capacity for s in stores],
+            metric=metrics.pop(),
+            # conservative: the compiled-kernel path only when every lane opted in
+            use_pallas=all(getattr(s, "use_pallas", False) for s in stores),
+        )
+        buf = np.zeros((bank.L, bank.cap, bank.dim), np.float32)
+        valid = np.zeros((bank.L, bank.cap), bool)
+        for li, s in enumerate(stores):
+            ob, ol, cap = s._bank, s._lane, s.capacity
+            buf[li, :cap] = np.asarray(ob.buf[ol, :cap])
+            valid[li, :cap] = np.asarray(ob.valid[ol, :cap])
+            bank.last_access[li, :cap] = ob.last_access[ol, :cap]
+            bank.access_count[li, :cap] = ob.access_count[ol, :cap]
+            bank.insert_seq[li, :cap] = ob.insert_seq[ol, :cap]
+        bank.buf = jnp.asarray(buf)
+        bank.valid = jnp.asarray(valid)
+        for li, s in enumerate(stores):
+            s._bank = bank
+            s._lane = li
+        return bank

@@ -1,9 +1,16 @@
 """Vector stores for the cache.
 
 ``InMemoryVectorStore`` is the paper's "lighter weight ... single process"
-option (§5.3): a preallocated device-resident [capacity, D] buffer searched
-by one jitted masked matmul + top-k (exact search — see DESIGN.md §3 for why
-exact brute-force is the TPU-native replacement for Redis/Milvus ANN).
+option (§5.3): a preallocated device-resident [capacity, D] lane searched
+by one fused top-k dispatch (exact search — see DESIGN.md §3 for why exact
+brute-force is the TPU-native replacement for Redis/Milvus ANN). Since the
+StoreBank refactor the store is a thin *lane view*: device rows, validity
+masks, and eviction counters live in a ``repro.core.store_bank.StoreBank``
+(a standalone store owns a 1-lane bank; a hierarchy stacks its levels into
+one shared [L, cap, D] bank via ``StoreBank.adopt`` so the whole hierarchy
+is searched in ONE dispatch). The store keeps the host-side entry metadata,
+victim selection, and the public add/search/remove/save/load API.
+
 Adds are O(1) jitted functional updates with buffer donation. Contents can
 be persisted to disk and warm-started (§4 "bring a cache to a warm state").
 
@@ -12,7 +19,6 @@ repro.distributed.sharded_store.
 """
 from __future__ import annotations
 
-import functools
 import json
 import os
 import time
@@ -23,7 +29,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import similarity as sim
+from repro.core.store_bank import (  # noqa: F401 — re-exported for back-compat
+    StoreBank,
+    pad_to_bucket,
+    prepare_scatter,
+    select_victim,
+)
 
 
 @dataclass
@@ -32,59 +43,6 @@ class Entry:
     query: str
     response: str
     meta: Dict[str, Any] = field(default_factory=dict)
-
-
-# module-level jits: compiled once per (capacity, dim) shape and shared by
-# every store instance — a 4-level hierarchy's stores reuse one executable
-@functools.partial(jax.jit, donate_argnums=(0, 1))
-def _scatter_one(buf, valid, vec, idx):
-    return buf.at[idx].set(vec), valid.at[idx].set(True)
-
-
-@functools.partial(jax.jit, donate_argnums=(0, 1))
-def _scatter_rows(buf, valid, rows, idxs):
-    return buf.at[idxs].set(rows), valid.at[idxs].set(True)
-
-
-def pad_to_bucket(rows: np.ndarray) -> Tuple[np.ndarray, int]:
-    """Zero-pad a [N, D] block to the next power-of-two row bucket.
-
-    Serving drains variable-size micro-batches; an unbucketed jit would
-    recompile per distinct N (stalling the lookup scheduler for hundreds of
-    ms at each new size). Returns the padded block and the original N so the
-    caller can slice the result back down. Shared by the in-memory and
-    sharded search paths.
-    """
-    n = rows.shape[0]
-    bucket = 1 << (n - 1).bit_length() if n > 1 else 1
-    if bucket > n:
-        rows = np.concatenate(
-            [rows, np.zeros((bucket - n, *rows.shape[1:]), rows.dtype)]
-        )
-    return rows, n
-
-
-def prepare_scatter(idxs: List[int], rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-    """Build the (rows, idxs) update for a multi-row ``buf.at[idxs].set``.
-
-    Deduplicates repeated slots last-write-wins (a batch that wraps capacity
-    may pick the same victim twice; XLA scatter order for conflicting updates
-    is implementation-defined, the sequential loop's is not) and pads to the
-    next power-of-two bucket by repeating the final update (identical
-    duplicate writes are order-independent) so the scatter jit compiles per
-    bucket, not per batch size. Shared by the in-memory and sharded stores.
-    """
-    slot_to_row: Dict[int, int] = {}
-    for j, idx in enumerate(idxs):
-        slot_to_row[idx] = j
-    out_idx = np.fromiter(slot_to_row.keys(), np.int32, len(slot_to_row))
-    out_rows = rows[np.fromiter(slot_to_row.values(), np.int64, len(slot_to_row))]
-    bucket = 1 << (len(out_idx) - 1).bit_length() if len(out_idx) > 1 else 1
-    if bucket > len(out_idx):
-        pad = bucket - len(out_idx)
-        out_idx = np.concatenate([out_idx, np.repeat(out_idx[-1:], pad)])
-        out_rows = np.concatenate([out_rows, np.repeat(out_rows[-1:], pad, axis=0)])
-    return out_rows, out_idx
 
 
 class InMemoryVectorStore:
@@ -102,12 +60,11 @@ class InMemoryVectorStore:
         self.metric = metric
         self.eviction = eviction
         self.use_pallas = use_pallas
-        self._buf = jnp.zeros((capacity, dim), jnp.float32)
-        self._valid = jnp.zeros((capacity,), bool)
+        # lane view: device rows/masks/counters live in the bank; a fresh
+        # store owns a private 1-lane bank until a hierarchy adopts it
+        self._bank = StoreBank(dim, [capacity], metric=metric, use_pallas=use_pallas)
+        self._lane = 0
         self._entries: List[Optional[Entry]] = [None] * capacity
-        self._last_access = np.zeros((capacity,), np.float64)
-        self._access_count = np.zeros((capacity,), np.int64)
-        self._insert_seq = np.zeros((capacity,), np.int64)
         self._seq = 0
         self.size = 0  # live entries
         self._next_key = 0
@@ -115,11 +72,27 @@ class InMemoryVectorStore:
         self._free: List[int] = []  # slots freed by remove(), reused before eviction
         self._tail = 0  # slots ever occupied; grows monotonically to capacity
 
-        self._add_fn = _scatter_one
-        # multi-row scatter for add_batch; rows/idxs are padded to power-of-two
-        # buckets so the jit only retraces per bucket, not per batch size
-        self._add_batch_fn = _scatter_rows
-        self._search_fns: Dict[int, Any] = {}
+    # -- lane views (device rows + counters live in the bank) -------------------
+
+    @property
+    def _buf(self) -> jax.Array:
+        return self._bank.lane_buf(self._lane, self.capacity)
+
+    @property
+    def _valid(self) -> jax.Array:
+        return self._bank.lane_valid(self._lane, self.capacity)
+
+    @property
+    def _last_access(self) -> np.ndarray:  # writable numpy view into the bank
+        return self._bank.last_access[self._lane][: self.capacity]
+
+    @property
+    def _access_count(self) -> np.ndarray:
+        return self._bank.access_count[self._lane][: self.capacity]
+
+    @property
+    def _insert_seq(self) -> np.ndarray:
+        return self._bank.insert_seq[self._lane][: self.capacity]
 
     # -- internals ----------------------------------------------------------
 
@@ -129,52 +102,35 @@ class InMemoryVectorStore:
         if self._tail < self.capacity:
             return self._tail
         # every slot holds a live entry: evict per policy
-        if self.eviction == "fifo":
-            return int(np.argmin(self._insert_seq))
-        if self.eviction == "lfu":
-            return int(np.argmin(self._access_count))
-        return int(np.argmin(self._last_access))
+        return select_victim(
+            self.eviction, self._last_access, self._access_count, self._insert_seq
+        )
 
-    def _search_fn(self, k: int):
-        if k not in self._search_fns:
-            metric = self.metric
-            if self.use_pallas:
-                from repro.kernels.similarity_topk import ops as st_ops
-
-                self._search_fns[k] = jax.jit(
-                    lambda buf, valid, q: st_ops.similarity_topk(
-                        buf, valid, q, k=k, metric=metric, interpret=True
-                    )
-                )
-            else:
-                self._search_fns[k] = jax.jit(
-                    lambda buf, valid, q: sim.top_k_scores(buf, valid, q, k, metric)
-                )
-        return self._search_fns[k]
-
-    # -- API -----------------------------------------------------------------
-
-    def add(self, vec: np.ndarray, query: str, response: str, meta: Optional[dict] = None) -> int:
-        idx = self._victim()
+    def _claim(self, idx: int, query: str, response: str, meta: Optional[dict]) -> int:
+        """Host-side bookkeeping for one placement (shared by add/add_batch)."""
         evicted = self._entries[idx]
         if evicted is not None:
             self._key_to_slot.pop(evicted.key, None)
             self.size -= 1
         if idx == self._tail:
             self._tail += 1
-        self._buf, self._valid = self._add_fn(
-            self._buf, self._valid, jnp.asarray(vec, jnp.float32), idx
-        )
         key = self._next_key
         self._next_key += 1
         self._entries[idx] = Entry(key, query, response, dict(meta or {}))
         self._key_to_slot[key] = idx
-        now = time.monotonic()
-        self._last_access[idx] = now
-        self._access_count[idx] = 0
-        self._insert_seq[idx] = self._seq
+        self._bank.note_insert(self._lane, idx, self._seq)
         self._seq += 1
         self.size += 1
+        return key
+
+    # -- API -----------------------------------------------------------------
+
+    def add(self, vec: np.ndarray, query: str, response: str, meta: Optional[dict] = None) -> int:
+        idx = self._victim()
+        key = self._claim(idx, query, response, meta)
+        self._bank.set_rows(
+            self._lane, [idx], np.asarray(vec, np.float32).reshape(1, self.dim)
+        )
         return key
 
     def add_batch(
@@ -190,7 +146,7 @@ class InMemoryVectorStore:
         host-side in insertion order, so the result is entry-for-entry
         identical to N sequential ``add`` calls (freed-slot reuse, tail
         growth, and policy eviction included); only the device work is fused
-        into a single donated ``buf.at[idxs].set(rows)``.
+        into a single donated scatter into the bank lane.
         """
         n = len(queries)
         if n == 0:
@@ -201,27 +157,9 @@ class InMemoryVectorStore:
         idxs: List[int] = []
         for j in range(n):
             idx = self._victim()
-            evicted = self._entries[idx]
-            if evicted is not None:
-                self._key_to_slot.pop(evicted.key, None)
-                self.size -= 1
-            if idx == self._tail:
-                self._tail += 1
-            key = self._next_key
-            self._next_key += 1
-            self._entries[idx] = Entry(key, queries[j], responses[j], dict(metas[j] or {}))
-            self._key_to_slot[key] = idx
-            self._last_access[idx] = time.monotonic()
-            self._access_count[idx] = 0
-            self._insert_seq[idx] = self._seq
-            self._seq += 1
-            self.size += 1
-            keys.append(key)
+            keys.append(self._claim(idx, queries[j], responses[j], metas[j]))
             idxs.append(idx)
-        sel, scatter_idx = prepare_scatter(idxs, rows)
-        self._buf, self._valid = self._add_batch_fn(
-            self._buf, self._valid, jnp.asarray(sel), jnp.asarray(scatter_idx)
-        )
+        self._bank.set_rows(self._lane, idxs, rows)
         return keys
 
     def search(self, q_vec: np.ndarray, k: int = 4) -> List[Tuple[float, Entry]]:
@@ -240,14 +178,25 @@ class InMemoryVectorStore:
         if self.size == 0:
             return [[] for _ in range(len(q_vecs))]
         k_eff = min(k, self.capacity)
-        q, n_q = pad_to_bucket(np.asarray(q_vecs, np.float32))
-        s, idx = self._search_fn(k_eff)(self._buf, self._valid, jnp.asarray(q))
-        s, idx = np.asarray(s)[:n_q], np.asarray(idx)[:n_q]
+        s, idx = self._bank.search_lane(
+            self._lane, np.asarray(q_vecs, np.float32), k_eff
+        )
+        return self.join_candidates(s, idx, touch=touch)
+
+    def join_candidates(
+        self, scores: np.ndarray, idx: np.ndarray, touch: bool = True
+    ) -> List[List[Tuple[float, Entry]]]:
+        """Join raw (scores [Q, k], slot idx [Q, k]) search output against the
+        host-side entries — the step shared by this store's ``search_batch``
+        and the hierarchy's fused all-lanes lookup, which searches the whole
+        bank in one dispatch and joins each lane's slice here."""
         now = time.monotonic()
         out: List[List[Tuple[float, Entry]]] = []
-        for srow, irow in zip(s, idx):
+        for srow, irow in zip(scores, idx):
             row = []
             for sc, i in zip(srow, irow):
+                if int(i) >= self.capacity:
+                    continue  # shared-bank padding lane rows beyond our capacity
                 e = self._entries[int(i)]
                 if not np.isfinite(sc) or e is None:
                     continue
@@ -276,7 +225,7 @@ class InMemoryVectorStore:
         if idx is None:
             return False
         self._entries[idx] = None
-        self._valid = self._valid.at[idx].set(False)
+        self._bank.invalidate(self._lane, idx)
         self._free.append(idx)
         self.size -= 1
         return True
@@ -292,9 +241,9 @@ class InMemoryVectorStore:
             os.path.join(path, "vectors.npz"),
             buf=np.asarray(self._buf),
             valid=np.asarray(self._valid),
-            last_access=self._last_access,
-            access_count=self._access_count,
-            insert_seq=self._insert_seq,
+            last_access=np.asarray(self._last_access),
+            access_count=np.asarray(self._access_count),
+            insert_seq=np.asarray(self._insert_seq),
         )
         manifest = {
             "dim": self.dim,
@@ -305,6 +254,8 @@ class InMemoryVectorStore:
             "tail": self._tail,
             "next_key": self._next_key,
             "seq": self._seq,
+            # cosine banks persist unit rows; loaders skip re-normalization
+            "normalized": self._bank.prenormalized,
             "entries": [
                 None if e is None else {"key": e.key, "query": e.query, "response": e.response, "meta": e.meta}
                 for e in self._entries
@@ -321,11 +272,16 @@ class InMemoryVectorStore:
             m = json.load(f)
         store = cls(m["dim"], m["capacity"], m["metric"], m["eviction"], **kwargs)
         z = np.load(os.path.join(path, "vectors.npz"))
-        store._buf = jnp.asarray(z["buf"])
-        store._valid = jnp.asarray(z["valid"])
-        store._last_access = z["last_access"]
-        store._access_count = z["access_count"]
-        store._insert_seq = z["insert_seq"]
+        buf = np.asarray(z["buf"], np.float32)
+        if store._bank.prenormalized and not m.get("normalized", False):
+            # pre-bank snapshot: raw rows on disk, the bank expects unit rows
+            norms = np.maximum(np.linalg.norm(buf, axis=-1, keepdims=True), 1e-9)
+            buf = buf / norms
+        store._bank.buf = jnp.asarray(buf)[None]
+        store._bank.valid = jnp.asarray(z["valid"])[None]
+        store._bank.last_access[0] = z["last_access"]
+        store._bank.access_count[0] = z["access_count"]
+        store._bank.insert_seq[0] = z["insert_seq"]
         store.size = m["size"]
         store._next_key = m["next_key"]
         store._seq = m["seq"]

@@ -1,8 +1,10 @@
 """Mesh-sharded vector store: the cache's distributed data path.
 
-The DB matrix [n_shards * cap, D] is sharded over the mesh `data` axis (and,
-multi-pod, over `pod` — each pod's shard acts as its L1, cross-pod merge is
-the L2 exchange; DESIGN.md §3). Lookup runs under shard_map:
+Since the StoreBank refactor the DB is a bank of *shard lanes*: one
+[n_shards, cap_local, D] tensor whose lane axis is sharded over the mesh
+`data` axis (and, multi-pod, over `pod` — each pod's lanes act as its L1,
+cross-pod merge is the L2 exchange; DESIGN.md §3). Lookup runs under
+shard_map:
 
     per shard: MXU dot [Q, cap_local] -> local top-k
     all_gather of the tiny [Q, k] candidate sets over (pod, data)
@@ -11,10 +13,15 @@ the L2 exchange; DESIGN.md §3). Lookup runs under shard_map:
 Only k candidates per shard cross the interconnect — never the [Q, N]
 score matrix. This is the step the dry-run lowers on the production mesh
 (`cache_lookup` rows in EXPERIMENTS.md §Dry-run).
+
+The bank also holds per-lane recency/frequency counters, so the sharded DB
+now has a real eviction *policy*: once every slot is live, adds evict by
+lru/lfu/fifo using the same victim rule as ``InMemoryVectorStore``
+(``search_batch(touch=...)`` and ``touch_keys`` feed the counters).
 """
 from __future__ import annotations
 
-import functools
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -23,7 +30,13 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.vector_store import pad_to_bucket, prepare_scatter
+from repro.core.store_bank import (
+    StoreBank,
+    _normalize_rows as _norm_rows,
+    pad_to_bucket,
+    prepare_scatter,
+    select_victim,
+)
 from repro.distributed.sharding import resolve_spec
 
 
@@ -35,7 +48,8 @@ def make_sharded_lookup(mesh, *, k: int, metric: str = "cosine", hierarchical: b
     """Builds the jitted sharded lookup: (db, valid, q) -> (scores, global idx).
 
     db: [N, D] sharded P(("pod","data"), None); valid: [N] likewise;
-    q: [Q, D] replicated.
+    q: [Q, D] replicated. (Flat-buffer variant, kept for the dry-run and the
+    perf-iteration studies; the store itself uses ``make_banked_lookup``.)
     """
     axes = _shard_axes(mesh)
     if not axes:
@@ -51,8 +65,8 @@ def make_sharded_lookup(mesh, *, k: int, metric: str = "cosine", hierarchical: b
         dbn = db_l
         qn = q
         if metric == "cosine":
-            dbn = db_l / jnp.maximum(jnp.linalg.norm(db_l, axis=-1, keepdims=True), 1e-9)
-            qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+            dbn = _norm_rows(db_l)
+            qn = _norm_rows(q)
         s = qn @ dbn.T  # [Q, cap_local]
         s = jnp.where(valid_l[None, :], s, -jnp.inf)
         k_eff = min(k, cap_local)
@@ -105,10 +119,96 @@ def make_sharded_lookup(mesh, *, k: int, metric: str = "cosine", hierarchical: b
     return jax.jit(fn)
 
 
-class ShardedVectorStore:
-    """Host-facing wrapper: functional adds into a mesh-sharded DB buffer."""
+def make_banked_lookup(
+    mesh, *, k: int, metric: str = "cosine", hierarchical: bool = True,
+    prenormalized: bool = False,
+):
+    """Jitted lookup over a bank of shard lanes:
+    (db [L, cap_local, D], valid [L, cap_local], q [Q, D]) ->
+    (scores [Q, k], flat global idx [Q, k] where idx = lane*cap_local+within).
 
-    def __init__(self, mesh, dim: int, capacity: int, *, k: int = 4, metric: str = "cosine"):
+    The lane axis is sharded over the mesh, so each device flattens its
+    local lanes into one [lanes_loc*cap_local, D] block and the collective
+    schedule is identical to the flat-buffer lookup. ``prenormalized`` skips
+    the db normalization (the bank keeps unit rows for cosine lanes).
+    """
+    axes = _shard_axes(mesh)
+    if not axes:
+
+        def flat(db, valid, q):
+            L, capl, D = db.shape
+            db2 = db.reshape(L * capl, D)
+            v2 = valid.reshape(L * capl)
+            dbn = db2 if (metric != "cosine" or prenormalized) else _norm_rows(db2)
+            qn = _norm_rows(q) if metric == "cosine" else q
+            s = jnp.where(v2[None, :], qn @ dbn.T, -jnp.inf)
+            return jax.lax.top_k(s, min(k, L * capl))
+
+        return jax.jit(flat)
+
+    axis_tuple = axes if len(axes) > 1 else axes[0]
+
+    def local_lookup(db_l, valid_l, q):
+        # db_l: [lanes_loc, cap_local, D] — this device's lanes, flattened so
+        # the per-shard math matches the flat-buffer path exactly
+        lanes_loc, cap_local, D = db_l.shape
+        cap_shard = lanes_loc * cap_local
+        db2 = db_l.reshape(cap_shard, D)
+        v2 = valid_l.reshape(cap_shard)
+        dbn = db2 if (metric != "cosine" or prenormalized) else _norm_rows(db2)
+        qn = _norm_rows(q) if metric == "cosine" else q
+        s = jnp.where(v2[None, :], qn @ dbn.T, -jnp.inf)  # [Q, cap_shard]
+        k_eff = min(k, cap_shard)
+        top_s, top_i = jax.lax.top_k(s, k_eff)  # shard-local flat indices
+        shard_id = jnp.zeros((), jnp.int32)
+        mul = 1
+        for a in reversed(axes):
+            shard_id = shard_id + jax.lax.axis_index(a) * mul
+            mul = mul * mesh.shape[a]
+        # shard-local flat idx -> bank-global flat idx (lane-major layout)
+        top_i = top_i + shard_id * cap_shard
+        gs, gi = top_s, top_i
+        if hierarchical:
+            for a in reversed(axes):  # innermost (ICI) first, DCN last
+                all_s = jax.lax.all_gather(gs, a, axis=0, tiled=False)
+                all_i = jax.lax.all_gather(gi, a, axis=0, tiled=False)
+                flat_s = jnp.moveaxis(all_s, 0, 1).reshape(q.shape[0], -1)
+                flat_i = jnp.moveaxis(all_i, 0, 1).reshape(q.shape[0], -1)
+                k_eff2 = min(k, flat_s.shape[1])
+                gs, pos = jax.lax.top_k(flat_s, k_eff2)
+                gi = jnp.take_along_axis(flat_i, pos, axis=1)
+            return gs, gi
+        for a in axes:
+            gs = jax.lax.all_gather(gs, a, axis=0, tiled=False)
+            gi = jax.lax.all_gather(gi, a, axis=0, tiled=False)
+        gs = gs.reshape(-1, *top_s.shape[-2:])
+        gi = gi.reshape(-1, *top_i.shape[-2:])
+        flat_s = jnp.moveaxis(gs, 0, 1).reshape(q.shape[0], -1)
+        flat_i = jnp.moveaxis(gi, 0, 1).reshape(q.shape[0], -1)
+        gs, pos = jax.lax.top_k(flat_s, k)
+        gi = jnp.take_along_axis(flat_i, pos, axis=1)
+        return gs, gi
+
+    fn = shard_map(
+        local_lookup,
+        mesh=mesh,
+        in_specs=(P(axis_tuple, None, None), P(axis_tuple, None), P()),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+class ShardedVectorStore:
+    """Host-facing lane view over a mesh-sharded StoreBank (one lane per
+    shard): functional adds, fused sharded lookup, and a real eviction
+    policy backed by the bank's per-lane counters."""
+
+    def __init__(
+        self, mesh, dim: int, capacity: int, *, k: int = 4, metric: str = "cosine",
+        eviction: str = "lru",  # lru | lfu | fifo
+    ):
+        assert eviction in ("lru", "lfu", "fifo")
         self.mesh = mesh
         self.dim = dim
         axes = _shard_axes(mesh)
@@ -117,53 +217,93 @@ class ShardedVectorStore:
             n_shards *= mesh.shape[a]
         self.capacity = capacity - (capacity % max(n_shards, 1)) or n_shards
         self.n_shards = n_shards
+        self.cap_local = self.capacity // n_shards
         self.metric = metric
+        self.eviction = eviction
         self.k = k
-        spec = P(axes if len(axes) > 1 else (axes[0] if axes else None), None)
-        self._db_sharding = jax.NamedSharding(mesh, spec)
-        self._valid_sharding = jax.NamedSharding(mesh, P(spec[0]))
-        self._db = jax.device_put(jnp.zeros((self.capacity, dim), jnp.float32), self._db_sharding)
-        self._valid = jax.device_put(jnp.zeros((self.capacity,), bool), self._valid_sharding)
-        self._lookup = make_sharded_lookup(mesh, k=k, metric=metric)
-        self._add = jax.jit(
-            lambda db, valid, vec, idx: (db.at[idx].set(vec), valid.at[idx].set(True)),
-            donate_argnums=(0, 1),
-            out_shardings=(self._db_sharding, self._valid_sharding),
+        lane_axes = axes if len(axes) > 1 else (axes[0] if axes else None)
+        self._db_sharding = jax.NamedSharding(mesh, P(lane_axes, None, None))
+        self._valid_sharding = jax.NamedSharding(mesh, P(lane_axes, None))
+        buf = jax.device_put(
+            jnp.zeros((n_shards, self.cap_local, dim), jnp.float32), self._db_sharding
         )
+        valid = jax.device_put(
+            jnp.zeros((n_shards, self.cap_local), bool), self._valid_sharding
+        )
+        # the bank owns rows/masks/counters; this store is its sharded lane view
+        self.bank = StoreBank(dim, [self.cap_local] * n_shards, metric=metric,
+                              buf=buf, valid=valid)
+        self._lookup = make_banked_lookup(
+            mesh, k=k, metric=metric, prenormalized=self.bank.prenormalized
+        )
+        normalize = self.bank.prenormalized
+
+        def _scatter(buf, valid, lanes, withins, rows):
+            if normalize:
+                rows = _norm_rows(rows)
+            return (
+                buf.at[lanes, withins].set(rows),
+                valid.at[lanes, withins].set(True),
+            )
+
         self._add_many = jax.jit(
-            lambda db, valid, rows, idxs: (db.at[idxs].set(rows), valid.at[idxs].set(True)),
+            _scatter,
             donate_argnums=(0, 1),
             out_shardings=(self._db_sharding, self._valid_sharding),
         )
         self._invalidate = jax.jit(
-            lambda valid, idx: valid.at[idx].set(False),
+            lambda valid, lane, within: valid.at[lane, within].set(False),
             donate_argnums=(0,),
             out_shardings=self._valid_sharding,
         )
         self.size = 0
         self.payloads: List[Optional[tuple]] = [None] * self.capacity
-        self._rr = 0  # round-robin shard cursor for balanced placement
-        # key -> slot map + freed-slot reuse (ported from InMemoryVectorStore)
-        # so sharded caches can evict: remove() frees the slot, the next add
-        # reclaims it before the round-robin cursor advances
+        self._rr = 0  # round-robin placement cursor for the first fill
+        self._seq = 0  # insertion counter feeding the fifo policy
+        # key -> slot map + freed-slot reuse (shared scheme with
+        # InMemoryVectorStore) so sharded caches can evict: remove() frees the
+        # slot, the next add reclaims it before the round-robin cursor advances
         self._next_key = 0
         self._key_to_slot: Dict[int, int] = {}
         self._slot_key: List[Optional[int]] = [None] * self.capacity
         self._free: List[int] = []
 
+    # flat views of the banked buffers (the pre-bank [N, D] layout; lane-major
+    # flattening preserves the old global slot numbering)
+    @property
+    def _db(self) -> jax.Array:
+        return self.bank.buf.reshape(self.capacity, self.dim)
+
+    @property
+    def _valid(self) -> jax.Array:
+        return self.bank.valid.reshape(self.capacity)
+
+    # flat slot idx <-> (lane, within); flat layout is lane-major, matching
+    # the banked lookup's global index translation
+    def _lane_within(self, idx: int) -> Tuple[int, int]:
+        return idx // self.cap_local, idx % self.cap_local
+
     def _next_index(self) -> int:
         if self._free:
             return self._free.pop()
-        cap_local = self.capacity // self.n_shards
-        shard = self._rr % self.n_shards
-        within = (self._rr // self.n_shards) % cap_local
-        self._rr += 1
-        return shard * cap_local + within
+        if self._rr < self.capacity:
+            # first fill: balanced round-robin placement across shard lanes
+            shard = self._rr % self.n_shards
+            within = (self._rr // self.n_shards) % self.cap_local
+            self._rr += 1
+            return shard * self.cap_local + within
+        # every slot is live: evict per policy over the bank's flat counters
+        return select_victim(
+            self.eviction,
+            self.bank.last_access.reshape(-1),
+            self.bank.access_count.reshape(-1),
+            self.bank.insert_seq.reshape(-1),
+        )
 
     def _claim_slot(self, idx: int, query: str, response: str) -> int:
         """Host-side bookkeeping for one placement (shared by add/add_batch)."""
         old = self._slot_key[idx]
-        if old is not None:  # round-robin wrap overwrote a live entry
+        if old is not None:  # policy eviction overwrote a live entry
             self._key_to_slot.pop(old, None)
         else:
             self.size += 1
@@ -172,22 +312,33 @@ class ShardedVectorStore:
         self.payloads[idx] = (query, response)
         self._slot_key[idx] = key
         self._key_to_slot[key] = idx
+        lane, within = self._lane_within(idx)
+        self.bank.note_insert(lane, within, self._seq)
+        self._seq += 1
         return key
+
+    def _scatter_rows(self, idxs: List[int], rows: np.ndarray) -> None:
+        sel_rows, sel_idx = prepare_scatter(idxs, rows)
+        lanes = (sel_idx // self.cap_local).astype(np.int32)
+        withins = (sel_idx % self.cap_local).astype(np.int32)
+        self.bank.buf, self.bank.valid = self._add_many(
+            self.bank.buf, self.bank.valid,
+            jnp.asarray(lanes), jnp.asarray(withins), jnp.asarray(sel_rows),
+        )
 
     def add(self, vec: np.ndarray, query: str, response: str) -> int:
         idx = self._next_index()
         key = self._claim_slot(idx, query, response)
-        self._db, self._valid = self._add(self._db, self._valid, jnp.asarray(vec, jnp.float32), idx)
+        self._scatter_rows([idx], np.asarray(vec, np.float32).reshape(1, self.dim))
         return key
 
     def add_batch(self, vecs: np.ndarray, queries, responses) -> List[int]:
-        """N round-robin placements in ONE donated scatter into the sharded DB.
+        """N placements in ONE donated scatter into the sharded bank.
 
-        Placement order (and therefore the shard each entry lands on) matches
-        N sequential ``add`` calls, freed-slot reuse included; a batch larger
-        than the capacity wraps the round-robin cursor, in which case the
-        last write to a slot wins — exactly what the sequential loop would
-        leave behind.
+        Placement order (and therefore the shard lane each entry lands on)
+        matches N sequential ``add`` calls, freed-slot reuse and policy
+        eviction included; if the batch overwrites one slot twice, the last
+        write wins — exactly what the sequential loop would leave behind.
         """
         n = len(queries)
         if n == 0:
@@ -199,10 +350,7 @@ class ShardedVectorStore:
             idx = self._next_index()
             keys.append(self._claim_slot(idx, queries[j], responses[j]))
             idxs.append(idx)
-        scatter_rows, scatter_idx = prepare_scatter(idxs, rows)
-        self._db, self._valid = self._add_many(
-            self._db, self._valid, jnp.asarray(scatter_rows), jnp.asarray(scatter_idx)
-        )
+        self._scatter_rows(idxs, rows)
         return keys
 
     def remove(self, key: int) -> bool:
@@ -213,7 +361,8 @@ class ShardedVectorStore:
             return False
         self.payloads[idx] = None
         self._slot_key[idx] = None
-        self._valid = self._invalidate(self._valid, idx)
+        lane, within = self._lane_within(idx)
+        self.bank.valid = self._invalidate(self.bank.valid, lane, within)
         self._free.append(idx)
         self.size -= 1
         return True
@@ -221,11 +370,24 @@ class ShardedVectorStore:
     def __len__(self) -> int:
         return self.size
 
+    def touch_keys(self, keys) -> None:
+        """Deferred recency/frequency bookkeeping (same contract as
+        ``InMemoryVectorStore.touch_keys``): one bump per occurrence; keys
+        overwritten since the search are skipped."""
+        now = time.monotonic()
+        for key in keys:
+            idx = self._key_to_slot.get(key)
+            if idx is not None:
+                lane, within = self._lane_within(idx)
+                self.bank.last_access[lane, within] = now
+                self.bank.access_count[lane, within] += 1
+
     def search(self, q_vecs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         # Q padded to a power-of-two bucket so variable serving batch sizes
         # reuse O(log Q) compiled variants instead of retracing per size
         q, n_q = pad_to_bucket(np.atleast_2d(np.asarray(q_vecs, np.float32)))
-        s, i = self._lookup(self._db, self._valid, jnp.asarray(q))
+        self.bank.dispatches += 1
+        s, i = self._lookup(self.bank.buf, self.bank.valid, jnp.asarray(q))
         return np.asarray(s)[:n_q], np.asarray(i)[:n_q]
 
     def search_batch(
@@ -239,18 +401,23 @@ class ShardedVectorStore:
         the finite (score, (query, response)) candidates in score order, i.e.
         the same join ``InMemoryVectorStore.search_batch`` performs. ``k``
         caps the candidates per query (at most the configured search k);
-        ``touch`` is accepted for signature uniformity — the sharded store
-        keeps no recency/frequency counters yet.
-        """
+        ``touch=True`` bumps the bank's per-lane recency/frequency counters
+        for every returned candidate — the LRU/LFU signal the eviction
+        policy consumes (``touch=False`` defers to ``touch_keys``)."""
         q = np.atleast_2d(np.asarray(q_vecs, np.float32))
         s, idx = self.search(q)
         k_eff = self.k if k is None else min(k, self.k)
+        now = time.monotonic()
         out: List[List[Tuple[float, tuple]]] = []
         for srow, irow in zip(s, idx):
             row = []
             for sc, i in zip(srow, irow):
                 payload = self.payloads[int(i)] if 0 <= int(i) < self.capacity else None
                 if np.isfinite(sc) and payload is not None:
+                    if len(row) < k_eff and touch:
+                        lane, within = self._lane_within(int(i))
+                        self.bank.last_access[lane, within] = now
+                        self.bank.access_count[lane, within] += 1
                     row.append((float(sc), payload))
             out.append(row[:k_eff])
         return out

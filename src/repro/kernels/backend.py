@@ -1,0 +1,65 @@
+"""Kernel backend selection: compiled Pallas vs interpret mode.
+
+Every kernel package's public wrapper takes ``interpret=None`` and resolves
+it here: interpret mode (the kernel body runs in Python) is only the right
+default on CPU, where Mosaic/Triton lowering is unavailable — on TPU/GPU the
+compiled Pallas path is selected automatically, so the kernels we wrote are
+actually the ones that run in production.
+
+Selection matrix (first match wins):
+
+    explicit ``interpret=...`` at the call site   -> as given
+    ``set_interpret_override(...)`` (config hook) -> the override
+    ``REPRO_KERNEL_INTERPRET`` env var            -> truthy/falsy value
+    ``jax.default_backend() == "cpu"``            -> interpret
+    otherwise (tpu, gpu, ...)                     -> compiled
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+_TRUTHY = ("1", "true", "yes", "on", "interpret")
+_FALSY = ("0", "false", "no", "off", "compiled")
+
+# process-wide config override (set_interpret_override); None = auto
+_override: Optional[bool] = None
+
+
+def set_interpret_override(value: Optional[bool]) -> None:
+    """Force interpret (True), compiled (False), or auto (None) for every
+    kernel call that does not pass ``interpret`` explicitly."""
+    global _override
+    _override = value
+
+
+def get_interpret_override() -> Optional[bool]:
+    return _override
+
+
+def _env_override() -> Optional[bool]:
+    raw = os.environ.get("REPRO_KERNEL_INTERPRET")
+    if raw is None:
+        return None
+    v = raw.strip().lower()
+    if v in _TRUTHY:
+        return True
+    if v in _FALSY:
+        return False
+    raise ValueError(
+        f"REPRO_KERNEL_INTERPRET={raw!r}: expected one of {_TRUTHY + _FALSY}"
+    )
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve the effective interpret flag for one kernel dispatch."""
+    if interpret is not None:
+        return bool(interpret)
+    if _override is not None:
+        return _override
+    env = _env_override()
+    if env is not None:
+        return env
+    return jax.default_backend() == "cpu"

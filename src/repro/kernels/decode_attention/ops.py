@@ -1,10 +1,12 @@
-"""Public jit'd wrapper for decode attention."""
+"""Public wrapper for decode attention (backend auto-selected)."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.decode_attention.kernel import decode_attention_kernel
 from repro.kernels.decode_attention.ref import decode_attention_ref
 
@@ -12,12 +14,24 @@ from repro.kernels.decode_attention.ref import decode_attention_ref
 @functools.partial(
     jax.jit, static_argnames=("window", "softcap", "scale", "block_s", "interpret", "use_kernel")
 )
-def decode_attention(q, k, v, lengths, *, window=0, softcap=0.0, scale=None,
-                     block_s=256, interpret=True, use_kernel=True):
-    """q [B,H,Dh], k/v [B,S,KH,Dh], lengths [B] -> [B,H,Dh]."""
+def _decode_attention(q, k, v, lengths, *, window, softcap, scale, block_s,
+                      interpret, use_kernel):
     if not use_kernel:
         return decode_attention_ref(q, k, v, lengths, window=window, softcap=softcap, scale=scale)
     return decode_attention_kernel(
         q, k, v, lengths, window=window, softcap=softcap, scale=scale,
         block_s=block_s, interpret=interpret,
+    )
+
+
+def decode_attention(q, k, v, lengths, *, window=0, softcap=0.0, scale=None,
+                     block_s=256, interpret: Optional[bool] = None, use_kernel=True):
+    """q [B,H,Dh], k/v [B,S,KH,Dh], lengths [B] -> [B,H,Dh].
+
+    ``interpret=None`` auto-selects: interpret on CPU, compiled Pallas on
+    TPU/GPU (see repro.kernels.backend).
+    """
+    return _decode_attention(
+        q, k, v, lengths, window=window, softcap=softcap, scale=scale,
+        block_s=block_s, interpret=resolve_interpret(interpret), use_kernel=use_kernel,
     )

@@ -1,10 +1,12 @@
-"""Public jit'd wrapper for flash attention."""
+"""Public wrapper for flash attention (backend auto-selected)."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 from repro.kernels.flash_attention.ref import flash_attention_ref
 
@@ -14,15 +16,28 @@ from repro.kernels.flash_attention.ref import flash_attention_ref
     static_argnames=("causal", "window", "softcap", "scale", "block_q", "block_k",
                      "interpret", "use_kernel"),
 )
-def flash_attention(
-    q, k, v, *, causal=True, window=0, softcap=0.0, scale=None,
-    block_q=128, block_k=128, interpret=True, use_kernel=True,
-):
-    """q [B,S,H,Dh], k/v [B,S,KH,Dh] -> [B,S,H,Dh] (GQA by head grouping)."""
+def _flash_attention(q, k, v, *, causal, window, softcap, scale, block_q, block_k,
+                     interpret, use_kernel):
     if not use_kernel:
         return flash_attention_ref(q, k, v, causal=causal, window=window,
                                    softcap=softcap, scale=scale)
     return flash_attention_kernel(
         q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
         block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+def flash_attention(
+    q, k, v, *, causal=True, window=0, softcap=0.0, scale=None,
+    block_q=128, block_k=128, interpret: Optional[bool] = None, use_kernel=True,
+):
+    """q [B,S,H,Dh], k/v [B,S,KH,Dh] -> [B,S,H,Dh] (GQA by head grouping).
+
+    ``interpret=None`` auto-selects: interpret on CPU, compiled Pallas on
+    TPU/GPU (see repro.kernels.backend).
+    """
+    return _flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        block_q=block_q, block_k=block_k,
+        interpret=resolve_interpret(interpret), use_kernel=use_kernel,
     )

@@ -48,6 +48,67 @@ def _topk_block_kernel(db_ref, valid_ref, q_ref, out_s_ref, out_i_ref, *, k: int
         s = jnp.where(col == idx[:, None], NEG, s)
 
 
+def _topk_lanes_kernel(db_ref, valid_ref, q_ref, out_s_ref, out_i_ref, *, k: int, block_n: int):
+    """Batched-lanes variant: grid (L, nb) — one lane (hierarchy level or DB
+    shard) per row of the grid, so L levels x nb blocks stream through VMEM
+    in ONE pallas dispatch instead of L sequential kernel launches."""
+    j = pl.program_id(1)  # block within the lane
+    db = db_ref[0]  # [block_n, D] (lane-sliced by the BlockSpec)
+    q = q_ref[...]  # [Q, D]
+    valid = valid_ref[0]  # [block_n, 1] f32 (1.0 = valid)
+
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32),
+        db.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [Q, block_n]
+    s = jnp.where(valid[:, 0][None, :] > 0.5, s, NEG)
+
+    Q = s.shape[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, (Q, block_n), 1)
+    base = j * block_n  # indices stay lane-local; ops.py keeps lanes separate
+    for t in range(k):
+        m = jnp.max(s, axis=1)
+        hit = s >= m[:, None]
+        idx = jnp.min(jnp.where(hit, col, jnp.int32(2**30)), axis=1)
+        out_s_ref[0, 0, :, t] = m
+        out_i_ref[0, 0, :, t] = idx + base
+        s = jnp.where(col == idx[:, None], NEG, s)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def similarity_topk_lanes_blocks(db, valid_f32, q, *, k: int, block_n: int = 512,
+                                 interpret: bool = True):
+    """db [L, N, D], valid_f32 [L, N, 1], q [Q, D] -> per-lane per-block
+    candidates (scores [L, nb, Q, k], lane-local idx [L, nb, Q, k])."""
+    L, N, D = db.shape
+    Q = q.shape[0]
+    assert N % block_n == 0, f"N={N} must be a multiple of block_n={block_n}"
+    nb = N // block_n
+
+    kernel = functools.partial(_topk_lanes_kernel, k=k, block_n=block_n)
+    out_shape = (
+        jax.ShapeDtypeStruct((L, nb, Q, k), jnp.float32),
+        jax.ShapeDtypeStruct((L, nb, Q, k), jnp.int32),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(L, nb),
+        in_specs=[
+            pl.BlockSpec((1, block_n, D), lambda l, j: (l, j, 0)),  # lane tile streams
+            pl.BlockSpec((1, block_n, 1), lambda l, j: (l, j, 0)),  # validity tile
+            pl.BlockSpec((Q, D), lambda l, j: (0, 0)),  # queries resident
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, Q, k), lambda l, j: (l, j, 0, 0)),
+            pl.BlockSpec((1, 1, Q, k), lambda l, j: (l, j, 0, 0)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(db, valid_f32, q)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
 def similarity_topk_blocks(db, valid_f32, q, *, k: int, block_n: int = 512, interpret: bool = True):
     """Returns per-block candidates (scores [nb, Q, k], idx [nb, Q, k])."""

@@ -1,17 +1,57 @@
-"""Public jit'd wrapper for the fused similarity+top-k lookup."""
+"""Public wrappers for the fused similarity+top-k lookup.
+
+Two entry points:
+
+  * ``similarity_topk``        — one store: db [N, D] -> (scores, idx) [Q, k]
+  * ``similarity_topk_lanes``  — a whole StoreBank: db [L, N, D] -> [Q, L, k],
+    every hierarchy level / shard lane scored in ONE kernel dispatch.
+
+``interpret=None`` (the default) auto-selects the backend via
+``repro.kernels.backend``: interpret mode on CPU, the compiled Pallas kernel
+on TPU/GPU. Each wrapper counts its host-level invocations so tests and
+benchmarks can assert dispatch budgets (``dispatch_count`` /
+``reset_dispatch_count``).
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.similarity_topk.kernel import similarity_topk_blocks
+from repro.kernels.backend import resolve_interpret
+from repro.kernels.similarity_topk.kernel import (
+    similarity_topk_blocks,
+    similarity_topk_lanes_blocks,
+)
+
+_dispatches = 0  # host-level kernel dispatches (single + lanes)
+
+
+def record_dispatch(n: int = 1) -> None:
+    """Count a dispatch issued outside these wrappers (e.g. a StoreBank
+    search that inlines the kernel body under its own jit)."""
+    global _dispatches
+    _dispatches += n
+
+
+def dispatch_count() -> int:
+    return _dispatches
+
+
+def reset_dispatch_count() -> None:
+    global _dispatches
+    _dispatches = 0
+
+
+def _block_for(N: int, block_n: int) -> int:
+    bn = min(block_n, max(128, 1 << (N - 1).bit_length()))
+    return min(bn, block_n)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "metric", "block_n", "interpret"))
-def similarity_topk(db, valid, q, *, k: int, metric: str = "cosine", block_n: int = 512,
-                    interpret: bool = True):
+def _similarity_topk(db, valid, q, *, k: int, metric: str, block_n: int, interpret: bool):
     """db [N, D], valid [N] bool, q [Q, D] -> (scores [Q,k], idx [Q,k]).
 
     cosine is handled by pre-normalizing both sides (dot == cosine on unit
@@ -27,8 +67,7 @@ def similarity_topk(db, valid, q, *, k: int, metric: str = "cosine", block_n: in
         raise ValueError(f"kernel path supports cosine/dot; got {metric!r}")
 
     N, D = db.shape
-    bn = min(block_n, max(128, 1 << (N - 1).bit_length()))
-    bn = min(bn, block_n)
+    bn = _block_for(N, block_n)
     pad_n = (-N) % bn
     if pad_n:
         db = jnp.pad(db, ((0, pad_n), (0, 0)))
@@ -44,3 +83,68 @@ def similarity_topk(db, valid, q, *, k: int, metric: str = "cosine", block_n: in
     top_i = jnp.take_along_axis(flat_i, pos, axis=1)
     top_s = jnp.where(top_s <= jnp.float32(-1.0e38), -jnp.inf, top_s)
     return top_s, top_i
+
+
+def similarity_topk(db, valid, q, *, k: int, metric: str = "cosine", block_n: int = 512,
+                    interpret: Optional[bool] = None):
+    """db [N, D], valid [N] bool, q [Q, D] -> (scores [Q,k], idx [Q,k]).
+
+    ``interpret=None`` auto-selects: interpret on CPU, compiled elsewhere.
+    """
+    record_dispatch()
+    return _similarity_topk(
+        db, valid, q, k=k, metric=metric, block_n=block_n,
+        interpret=resolve_interpret(interpret),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "block_n", "interpret", "prenormalized"))
+def _similarity_topk_lanes(db, valid, q, *, k: int, metric: str, block_n: int,
+                           interpret: bool, prenormalized: bool):
+    """db [L, N, D], valid [L, N] bool, q [Q, D] -> ([Q, L, k], [Q, L, k]).
+
+    Lane indices are lane-local (0..N), matching what L separate
+    ``similarity_topk`` calls would return — candidates are never merged
+    across lanes; the caller (the hierarchy / bank) owns cross-lane policy.
+    ``prenormalized=True`` skips the db normalization (StoreBank keeps unit
+    rows for cosine lanes).
+    """
+    db = db.astype(jnp.float32)
+    q = q.astype(jnp.float32)
+    if metric == "cosine":
+        if not prenormalized:
+            db = db / jnp.maximum(jnp.linalg.norm(db, axis=-1, keepdims=True), 1e-9)
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+    elif metric != "dot":
+        raise ValueError(f"kernel path supports cosine/dot; got {metric!r}")
+
+    L, N, D = db.shape
+    bn = _block_for(N, block_n)
+    pad_n = (-N) % bn
+    if pad_n:
+        db = jnp.pad(db, ((0, 0), (0, pad_n), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad_n)))
+    valid_f32 = valid.astype(jnp.float32)[..., None]
+
+    bs, bi = similarity_topk_lanes_blocks(db, valid_f32, q, k=k, block_n=bn,
+                                          interpret=interpret)
+    # merge per lane: [L, nb, Q, k] -> [L, Q, nb*k] -> top-k -> [Q, L, k]
+    Q = q.shape[0]
+    flat_s = bs.transpose(0, 2, 1, 3).reshape(L, Q, -1)
+    flat_i = bi.transpose(0, 2, 1, 3).reshape(L, Q, -1)
+    top_s, pos = jax.lax.top_k(flat_s, k)
+    top_i = jnp.take_along_axis(flat_i, pos, axis=2)
+    top_s = jnp.where(top_s <= jnp.float32(-1.0e38), -jnp.inf, top_s)
+    return top_s.transpose(1, 0, 2), top_i.transpose(1, 0, 2)
+
+
+def similarity_topk_lanes(db, valid, q, *, k: int, metric: str = "cosine",
+                          block_n: int = 512, interpret: Optional[bool] = None,
+                          prenormalized: bool = False):
+    """Fused multi-lane lookup: db [L, N, D], valid [L, N], q [Q, D] ->
+    (scores [Q, L, k], lane-local idx [Q, L, k]) in ONE kernel dispatch."""
+    record_dispatch()
+    return _similarity_topk_lanes(
+        db, valid, q, k=k, metric=metric, block_n=block_n,
+        interpret=resolve_interpret(interpret), prenormalized=prenormalized,
+    )

@@ -17,3 +17,12 @@ def similarity_topk_ref(db, valid, q, k: int, metric: str = "cosine"):
     s = q @ db.T
     s = jnp.where(valid[None, :], s, -jnp.inf)
     return jax.lax.top_k(s, k)
+
+
+def similarity_topk_lanes_ref(db, valid, q, k: int, metric: str = "cosine"):
+    """db [L, N, D], valid [L, N], q [Q, D] -> ([Q, L, k], [Q, L, k]):
+    L independent single-lane lookups, stacked along axis 1."""
+    outs = [similarity_topk_ref(db[l], valid[l], q, k, metric) for l in range(db.shape[0])]
+    s = jnp.stack([o[0] for o in outs], axis=1)
+    i = jnp.stack([o[1] for o in outs], axis=1)
+    return s, i

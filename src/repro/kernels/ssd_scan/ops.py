@@ -1,18 +1,29 @@
-"""Public jit'd wrapper for the SSD chunk scan."""
+"""Public wrapper for the SSD chunk scan (backend auto-selected)."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
 from repro.kernels.ssd_scan.ref import ssd_scan_ref
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret", "use_kernel"))
-def ssd_scan(x, Bm, Cm, dt, A, D, *, chunk: int = 128, interpret: bool = True,
-             use_kernel: bool = True):
-    """x [B,S,H,P], Bm/Cm [B,S,H,N], dt [B,S,H], A/D [H] -> (y, final_state)."""
+def _ssd_scan(x, Bm, Cm, dt, A, D, *, chunk, interpret, use_kernel):
     if not use_kernel:
         return ssd_scan_ref(x, Bm, Cm, dt, A, D, chunk)
     return ssd_scan_kernel(x, Bm, Cm, dt, A, D, chunk=chunk, interpret=interpret)
+
+
+def ssd_scan(x, Bm, Cm, dt, A, D, *, chunk: int = 128,
+             interpret: Optional[bool] = None, use_kernel: bool = True):
+    """x [B,S,H,P], Bm/Cm [B,S,H,N], dt [B,S,H], A/D [H] -> (y, final_state).
+
+    ``interpret=None`` auto-selects: interpret on CPU, compiled Pallas on
+    TPU/GPU (see repro.kernels.backend).
+    """
+    return _ssd_scan(x, Bm, Cm, dt, A, D, chunk=chunk,
+                     interpret=resolve_interpret(interpret), use_kernel=use_kernel)

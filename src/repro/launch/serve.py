@@ -50,6 +50,12 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=True)
+    if cfg.kernel_interpret is not None:
+        # config override for the kernel backend matrix (default: interpret
+        # on CPU, compiled Pallas on TPU/GPU — repro.kernels.backend)
+        from repro.kernels.backend import set_interpret_override
+
+        set_interpret_override(cfg.kernel_interpret)
     engine = ServingEngine(cfg, max_batch=args.max_batch, max_seq=256)
     backend = ModelBackend(args.arch, engine)
 
@@ -83,7 +89,8 @@ def main(argv=None):
             print(f"[{i:3d}] {tag} {wall*1e3:7.1f} ms  {q[:60]}")
         sst = service.stats
         lk, dp = service.scheduler_stats
-        print(f"service: hits={sst.hits} generated={sst.generated} expired={sst.expired} "
+        print(f"service: hits={sst.hits} generated={sst.generated} "
+              f"deduped={sst.deduped} expired={sst.expired} "
               f"rejected={sst.rejected} lookup_avg_batch={lk.avg_batch:.1f} "
               f"dispatch_avg_batch={dp.avg_batch if dp else 0.0:.1f}")
     else:

@@ -55,6 +55,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if cfg.kernel_interpret is not None:
+        from repro.kernels.backend import set_interpret_override
+
+        set_interpret_override(cfg.kernel_interpret)
     state, specs = init_train_state(cfg, jax.random.PRNGKey(args.seed))
     loader = ShardedLoader(cfg.vocab_size, args.global_batch, args.seq_len, seed=args.seed)
 

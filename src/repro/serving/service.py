@@ -14,8 +14,14 @@ generative-hit futures resolve right there. The miss residue is forwarded
 — original future, priority, and deadline intact — to a background
 dispatcher that coalesces misses by priority, resolves deadline-expired
 ones with a typed ``DEADLINE_EXCEEDED`` response instead of generating,
-and fans each (model, max_tokens, temperature) group to the backend in one
-``generate_batch``, backfilling the cache with one scatter per level.
+dedups near-identical queued misses (embedding cosine above the hit
+threshold — a cold paraphrase burst generates ONCE, the follower futures
+resolve from the leader's result), and fans each (model, max_tokens,
+temperature) group to the backend in one ``generate_batch``, backfilling
+the cache with one scatter per level. The lookup stage itself rides the
+banked hierarchy path: the levels' stores are prewarmed into one stacked
+``StoreBank`` at service construction, so the embed -> search stage costs
+ONE fused top-k dispatch for the whole hierarchy per admitted batch.
 
 Backpressure is explicit: ``submit`` fast-fails with ``AdmissionRejected``
 once ``max_inflight`` futures are unresolved, and raises ``ServiceClosed``
@@ -73,6 +79,7 @@ class ServiceStats:
     generated: int = 0
     expired: int = 0
     rejected: int = 0
+    deduped: int = 0  # queued misses resolved from another miss's generation
 
 
 class CacheService:
@@ -85,6 +92,8 @@ class CacheService:
         dispatch_batch: Optional[int] = None,
         dispatch_wait_ms: Optional[float] = None,
         max_inflight: int = 1024,
+        dedup_misses: bool = True,
+        dedup_threshold: Optional[float] = None,
     ):
         self.client = client
         self.max_batch = max_batch
@@ -94,6 +103,13 @@ class CacheService:
             dispatch_wait_ms if dispatch_wait_ms is not None else max_wait_ms
         )
         self.max_inflight = max_inflight
+        # in-flight miss dedup (async dispatcher only): a cold paraphrase
+        # burst looks itself up against one snapshot before any backfill
+        # lands, so N near-identical queued misses would all generate —
+        # coalesce them onto one backend call instead (cosine >= the hit
+        # threshold; dedup_threshold overrides the per-request policy value)
+        self.dedup_misses = dedup_misses
+        self.dedup_threshold = dedup_threshold
         self.stats = ServiceStats()
         self._inflight = 0
         self._lock = threading.Lock()  # service counters + lifecycle
@@ -105,6 +121,11 @@ class CacheService:
         # schedulers start lazily: the sync complete() path never spawns threads
         self._lookup_sched: Optional[BatchCoalescer] = None
         self._miss_sched: Optional[BatchCoalescer] = None
+        # prewarm the fused hierarchy bank so the first admitted batch pays
+        # the banked one-dispatch lookup, not the adoption copy
+        if client.hierarchy is not None:
+            with self._cache_lock:
+                getattr(client.hierarchy, "ensure_bank", lambda: None)()
 
     # -- async API -------------------------------------------------------------
 
@@ -343,7 +364,9 @@ class CacheService:
     # -- phase B: miss dispatch + backfill ---------------------------------------
 
     def _run_dispatch(self, pendings: List[_Pending], futs: List[Future]) -> None:
-        outcomes = self._dispatch_phase(pendings)
+        # the async dispatcher dedups near-identical queued misses; the sync
+        # complete() path does not (it must match B sequential lookups)
+        outcomes = self._dispatch_phase(pendings, dedup=self.dedup_misses)
         for fut, out in zip(futs, outcomes):
             if fut.done():
                 continue
@@ -352,13 +375,69 @@ class CacheService:
             else:
                 fut.set_result(out)
 
+    def _dedup_misses(
+        self, pendings: List[_Pending], live: List[int]
+    ) -> Dict[int, int]:
+        """Coalesce near-identical queued misses onto one generation.
+
+        Returns follower index -> leader index. Two misses coalesce when
+        they would dispatch identically ((model, max_tokens, temperature)
+        group) and their embeddings' cosine clears the follower's hit
+        threshold — i.e. had the leader's answer already been backfilled,
+        the follower's lookup would have HIT it. First-submitted wins
+        leadership; ``force_fresh`` requests never coalesce either way."""
+        client = self.client
+        owner = client.hierarchy.l1 if client.hierarchy is not None else client.cache
+        if owner is None:
+            return {}
+        # the dedup criterion is cosine-vs-threshold; on a euclidean/dot cache
+        # the threshold lives in a different score space and would mis-coalesce
+        if getattr(getattr(owner, "store", None), "metric", None) != "cosine":
+            return {}
+        by_group: Dict[tuple, List[int]] = {}
+        for i in live:
+            p = pendings[i]
+            if not p.request.use_cache or p.request.force_fresh or p.vec is None:
+                continue
+            key = (p.chosen, p.request.max_tokens, p.request.temperature)
+            by_group.setdefault(key, []).append(i)
+        leader_of: Dict[int, int] = {}
+        for idxs in by_group.values():
+            leaders: List[Tuple[int, np.ndarray, float]] = []  # (idx, vec, norm)
+            for i in idxs:
+                p = pendings[i]
+                v = np.asarray(p.vec, np.float64).ravel()
+                nv = float(np.linalg.norm(v)) or 1.0
+                thr = (
+                    self.dedup_threshold
+                    if self.dedup_threshold is not None
+                    else owner.effective_threshold(
+                        p.request.prompt, client._context_for(p.request, p.chosen)
+                    )
+                )
+                best, best_j = -1.0, None
+                for j, w, nw in leaders:
+                    cos = float(v @ w) / (nv * nw)
+                    if cos > best:
+                        best, best_j = cos, j
+                if best_j is not None and best > thr:
+                    leader_of[i] = best_j
+                else:
+                    leaders.append((i, v, nv))
+        if leader_of:
+            with self._lock:
+                self.stats.deduped += len(leader_of)
+        return leader_of
+
     def _dispatch_phase(
-        self, pendings: List[_Pending]
+        self, pendings: List[_Pending], dedup: bool = False
     ) -> List[Union[CacheResponse, Exception]]:
         """Generate the miss residue: expired misses resolve typed (no
-        backend call), the rest group by (model, max_tokens, temperature)
-        into one ``generate_batch`` each, then backfill the cache with one
-        scatter per destination level before the futures resolve."""
+        backend call), near-identical misses coalesce onto one generation
+        (``dedup=True``, the async dispatcher), the rest group by
+        (model, max_tokens, temperature) into one ``generate_batch`` each,
+        then backfill the cache with one scatter per destination level
+        before the futures resolve."""
         client = self.client
         n = len(pendings)
         outcomes: List[Optional[Union[CacheResponse, Exception]]] = [None] * n
@@ -376,8 +455,11 @@ class CacheService:
             else:
                 live.append(i)
 
+        leader_of = self._dedup_misses(pendings, live) if dedup else {}
         groups: Dict[tuple, List[int]] = {}
         for i in live:
+            if i in leader_of:
+                continue  # rides its leader's generation
             p = pendings[i]
             key = (p.chosen, p.request.max_tokens, p.request.temperature)
             groups.setdefault(key, []).append(i)
@@ -416,6 +498,21 @@ class CacheService:
             p, resp = pendings[i], llm_resps[i]
             out = CacheResponse(
                 resp.text, GENERATED, False, None, resp, resp.model, resp.cost_usd,
+                done - p.t_submit, p.rid,
+            )
+            with client._state_lock:
+                client.stats.total_latency_s += out.latency_s
+                client._results[p.rid] = client._to_client_result(out)
+            outcomes[i] = out
+        # deduped followers resolve from their leader's single generation:
+        # same text, zero marginal cost, no second backfill scatter
+        for i, j in leader_of.items():
+            p, resp = pendings[i], llm_resps[j]
+            if resp is None:  # the leader's group failed — carry its error
+                outcomes[i] = outcomes[j]
+                continue
+            out = CacheResponse(
+                resp.text, GENERATED, False, None, resp, resp.model, 0.0,
                 done - p.t_submit, p.rid,
             )
             with client._state_lock:

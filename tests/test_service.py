@@ -7,6 +7,7 @@ import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 
+import numpy as np
 import pytest
 
 from repro.core import (
@@ -384,3 +385,122 @@ def test_coalescer_starved_low_priority_deadline_still_expires():
         f.result(timeout=10)
     co.close()
     assert co.stats.expired == 1
+
+
+# -- in-flight miss dedup ------------------------------------------------------
+
+
+def _wait_for(predicate, timeout=10.0):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout:
+        if predicate():
+            return True
+        time.sleep(0.005)
+    return False
+
+
+def test_paraphrase_burst_of_misses_generates_once():
+    """Near-identical queued misses coalesce onto ONE backend generation:
+    the follower futures resolve from the leader's result (the async-path
+    fix for the cold paraphrase burst in ROADMAP)."""
+    backend = GatedLLM()
+    client, cache = _client(backend=backend)
+    cache.lookup_batch(["warm 1"])  # compile outside the timing-sensitive window
+    with CacheService(client, max_batch=8, max_wait_ms=2.0) as svc:
+        blocker = svc.submit(CacheRequest("blocker question zzz"))
+        assert backend.entered.wait(timeout=10)
+        burst = [svc.submit(CacheRequest("what color is a ripe apple"))
+                 for _ in range(3)]
+        distinct = svc.submit(CacheRequest("submarine hull engineering basics"))
+        # every queued miss must reach the dispatcher before the gate opens,
+        # or it would ride a later batch (and legitimately dedup nothing)
+        assert _wait_for(lambda: svc.scheduler_stats[1].submitted >= 5)
+        backend.gate.set()
+        rs = [f.result(timeout=10) for f in burst]
+        assert all(r.status == GENERATED for r in rs)
+        assert len({r.text for r in rs}) == 1  # one generation, shared result
+        assert backend.order.count("what color is a ripe apple") == 1
+        assert distinct.result(timeout=10).status == GENERATED
+        assert blocker.result(timeout=10).status == GENERATED
+    assert svc.stats.deduped == 2
+    assert svc.stats.generated == 3  # blocker + burst leader + distinct
+    # only the leader pays: followers carry zero marginal cost
+    assert sum(r.cost_usd for r in rs) == rs[0].cost_usd
+
+
+def test_dissimilar_misses_do_not_dedup():
+    backend = GatedLLM()
+    client, _ = _client(backend=backend)
+    with CacheService(client, max_batch=8, max_wait_ms=2.0) as svc:
+        blocker = svc.submit(CacheRequest("blocker question zzz"))
+        assert backend.entered.wait(timeout=10)
+        a = svc.submit(CacheRequest("how do transformers compute attention"))
+        b = svc.submit(CacheRequest("best chocolate cake recipe for birthdays"))
+        assert _wait_for(lambda: svc.scheduler_stats[1].submitted >= 3)
+        backend.gate.set()
+        assert a.result(timeout=10).text != b.result(timeout=10).text
+        blocker.result(timeout=10)
+    assert svc.stats.deduped == 0
+
+
+def test_force_fresh_requests_never_coalesce():
+    backend = GatedLLM()
+    client, _ = _client(backend=backend)
+    with CacheService(client, max_batch=8, max_wait_ms=2.0) as svc:
+        blocker = svc.submit(CacheRequest("blocker question zzz"))
+        assert backend.entered.wait(timeout=10)
+        futs = [svc.submit(CacheRequest("identical fresh prompt", force_fresh=True))
+                for _ in range(2)]
+        assert _wait_for(lambda: svc.scheduler_stats[1].submitted >= 3)
+        backend.gate.set()
+        for f in futs:
+            assert f.result(timeout=10).status == GENERATED
+        blocker.result(timeout=10)
+    assert svc.stats.deduped == 0
+    assert backend.order.count("identical fresh prompt") == 2
+
+
+def test_dedup_disabled_generates_per_miss():
+    backend = GatedLLM()
+    client, _ = _client(backend=backend)
+    with CacheService(client, max_batch=8, max_wait_ms=2.0,
+                      dedup_misses=False) as svc:
+        blocker = svc.submit(CacheRequest("blocker question zzz"))
+        assert backend.entered.wait(timeout=10)
+        futs = [svc.submit(CacheRequest("identical prompt twice")) for _ in range(2)]
+        assert _wait_for(lambda: svc.scheduler_stats[1].submitted >= 3)
+        backend.gate.set()
+        for f in futs:
+            f.result(timeout=10)
+        blocker.result(timeout=10)
+    assert svc.stats.deduped == 0
+    assert backend.order.count("identical prompt twice") == 2
+
+
+def test_sync_complete_path_does_not_dedup():
+    """The inline complete() path must stay decision-identical to B
+    sequential lookups: no dedup (each miss generates)."""
+    client, _ = _client()
+    svc = CacheService(client)
+    rs = svc.complete([CacheRequest("same sync prompt"), CacheRequest("same sync prompt")])
+    assert [r.status for r in rs] == [GENERATED, GENERATED]
+    assert svc.stats.deduped == 0
+
+
+def test_dedup_disabled_on_non_cosine_metric():
+    """The dedup criterion is cosine-vs-threshold; a euclidean/dot cache's
+    threshold lives in a different score space, so dedup must not fire."""
+    from repro.serving.service import _Pending
+
+    cache = GenerativeCache(NgramHashEmbedder(), threshold=0.85, t_single=0.45,
+                            t_combined=1.0, metric="euclidean")
+    client = EnhancedClient(cache=cache)
+    client.register_backend(MockLLM("backend"))
+    svc = CacheService(client)
+    t0 = time.perf_counter()
+    pendings = [
+        _Pending(CacheRequest("identical prompt"), rid, "backend", t0, None,
+                 vec=np.ones(cache.embedder.dim, np.float32))
+        for rid in range(2)
+    ]
+    assert svc._dedup_misses(pendings, [0, 1]) == {}

@@ -1,0 +1,120 @@
+"""ShardedVectorStore eviction policy: the bank's per-lane recency/frequency
+counters make ``search_batch(touch=...)`` real, so LRU/LFU/FIFO over the
+sharded DB evicts exactly like ``InMemoryVectorStore`` (shared victim rule)."""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core.vector_store import InMemoryVectorStore  # noqa: E402
+from repro.distributed.sharded_store import ShardedVectorStore  # noqa: E402
+from repro.launch.mesh import make_test_mesh  # noqa: E402
+
+DIM = 8
+
+
+def unit(i: int) -> np.ndarray:
+    v = np.zeros(DIM, np.float32)
+    v[i] = 1.0
+    return v
+
+
+def _sharded(eviction="lru", capacity=3, k=3):
+    mesh = make_test_mesh(shape=(len(jax.devices()),), axes=("data",))
+    return ShardedVectorStore(mesh, dim=DIM, capacity=capacity, k=k, eviction=eviction)
+
+
+def _live_queries(s: ShardedVectorStore):
+    return {p[0] for p in s.payloads if p is not None}
+
+
+def test_lru_evicts_least_recently_accessed():
+    s = _sharded("lru")
+    for i in range(3):
+        s.add(unit(i), f"q{i}", f"a{i}")
+    s.search_batch(unit(0)[None], k=1)  # touch entry 0; entry 1 is now LRU
+    s.add(unit(3), "q3", "a3")
+    assert _live_queries(s) == {"q0", "q2", "q3"}
+
+
+def test_lfu_evicts_least_frequently_accessed():
+    s = _sharded("lfu")
+    for i in range(3):
+        s.add(unit(i), f"q{i}", f"a{i}")
+    for _ in range(2):
+        s.search_batch(unit(0)[None], k=1)
+    s.search_batch(unit(2)[None], k=1)
+    s.add(unit(3), "q3", "a3")  # entry 1 has count 0
+    assert _live_queries(s) == {"q0", "q2", "q3"}
+
+
+def test_fifo_ignores_recency():
+    s = _sharded("fifo")
+    for i in range(3):
+        s.add(unit(i), f"q{i}", f"a{i}")
+    s.search_batch(unit(0)[None], k=1)  # recency must not save entry 0
+    s.add(unit(3), "q3", "a3")
+    s.add(unit(4), "q4", "a4")
+    assert _live_queries(s) == {"q2", "q3", "q4"}
+
+
+def test_touch_false_defers_to_touch_keys():
+    s = _sharded("lru")
+    keys = [s.add(unit(i), f"q{i}", f"a{i}") for i in range(3)]
+    before = s.bank.access_count.copy()
+    recency = s.bank.last_access.copy()
+    s.search_batch(unit(0)[None], k=1, touch=False)
+    assert np.array_equal(s.bank.access_count, before)
+    assert np.array_equal(s.bank.last_access, recency)
+    s.touch_keys([keys[0]])
+    assert s.bank.access_count.sum() == before.sum() + 1
+    s.add(unit(3), "q3", "a3")  # entry 1 is LRU after the deferred bump
+    assert _live_queries(s) == {"q0", "q2", "q3"}
+
+
+def test_touch_keys_skips_retired_keys():
+    s = _sharded("lru")
+    k0 = s.add(unit(0), "q0", "a0")
+    s.remove(k0)
+    s.touch_keys([k0, 999])  # no crash, no counter movement
+    assert s.bank.access_count.sum() == 0
+
+
+def test_removed_slot_reused_before_eviction():
+    s = _sharded("lru")
+    keys = [s.add(unit(i), f"q{i}", f"a{i}") for i in range(3)]
+    s.remove(keys[1])
+    s.add(unit(4), "q4", "a4")  # freed slot recycled: nothing live evicted
+    assert _live_queries(s) == {"q0", "q2", "q4"}
+
+
+@pytest.mark.parametrize("eviction", ["lru", "lfu", "fifo"])
+def test_sharded_eviction_matches_inmemory_victims(eviction):
+    """Same add/touch sequence, same victims: the sharded DB reuses the
+    in-memory store's victim rule over the bank counters."""
+    s = _sharded(eviction, capacity=4)
+    m = InMemoryVectorStore(DIM, capacity=4, eviction=eviction)
+    for i in range(4):
+        s.add(unit(i), f"q{i}", f"a{i}")
+        m.add(unit(i), f"q{i}", f"a{i}")
+    for probe, k in [(0, 1), (0, 1), (3, 1)]:
+        s.search_batch(unit(probe)[None], k=k)
+        m.search_batch(unit(probe)[None], k=k)
+    for i in range(4, 7):
+        s.add(unit(i), f"q{i}", f"a{i}")
+        m.add(unit(i), f"q{i}", f"a{i}")
+    assert _live_queries(s) == {e.query for e in m._entries if e is not None}
+
+
+@pytest.mark.parametrize("eviction", ["lru", "lfu", "fifo"])
+def test_sharded_add_batch_evicts_like_sequential(eviction):
+    a = _sharded(eviction, capacity=4)
+    b = _sharded(eviction, capacity=4)
+    rows = np.stack([unit(i % DIM) for i in range(10)])
+    qs = [f"q{i}" for i in range(10)]
+    rs = [f"a{i}" for i in range(10)]
+    keys_a = [a.add(v, q, r) for v, q, r in zip(rows, qs, rs)]
+    keys_b = b.add_batch(rows, qs, rs)
+    assert keys_a == keys_b
+    assert a.payloads == b.payloads
+    np.testing.assert_allclose(np.asarray(a._db), np.asarray(b._db), atol=0)

@@ -1,0 +1,329 @@
+"""StoreBank: fused [L, cap, D] hierarchy lookup vs the per-level loop
+(decisions, scores, winners, stats, promotions), the ONE-dispatch budget
+(kernel call-count hook), interpret-vs-compiled backend selection, and the
+bank save/load roundtrip preserving lane flags."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (
+    GenerativeCache,
+    HierarchicalCache,
+    NgramHashEmbedder,
+    SemanticCache,
+    StoreBank,
+)
+from repro.core.vector_store import InMemoryVectorStore
+from repro.kernels import backend as kbackend
+from repro.kernels.similarity_topk import ops as st_ops
+
+Q1 = "What is an application-level denial of service attack?"
+Q2 = "What are the most effective techniques for defending against denial-of-service attacks?"
+Q3 = ("What is an application-level denial of service attack, and what are the "
+      "most effective techniques for defending against such attacks?")
+QA = "How does the attention mechanism work in transformers?"
+QB = "What is the best recipe for chocolate cake?"
+
+PROBES = [QA, Q1, Q2, Q3, "completely unrelated gardening question"]
+
+
+@pytest.fixture
+def emb():
+    return NgramHashEmbedder()
+
+
+def _gc(emb, **kw):
+    kw.setdefault("threshold", 0.85)
+    kw.setdefault("t_single", 0.45)
+    kw.setdefault("t_combined", 1.0)
+    return GenerativeCache(emb, **kw)
+
+
+def _hier(emb, *, n_peers=2, fused=True, use_pallas=False, capacities=None):
+    """L1 holds QA, L2 holds Q1, peer0 holds Q2, peer1 holds QB."""
+    caps = capacities or [64] * (2 + n_peers)
+    levels = [_gc(emb, capacity=c, use_pallas=use_pallas) for c in caps[: 2 + n_peers]]
+    seeds = [(QA, "ATT"), (Q1, "A1"), (Q2, "A2"), (QB, "CAKE")]
+    for cache, (q, a) in zip(levels, seeds):
+        cache.insert(q, a)
+    return HierarchicalCache(
+        levels[0],
+        levels[1] if len(levels) > 1 else None,
+        peers=levels[2:],
+        fused=fused,
+    )
+
+
+def _assert_results_equal(fused_rs, loop_rs):
+    for rf, rl in zip(fused_rs, loop_rs):
+        assert rf.hit == rl.hit
+        assert rf.level == rl.level
+        assert rf.generative == rl.generative
+        assert rf.response == rl.response
+        assert rf.similarity == pytest.approx(rl.similarity, abs=1e-5)
+        assert rf.combined_similarity == pytest.approx(rl.combined_similarity, abs=1e-5)
+        assert [(e.query, e.response) for _, e in rf.sources] == \
+               [(e.query, e.response) for _, e in rl.sources]
+
+
+@pytest.mark.parametrize("n_peers", [0, 1, 2])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_fused_lookup_matches_per_level_loop(emb, n_peers, use_pallas):
+    """Banked one-dispatch lookup_batch == the per-level sequential loop:
+    same decisions, scores, winning levels, stats, and promotions, across
+    L1+L2, L1+L2+peer, and L1+L2+2-peer topologies."""
+    hf = _hier(emb, n_peers=n_peers, fused=True, use_pallas=use_pallas)
+    hl = _hier(emb, n_peers=n_peers, fused=False, use_pallas=use_pallas)
+    rf = hf.lookup_batch(PROBES)
+    rl = hl.lookup_batch(PROBES)
+    _assert_results_equal(rf, rl)
+    for (_, cf), (_, cl) in zip(hf._levels(), hl._levels()):
+        assert cf.stats.lookups == cl.stats.lookups
+        assert cf.stats.hits == cl.stats.hits
+        assert cf.stats.generative_hits == cl.stats.generative_hits
+        assert len(cf.store) == len(cl.store)  # promotions/writebacks match
+        assert sorted(e.query for e in cf.store._entries if e) == \
+               sorted(e.query for e in cl.store._entries if e)
+
+
+def test_fused_lookup_matches_mixed_capacity_lanes(emb):
+    """Lanes of different capacities share one bank (shorter lanes are
+    mask-padded); decisions still match the per-level loop."""
+    hf = _hier(emb, fused=True, capacities=[16, 64, 32, 128])
+    hl = _hier(emb, fused=False, capacities=[16, 64, 32, 128])
+    _assert_results_equal(hf.lookup_batch(PROBES), hl.lookup_batch(PROBES))
+    assert hf._shared_bank is not None
+    assert hf._shared_bank.cap == 128 and hf._shared_bank.L == 4
+
+
+def test_three_level_lookup_is_one_dispatch(emb):
+    """Acceptance: a 3-level hierarchy lookup_batch performs exactly ONE
+    similarity_topk dispatch (call-count hook) and one bank dispatch."""
+    h = _hier(emb, n_peers=1, use_pallas=True)  # L1 + L2 + 1 peer = 3 levels
+    h.ensure_bank()  # adoption itself is not a search dispatch
+    bank = h._shared_bank
+    assert bank is not None and bank.use_pallas
+    st_ops.reset_dispatch_count()
+    before = bank.dispatches
+    h.lookup_batch(PROBES)
+    assert st_ops.dispatch_count() == 1  # the whole hierarchy: ONE kernel call
+    assert bank.dispatches - before == 1
+
+
+def test_three_level_lookup_is_one_dispatch_jnp(emb):
+    """The jnp (non-pallas) fused path also costs one bank dispatch."""
+    h = _hier(emb, n_peers=1, use_pallas=False)
+    h.ensure_bank()
+    bank = h._shared_bank
+    before = bank.dispatches
+    h.lookup_batch(PROBES)
+    assert bank.dispatches - before == 1
+
+
+def test_bank_adoption_rebuilds_after_store_swap(emb, tmp_path):
+    """load_store replaces the store object: the hierarchy must re-adopt
+    (fresh lanes, no stale data) instead of searching the old bank."""
+    h = _hier(emb, n_peers=0)
+    assert h.lookup_batch([Q1])[0].hit
+    bank0 = h._shared_bank
+    h.l2.insert(QB, "CAKE-L2")
+    h.l2.save(str(tmp_path / "l2"))
+    h.l2.load_store(str(tmp_path / "l2"))
+    rs = h.lookup_batch([QB])
+    assert h._shared_bank is not bank0  # re-adopted
+    assert rs[0].hit and rs[0].response == "CAKE-L2"
+
+
+def test_aliased_level_stores_fall_back_to_per_level_loop(emb):
+    """The same store mounted at two levels cannot be two lanes of one bank
+    (a lane view tracks one lane): the hierarchy keeps the per-level path."""
+    shared = _gc(emb)
+    shared.insert(Q1, "A1")
+    h = HierarchicalCache(shared, shared)
+    assert h.ensure_bank() is None
+    assert h.lookup_batch([Q1])[0].hit
+
+
+def test_custom_store_subclass_falls_back(emb):
+    class TracingStore(InMemoryVectorStore):
+        def search_batch(self, q_vecs, k=4, touch=True):
+            return super().search_batch(q_vecs, k, touch)
+
+    l1 = _gc(emb)
+    l2 = SemanticCache(emb, threshold=0.85, store=TracingStore(emb.dim, 64))
+    l2.insert(Q1, "A1")
+    h = HierarchicalCache(l1, l2)
+    assert h.ensure_bank() is None  # custom search semantics must keep running
+    assert h.lookup_batch([Q1])[0].hit
+
+
+# -- backend auto-selection ----------------------------------------------------
+
+
+def test_interpret_auto_selects_interpret_on_cpu():
+    if jax.default_backend() != "cpu":
+        pytest.skip("auto-selection matrix on CPU only checkable on CPU")
+    assert kbackend.resolve_interpret(None) is True
+    assert kbackend.resolve_interpret(False) is False  # explicit wins
+
+
+def test_interpret_override_env(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "compiled")
+    assert kbackend.resolve_interpret(None) is False
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "interpret")
+    assert kbackend.resolve_interpret(None) is True
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "banana")
+    with pytest.raises(ValueError):
+        kbackend.resolve_interpret(None)
+
+
+def test_interpret_override_config():
+    try:
+        kbackend.set_interpret_override(False)
+        assert kbackend.resolve_interpret(None) is False
+        kbackend.set_interpret_override(True)
+        assert kbackend.resolve_interpret(None) is True
+    finally:
+        kbackend.set_interpret_override(None)
+
+
+def test_interpret_forced_both_ways_parity():
+    """interpret=True vs the compiled path must agree bit-for-bit on
+    decisions (scores within float tolerance). On backends without a
+    compiled Pallas lowering (CPU) the compiled leg is skipped."""
+    rng = np.random.default_rng(0)
+    db = rng.normal(size=(256, 64)).astype(np.float32)
+    q = rng.normal(size=(4, 64)).astype(np.float32)
+    valid = np.ones((256,), bool)
+    s_i, i_i = st_ops.similarity_topk(db, valid, q, k=4, interpret=True)
+    try:
+        s_c, i_c = st_ops.similarity_topk(db, valid, q, k=4, interpret=False)
+    except Exception as e:  # noqa: BLE001 — backend-dependent capability
+        pytest.skip(f"compiled Pallas path unavailable on this backend: {e}")
+    np.testing.assert_allclose(np.asarray(s_i), np.asarray(s_c), atol=2e-5, rtol=2e-5)
+    assert np.array_equal(np.asarray(i_i), np.asarray(i_c))
+
+
+def test_lanes_kernel_matches_ref_and_single():
+    """The batched-lanes kernel == L independent single-lane kernels."""
+    from repro.kernels.similarity_topk.ref import similarity_topk_lanes_ref
+
+    rng = np.random.default_rng(1)
+    L, N, D, Q, k = 3, 200, 32, 5, 4
+    db = rng.normal(size=(L, N, D)).astype(np.float32)
+    valid = rng.random((L, N)) < 0.9
+    q = rng.normal(size=(Q, D)).astype(np.float32)
+    s, i = st_ops.similarity_topk_lanes(db, valid, q, k=k)
+    s_ref, i_ref = similarity_topk_lanes_ref(db, valid, q, k)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), atol=3e-5, rtol=3e-5)
+    for l in range(L):
+        s1, i1 = st_ops.similarity_topk(db[l], valid[l], q, k=k)
+        np.testing.assert_allclose(np.asarray(s[:, l]), np.asarray(s1), atol=3e-5, rtol=3e-5)
+
+
+# -- bank save/load ------------------------------------------------------------
+
+
+def test_bank_save_load_roundtrip_preserves_lane_flags(tmp_path, emb):
+    """Store save/load must preserve the lane's flags (metric, eviction,
+    use_pallas via load kwargs), the normalized rows, and the counters —
+    and keep serving identical results."""
+    c = SemanticCache(emb, threshold=0.8, use_pallas=True, capacity=32,
+                      eviction="lfu")
+    c.insert(Q1, "A1")
+    c.insert(Q2, "A2")
+    r0 = c.lookup(Q1)
+    c.save(str(tmp_path / "bank"))
+    c.load_store(str(tmp_path / "bank"))
+    s = c.store
+    assert s.use_pallas and s.eviction == "lfu" and s.metric == "cosine"
+    assert s._bank.use_pallas and s._bank.prenormalized
+    assert s._bank.L == 1 and s._bank.cap == 32
+    r1 = c.lookup(Q1)
+    assert r1.hit and r1.response == r0.response
+    assert r1.similarity == pytest.approx(r0.similarity, abs=1e-6)
+    # rows persisted unit-normalized; the loader must not renormalize them
+    norms = np.linalg.norm(np.asarray(s._buf)[: len(s)], axis=-1)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-5)
+
+
+def test_pre_bank_snapshot_raw_rows_normalized_on_load(tmp_path, emb):
+    """A snapshot written before the bank refactor holds raw rows (no
+    'normalized' manifest flag): the loader unit-normalizes them."""
+    import json
+    import os
+
+    c = SemanticCache(emb, threshold=0.8, capacity=16)
+    c.insert(Q1, "A1")
+    path = str(tmp_path / "legacy")
+    c.save(path)
+    # forge a legacy manifest (no flag) with raw (unnormalized) rows
+    with open(os.path.join(path, "manifest.json")) as f:
+        m = json.load(f)
+    m.pop("normalized", None)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(m, f)
+    z = dict(np.load(os.path.join(path, "vectors.npz")))
+    z["buf"] = z["buf"] * 3.7  # raw, unnormalized scale
+    np.savez(os.path.join(path, "vectors.npz"), **z)
+    c2 = SemanticCache(emb, threshold=0.8, capacity=16)
+    c2.load_store(path)
+    r = c2.lookup(Q1)
+    assert r.hit and r.similarity == pytest.approx(1.0, abs=1e-4)
+
+
+def test_adopted_bank_roundtrips_through_store_save(tmp_path, emb):
+    """Saving a store AFTER hierarchy adoption writes its lane slice; the
+    reloaded store serves the same entries standalone."""
+    h = _hier(emb, n_peers=1)
+    h.ensure_bank()
+    assert h.l2.store._bank is h._shared_bank  # adopted
+    h.l2.save(str(tmp_path / "lane"))
+    solo = InMemoryVectorStore.load(str(tmp_path / "lane"))
+    rows = solo.search(emb.embed_one(Q1), k=1)
+    assert rows and rows[0][1].response == "A1"
+
+
+def test_standalone_store_is_one_lane_bank(emb):
+    s = InMemoryVectorStore(emb.dim, capacity=8)
+    assert isinstance(s._bank, StoreBank)
+    assert s._bank.L == 1 and s._bank.cap == 8 and s._lane == 0
+
+
+def test_adoption_preserves_counters_and_eviction(emb):
+    """Recency/frequency counters survive adoption: the LRU victim picked
+    after adoption matches what the pre-adoption store would have evicted."""
+    l1, l2 = _gc(emb, capacity=3), _gc(emb, capacity=3)
+    dim = emb.dim
+
+    def unit(i):
+        v = np.zeros(dim, np.float32)
+        v[i] = 1.0
+        return v
+
+    ks = [l1.store.add(unit(i), f"q{i}", f"a{i}") for i in range(3)]
+    l1.store.search(unit(0), k=1)  # entry 0 recent; entry 1 is LRU victim
+    h = HierarchicalCache(l1, l2)
+    h.ensure_bank()
+    l1.store.search(unit(2), k=1)  # touch through the shared bank too
+    l1.store.add(unit(3), "q3", "a3")
+    live = {e.key for e in l1.store._entries if e is not None}
+    assert ks[1] not in live and ks[0] in live and ks[2] in live
+
+
+def test_cache_level_search_candidates_override_falls_back(emb):
+    """A cache subclass customizing candidate retrieval must keep its
+    behavior: the fused path would bypass search_candidates, so the
+    hierarchy stays on the per-level loop."""
+    class FilteringCache(GenerativeCache):
+        def search_candidates(self, vecs, k, touch=True):
+            return super().search_candidates(vecs, k, touch)
+
+    l1, l2 = _gc(emb), FilteringCache(
+        emb, threshold=0.85, t_single=0.45, t_combined=1.0
+    )
+    l2.insert(Q1, "A1")
+    h = HierarchicalCache(l1, l2)
+    assert h.ensure_bank() is None
+    assert h.lookup_batch([Q1])[0].hit
