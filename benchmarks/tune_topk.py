@@ -1,0 +1,112 @@
+"""Tile-size / grid-order sweep for the batched-lanes similarity kernel.
+
+The ``similarity_topk_lanes`` Pallas kernel ships with block_n=512 and a
+lanes-outer grid — CPU-interpret-friendly defaults that were never tuned on
+real hardware (ROADMAP open item). This sweep times every (block_n,
+grid_order) combination over a bank-shaped workload on THIS host's backend
+(compiled Pallas on TPU/GPU, interpret on CPU) and prints the winner as an
+env export:
+
+    REPRO_TOPK_BLOCK_N=<best>    (honored by every similarity_topk call,
+    REPRO_TOPK_GRID_ORDER=<best>  the StoreBank searches, and the fused
+                                  read program — no code change needed)
+
+Results land in ``BENCH_tune_topk.json``. Numbers from a CPU-interpret run
+are only a smoke signal; rerun on the serving hardware before exporting.
+
+Run:  PYTHONPATH=src python benchmarks/tune_topk.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import emit  # noqa: E402
+from repro.kernels.backend import resolve_interpret  # noqa: E402
+from repro.kernels.similarity_topk import ops as st_ops  # noqa: E402
+
+
+def sweep(L, N, D, Q, k, block_ns, grid_orders, repeats) -> dict:
+    rng = np.random.default_rng(0)
+    db = rng.normal(size=(L, N, D)).astype(np.float32)
+    db /= np.linalg.norm(db, axis=-1, keepdims=True)
+    valid = np.ones((L, N), bool)
+    q = rng.normal(size=(Q, D)).astype(np.float32)
+    interpret = resolve_interpret(None)
+
+    ref = None
+    rows = {}
+    for block_n in block_ns:
+        if block_n > N:
+            continue
+        for order in grid_orders:
+            def call():
+                return st_ops.similarity_topk_lanes(
+                    db, valid, q, k=k, metric="cosine", block_n=block_n,
+                    grid_order=order, prenormalized=True,
+                )
+            s, i = call()  # compile + correctness vs the first config
+            jax.block_until_ready(s)
+            if ref is None:
+                ref = np.asarray(i)
+            else:
+                assert np.array_equal(np.asarray(i), ref), \
+                    f"block_n={block_n}/{order} changed the top-k result"
+            times = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(call()[0])
+                times.append(time.perf_counter() - t0)
+            times.sort()
+            med = times[len(times) // 2]
+            rows[f"bn{block_n}_{order}"] = {
+                "block_n": block_n, "grid_order": order, "ms": med * 1e3,
+            }
+            emit(f"tunetopk_bn{block_n}_{order}", med * 1e6,
+                 f"L={L} N={N} D={D} Q={Q} interpret={interpret}")
+    best = min(rows.values(), key=lambda r: r["ms"])
+    return {"interpret": interpret, "rows": rows, "best": best}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    args = ap.parse_args()
+
+    if args.smoke:
+        L, N, D, Q, k = 3, 2048, 128, 16, 4
+        block_ns, repeats = [256, 512, 1024], 5
+    else:
+        L, N, D, Q, k = 3, 8192, 256, 16, 4
+        block_ns, repeats = [128, 256, 512, 1024, 2048], 9
+    grid_orders = ["lanes_outer", "blocks_outer"]
+
+    results = {
+        "config": {"L": L, "N": N, "D": D, "Q": Q, "k": k,
+                   "block_ns": block_ns, "grid_orders": grid_orders,
+                   "backend": jax.default_backend()},
+        "sweep": sweep(L, N, D, Q, k, block_ns, grid_orders, repeats),
+    }
+    best = results["sweep"]["best"]
+
+    path = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "BENCH_tune_topk.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"\nwrote {path}")
+    print(f"best on {jax.default_backend()}: block_n={best['block_n']} "
+          f"grid_order={best['grid_order']} ({best['ms']:.2f} ms)")
+    print(f"export REPRO_TOPK_BLOCK_N={best['block_n']} "
+          f"REPRO_TOPK_GRID_ORDER={best['grid_order']}")
+
+
+if __name__ == "__main__":
+    main()

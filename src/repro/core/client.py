@@ -37,6 +37,25 @@ from repro.core.request import CacheRequest, CacheResponse
 from repro.core.semantic_cache import CacheResult
 
 
+def accepts_kwarg(cls, method_name: str, kwarg: str) -> bool:
+    """Does ``cls.<method_name>`` declare ``kwarg``? Cached in the class's
+    OWN dict, so a subclass overriding the method is re-probed on its own
+    signature instead of inheriting its parent's cached answer. Used to
+    call newer keyword arguments (``deadlines``, ``return_vecs``)
+    compatibly past subclasses written against an older signature."""
+    cache_attr = f"_accepts_{kwarg}_cached"
+    cached = cls.__dict__.get(cache_attr)
+    if cached is None:
+        import inspect
+
+        try:
+            cached = kwarg in inspect.signature(getattr(cls, method_name)).parameters
+        except (TypeError, ValueError):
+            cached = False
+        setattr(cls, cache_attr, cached)
+    return cached
+
+
 @dataclass
 class LLMResponse:
     text: str
@@ -45,12 +64,20 @@ class LLMResponse:
     tokens_out: int = 0
     latency_s: float = 0.0
     cost_usd: float = 0.0
+    # the backend canceled this generation because its deadline passed
+    # mid-flight (text holds whatever partial decode existed); the service
+    # maps it to a typed DEADLINE_EXCEEDED response and never caches it
+    expired: bool = False
 
 
 class LLMBackend:
     """Interface for a model endpoint."""
 
     name: str = "llm"
+    # tri-state deadline capability: None = auto-detect from the
+    # generate_batch signature; True/False = explicit declaration (set True
+    # on wrappers that forward **kwargs to a deadline-aware backend)
+    supports_deadlines: Optional[bool] = None
 
     def generate(self, prompt: str, max_tokens: int = 256, temperature: float = 0.0) -> LLMResponse:
         raise NotImplementedError
@@ -59,7 +86,11 @@ class LLMBackend:
         self, prompts: Sequence[str], max_tokens: int = 256, temperature: float = 0.0
     ) -> List[LLMResponse]:
         """Serve a batch of prompts. Backends that batch natively (e.g. the
-        continuous-batching engine) override this; the default loops."""
+        continuous-batching engine) override this; the default loops.
+        Deadline-aware backends accept an extra ``deadlines`` kwarg
+        (absolute perf_counter stamps per prompt) and mark responses whose
+        deadline passed mid-generation ``expired=True`` — the dispatcher
+        only passes it to backends whose signature declares it."""
         return [self.generate(p, max_tokens, temperature) for p in prompts]
 
 
@@ -96,7 +127,8 @@ class MockLLM(LLMBackend):
         )
 
     def generate_batch(
-        self, prompts: Sequence[str], max_tokens: int = 256, temperature: float = 0.0
+        self, prompts: Sequence[str], max_tokens: int = 256, temperature: float = 0.0,
+        deadlines: Optional[Sequence[Optional[float]]] = None,
     ) -> List[LLMResponse]:
         # batched endpoint semantics: the batch travels together, so the
         # simulated RTT is paid once, not once per prompt
@@ -105,8 +137,14 @@ class MockLLM(LLMBackend):
         t0 = time.perf_counter()
         if self.latency_s:
             time.sleep(self.latency_s)
+        deadlines = deadlines if deadlines is not None else [None] * len(prompts)
+        now = time.perf_counter()
         out = []
-        for prompt in prompts:
+        for prompt, deadline_t in zip(prompts, deadlines):
+            if deadline_t is not None and now > deadline_t:
+                # deadline passed while the batch was in flight: canceled
+                out.append(LLMResponse("", self.name, latency_s=now - t0, expired=True))
+                continue
             self.calls += 1
             text = self.responder(prompt)
             words = text.split()
@@ -310,10 +348,22 @@ class EnhancedClient:
         """If an LLM is unresponsive, fall through to the other backends (§2)."""
         return self._generate_batch_with_failover(model, [prompt], max_tokens, temperature)[0]
 
+    @staticmethod
+    def _accepts_deadlines(backend: LLMBackend) -> bool:
+        # explicit declaration wins: backends that delegate via *args/**kwargs
+        # (no literal 'deadlines' parameter) can set supports_deadlines=True
+        declared = getattr(backend, "supports_deadlines", None)
+        if declared is not None:
+            return bool(declared)
+        return accepts_kwarg(type(backend), "generate_batch", "deadlines")
+
     def _generate_batch_with_failover(
-        self, model, prompts, max_tokens, temperature
+        self, model, prompts, max_tokens, temperature, deadlines=None
     ) -> List[LLMResponse]:
-        """Batched failover: the whole miss batch moves to the next backend."""
+        """Batched failover: the whole miss batch moves to the next backend.
+        ``deadlines`` (absolute stamps) reach deadline-aware backends, which
+        cancel mid-generation once a request's deadline passes; legacy
+        backends that do not declare the kwarg are called without it."""
         tried = []
         names = [model] + [n for n in self._order if n != model]
         for name in names:
@@ -321,6 +371,10 @@ class EnhancedClient:
             if backend is None:
                 continue
             try:
+                if deadlines is not None and self._accepts_deadlines(backend):
+                    return backend.generate_batch(
+                        prompts, max_tokens, temperature, deadlines=deadlines
+                    )
                 return backend.generate_batch(prompts, max_tokens, temperature)
             except Exception as e:  # noqa: BLE001 — failover on any backend error
                 tried.append((name, repr(e)))

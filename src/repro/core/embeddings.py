@@ -25,6 +25,13 @@ from repro.configs.contriever import smoke as contriever_smoke
 from repro.core.tokenizer import HashTokenizer
 
 
+def _identity_forward(vecs):
+    """Device leg of the default fused forward: the embedding was computed
+    host-side, so the program just consumes the uploaded [B, D] block.
+    Module-level so every host embedder of one dim shares a jit cache key."""
+    return vecs
+
+
 class EmbeddingModel:
     """Interface: embed a batch of texts into L2-normalized vectors."""
 
@@ -47,6 +54,32 @@ class EmbeddingModel:
         if not texts:
             return np.zeros((0, self.dim), np.float32)
         return self.embed(texts)
+
+    # -- zero-host-hop read path (repro.core.read_path) -------------------------
+
+    def fused_forward(self):
+        """A jit-composable split of ``embed_batch`` for the fused read
+        program: ``(prepare, forward)`` where ``prepare(texts) -> (args, n,
+        B)`` runs host-side (tokenize / featurize, B power-of-two bucketed
+        >= n) and ``forward(*args) -> [B, dim]`` is traced INTO the read
+        program, so embed -> search -> decide -> touch is one device
+        dispatch. The default runs the whole embedding host-side in
+        ``prepare`` (models without a device forward) and uploads the [B, D]
+        block once — still zero hops between embed and decide. The pair is
+        cached per instance: a stable ``forward`` identity keys the
+        program's compile cache."""
+        if getattr(self, "_fused_fwd", None) is None:
+
+            def prepare(texts: List[str]):
+                from repro.core.store_bank import pad_to_bucket
+
+                vecs, n = pad_to_bucket(
+                    np.asarray(self.embed_batch(list(texts)), np.float32)
+                )
+                return (vecs,), n, vecs.shape[0]
+
+            self._fused_fwd = (prepare, _identity_forward)
+        return self._fused_fwd
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +206,31 @@ class ContrieverEncoder(EmbeddingModel):
             ids = np.pad(ids, ((0, Bb - n), (0, Lb - L)))
             mask = np.pad(mask, ((0, Bb - n), (0, Lb - L)))
         return np.asarray(self._fwd(self.params, ids, mask))[:n]
+
+    def fused_forward(self):
+        """Real in-program forward: ``prepare`` only tokenizes (host), the
+        encoder itself is traced into the fused read program — token ids in,
+        decisions out, with the [B, D] embedding never leaving the device.
+        Params ride as a jit argument (not a baked constant), so the program
+        compiles once per shape bucket, not per weight update."""
+        if getattr(self, "_fused_fwd", None) is None:
+            cfg = self.cfg
+
+            def forward(params, ids, mask):
+                return _encoder_forward(params, cfg, ids, mask)
+
+            def prepare(texts: List[str]):
+                ids, mask = self.tok.encode_batch(texts)
+                n, L = ids.shape
+                Lb = self._bucket(L, 8)
+                Bb = self._bucket(n, 1)
+                if (Bb - n) or (Lb - L):
+                    ids = np.pad(ids, ((0, Bb - n), (0, Lb - L)))
+                    mask = np.pad(mask, ((0, Bb - n), (0, Lb - L)))
+                return (self.params, ids, mask), n, Bb
+
+            self._fused_fwd = (prepare, forward)
+        return self._fused_fwd
 
 
 # ---------------------------------------------------------------------------

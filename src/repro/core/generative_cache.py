@@ -102,48 +102,15 @@ class GenerativeCache(SemanticCache):
                                time.perf_counter() - t_start, "semantic")
         return self._generative_lookup(query, vec, t_s, t_start)
 
-    def lookup_batch(
-        self,
-        queries: List[str],
-        contexts: Optional[List[Optional[dict]]] = None,
-        vecs: Optional[np.ndarray] = None,
-    ) -> List[CacheResult]:
-        """Batched generative lookup: one embed + ONE top-max_sources search.
-
-        Every query is decided against the same store snapshot (the top-1 of
-        the shared candidate set equals the sequential secondary probe, so
-        decisions match B sequential ``lookup`` calls on that snapshot);
-        synthesized answers are inserted after all decisions, so in-batch
-        queries never hit each other's synthesized entries.
-        """
-        t_start = time.perf_counter()
-        n = len(queries)
-        if n == 0:
-            return []
-        contexts = list(contexts) if contexts is not None else [None] * n
-        self.stats.lookups += n
-        thresholds = np.asarray(
-            [self.effective_threshold(q, c) for q, c in zip(queries, contexts)]
-        )
-        if vecs is None:
-            vecs = self.embed_batch(list(queries))
-        t0 = time.perf_counter()
-        matches = self.store.search_batch(np.asarray(vecs), k=max(self.max_sources, 1))
-        self.stats.search_time_s += time.perf_counter() - t0
-
-        results, to_insert = self._decide_batch(queries, thresholds, matches)
-        per_query_s = (time.perf_counter() - t_start) / n
-        for r in results:
-            r.latency_s = per_query_s
-        if to_insert:
-            # whole synthesized set lands in one add_batch scatter
-            self.insert_batch(
-                [queries[i] for i, _ in to_insert],
-                [r for _, r in to_insert],
-                metas=[{"generative": True}] * len(to_insert),
-                vecs=np.stack([np.asarray(vecs[i]) for i, _ in to_insert]),
-            )
-        return results
+    def _solo_k(self) -> int:
+        """A batched generative lookup searches top-max_sources once; the
+        top-1 of that shared candidate set equals the sequential secondary
+        probe, so decisions match B sequential ``lookup`` calls. (The base
+        class ``lookup_batch`` drives both the fused device-decide program
+        and the host fallback through this k; synthesized answers are
+        inserted after all decisions, so in-batch queries never hit each
+        other's synthesized entries.)"""
+        return max(self.max_sources, 1)
 
     def _decide_batch(self, queries, thresholds, matches, lazy_synth=False):
         """Generative-rule decisions over pre-searched candidates (§3).
@@ -190,3 +157,46 @@ class GenerativeCache(SemanticCache):
                 results.append(CacheResult(False, None, best, combined, False, X,
                                            t_s, 0.0))
         return results, to_insert
+
+    def _materialize_one(self, query, t_s, m, hit, gen, lazy_synth=False):
+        """Host half of the generative ``_decide_batch`` for the fused read
+        path: the hit/generative classification arrives as device-computed
+        masks; this rebuilds the X set, scores, and (unless ``lazy_synth``)
+        the synthesized response for exactly the rows that need them. The
+        sub-classification of a non-generative hit (direct secondary match
+        vs the rule's single-overwhelming-match branch) re-runs the same
+        float comparisons on the same device scores, so it cannot disagree
+        with the masks."""
+        best = m[0][0] if m else -1.0
+        X = [(s, e) for s, e in m[: self.max_sources] if s > self.t_single]
+        combined = float(sum(s for s, _ in X))
+        if hit and not gen:
+            if self.mode == "secondary" and m and best > t_s:
+                s, e = m[0]
+                self.stats.hits += 1
+                return (
+                    CacheResult(True, e.response, s, s, False, [(s, e)], t_s,
+                                0.0, "semantic"),
+                    None,
+                )
+            s, e = X[0]  # gen_ok hit with best > t_s: X[0] == m[0]
+            self.stats.hits += 1
+            return (
+                CacheResult(True, e.response, s, combined, False, X[:1], t_s,
+                            0.0, "semantic"),
+                None,
+            )
+        if hit:
+            self.stats.hits += 1
+            self.stats.generative_hits += 1
+            if lazy_synth:
+                response, ins = None, None
+            else:
+                response = synthesis.combine(query, X, self.synthesis_mode, self.summarizer)
+                ins = response if self.cache_synthesized else None
+            return (
+                CacheResult(True, response, best, combined, True, X, t_s, 0.0,
+                            "generative"),
+                ins,
+            )
+        return CacheResult(False, None, best, combined, False, X, t_s, 0.0), None

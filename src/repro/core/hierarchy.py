@@ -52,6 +52,7 @@ class HierarchicalCache:
         promote: bool = True,
         generative_across_levels: bool = True,
         fused: bool = True,
+        device_decide: bool = True,
     ):
         self.l1 = l1
         self.l2 = l2
@@ -61,9 +62,14 @@ class HierarchicalCache:
         self.generative_across_levels = generative_across_levels
         # fused=True stacks the level stores into one StoreBank so a batched
         # lookup searches every level in ONE device dispatch; levels whose
-        # stores cannot be banked (custom subclass, mixed dim/metric, aliased
-        # stores) transparently keep the per-level search loop
+        # stores cannot be banked (custom subclass, mixed dim, aliased
+        # stores) transparently keep the per-level search loop.
+        # device_decide=True additionally runs the whole read path — embed,
+        # search, per-level thresholds + winner walk, and the LRU/LFU touch
+        # scatter — as ONE device program (repro.core.read_path); levels with
+        # customized decide logic fall back to the banked host-decide path.
         self.fused = fused
+        self.device_decide = device_decide
         self._shared_bank: Optional[StoreBank] = None
 
     def _levels(self):
@@ -102,7 +108,11 @@ class HierarchicalCache:
                 return None  # custom search semantics must keep running
         if len({id(s) for s in stores}) != len(stores):
             return None
-        if len({s.dim for s in stores}) != 1 or len({s.metric for s in stores}) != 1:
+        if len({s.dim for s in stores}) != 1:
+            return None
+        # per-lane metric tags cover mixed cosine/dot/euclidean hierarchies
+        # in one bank; an unknown metric string keeps the per-level loop
+        if any(s.metric not in ("cosine", "dot", "euclidean") for s in stores):
             return None
         bank = self._shared_bank
         if bank is not None and all(
@@ -178,8 +188,9 @@ class HierarchicalCache:
         queries: List[str],
         contexts: Optional[List[Optional[dict]]] = None,
         vecs: Optional[np.ndarray] = None,
-    ) -> List[CacheResult]:
-        """Serve B queries with one embed forward + one search per level.
+        return_vecs: bool = False,
+    ):
+        """Serve B queries; the whole read path is ONE device program.
 
         Decision-identical to B sequential ``lookup`` calls against the same
         level snapshots: every level is searched once for the whole batch,
@@ -189,36 +200,180 @@ class HierarchicalCache:
         answers, cross-level synthesized answers) are deferred past the last
         decision and applied as ``add_batch`` scatters, so in-batch queries
         never observe each other.
+
+        Three read tiers, fastest eligible wins: (a) the fused read program
+        — embed forward, banked [L, cap, D] search, per-level decide masks,
+        the L1>L2>peers winner walk, and the recency/frequency touch scatter
+        in a single jitted dispatch, with host code only materializing
+        ``CacheResult``s for decided winners and residual-miss pool rows;
+        (b) the banked host-decide path (one fused search dispatch, decide
+        on host) when a level customizes its decide rule; (c) the per-level
+        search loop when stores cannot share a bank. ``return_vecs=True``
+        additionally returns the [B, D] embeddings (serving reuses them for
+        dedup/backfill without a second forward).
         """
         t0 = time.perf_counter()
         n = len(queries)
         if n == 0:
-            return []
+            empty = np.zeros((0, self.l1.embedder.dim), np.float32)
+            return ([], empty) if return_vecs else []
         contexts = list(contexts) if contexts is not None else [None] * n
-        if vecs is None:
-            vecs = self.l1.embed_batch(list(queries))
-        vecs = np.asarray(vecs)
         levels = self._levels()
+        # THE per-level candidate-count policy, shared by all three read
+        # tiers (capacity cap only where the store exposes one — custom
+        # stores without .capacity keep the uncapped per-level-loop k)
+        ks = []
+        for _, c in levels:
+            k = max(getattr(c, "max_sources", 4), 1)
+            cap = getattr(c.store, "capacity", None)
+            ks.append(min(k, cap) if cap else k)
+        # [n, L] per-query/per-level effective thresholds (host policy calls,
+        # same call order as the per-level loop: levels outer, queries inner)
+        thr = np.asarray(
+            [
+                [c.effective_threshold(q, ctx) for q, ctx in zip(queries, contexts)]
+                for _, c in levels
+            ],
+            np.float64,
+        ).T
+        bank = self.ensure_bank() if self.fused else None
+        dec = None
+        if bank is not None and self.device_decide:
+            from repro.core import read_path
 
+            specs = [
+                read_path.level_spec(c, ks[li]) for li, (_, c) in enumerate(levels)
+            ]
+            if all(sp is not None for sp in specs):
+                t0s = time.perf_counter()
+                dec = read_path.fused_read(
+                    bank, self.l1.embedder, queries, thr, specs, vecs=vecs
+                )
+                # the program is indivisible, so search_time_s absorbs the
+                # whole fused wall time (embed leg included) split evenly —
+                # slightly broader than the host tiers' search-only share
+                share = (time.perf_counter() - t0s) / len(levels)
+                for _, c in levels:
+                    c.stats.search_time_s += share
+        if dec is not None:
+            vecs = dec.vecs
+            out, promotions, l2_copies, deferred = self._materialize_fused(
+                queries, contexts, thr, levels, ks, dec
+            )
+        else:
+            if vecs is None:
+                vecs = self.l1.embed_batch(list(queries))
+            vecs = np.asarray(vecs)
+            out, promotions, l2_copies, deferred = self._decide_host(
+                queries, contexts, thr, levels, ks, vecs, bank
+            )
+        self._apply_writebacks(queries, vecs, promotions, l2_copies, deferred)
+        per_query_s = (time.perf_counter() - t0) / n
+        for i in range(n):
+            if out[i] is None:
+                out[i] = CacheResult(False)
+            out[i].latency_s = per_query_s
+        return (out, np.asarray(vecs)) if return_vecs else out
+
+    def _materialize_fused(self, queries, contexts, thr, levels, ks, dec):
+        """Host stage of the fused read: turn the program's decision tensors
+        into CacheResults, joining ONLY the rows that materialize (each
+        query's winning level, plus every level for residual misses feeding
+        the cross-level generative pool). Stats land where the sequential
+        walk would have put them; touches already happened on device."""
+        from repro.core import read_path
+
+        n = len(queries)
+        L = len(levels)
+        winner = dec.winner
+        # the sequential walk reaches level li only while every level above
+        # missed — credit lookups accordingly (hits are credited by
+        # _materialize_one on the winning level only)
+        for li, (_, cache) in enumerate(levels):
+            cache.stats.lookups += int(np.sum(winner >= li))
+        need_pool = self.generative_across_levels and L > 1
+        miss_rows = [i for i in range(n) if winner[i] >= L]
+        rows_by_level: List[dict] = []
+        for li, (_, cache) in enumerate(levels):
+            rows = [i for i in range(n) if winner[i] == li]
+            if need_pool:
+                rows = rows + miss_rows
+            rows_by_level.append(
+                read_path.join_rows(
+                    cache.store, dec.scores[:, li], dec.idx[:, li], rows, ks[li]
+                )
+            )
+        out: List[Optional[CacheResult]] = [None] * n
+        promotions: List[tuple] = []
+        l2_copies: List[tuple] = []
+        deferred: List[tuple] = []
+        synth_memo: dict = {}  # duplicate in-batch queries synthesize once
+        for i in range(n):
+            li = int(winner[i])
+            if li >= L:
+                continue
+            name, cache = levels[li]
+            res, _ = cache._materialize_one(
+                queries[i], float(thr[i, li]), rows_by_level[li][i],
+                True, bool(dec.generative[i, li]), lazy_synth=True,
+            )
+            if res.generative and res.response is None:
+                key = (id(cache), queries[i])
+                if key not in synth_memo:
+                    from repro.core import synthesis
+
+                    synth_memo[key] = synthesis.combine(
+                        queries[i], res.sources, cache.synthesis_mode, cache.summarizer
+                    )
+                    if cache.cache_synthesized:
+                        deferred.append((cache, i, synth_memo[key], {"generative": True}))
+                res.response = synth_memo[key]
+            if self.promote and cache is not self.l1:
+                promotions.append((i, res.response, name))
+                if self.inclusive and self.l2 is not None and cache is not self.l2:
+                    l2_copies.append((i, res.response, name))
+            res.level = f"{name}:{res.level}"
+            out[i] = res
+        if need_pool:
+            for i in miss_rows:
+                pooled = self._pool_candidates(
+                    [rows_by_level[li].get(i, []) for li in range(L)]
+                )
+                combined = float(sum(s for s, _ in pooled))
+                if pooled and combined > self.l1.t_combined:
+                    key = ("multi-level", queries[i])
+                    if key not in synth_memo:
+                        from repro.core import synthesis
+
+                        synth_memo[key] = synthesis.combine(
+                            queries[i], pooled, self.l1.synthesis_mode, self.l1.summarizer
+                        )
+                        deferred.append((self.l1, i, synth_memo[key], {"generative": True}))
+                    self.l1.stats.generative_hits += 1
+                    out[i] = CacheResult(
+                        True, synth_memo[key], pooled[0][0], combined, True, pooled,
+                        self.l1.effective_threshold(queries[i], contexts[i]),
+                        0.0, "multi-level:generative",
+                    )
+        return out, promotions, l2_copies, deferred
+
+    def _decide_host(self, queries, contexts, thr, levels, ks, vecs, bank):
+        """The banked host-decide path (one fused search dispatch, decisions
+        in host Python) and the per-level loop fallback — the pre-fused-read
+        pipeline, kept for levels/stores with customized semantics and as
+        the benchmark baseline."""
+        n = len(queries)
         level_results: List[List[CacheResult]] = []
         level_matches: List[list] = []
-        bank = self.ensure_bank() if self.fused else None
         if bank is not None:
-            # fused path: every level's candidates come out of ONE stacked
+            # banked path: every level's candidates come out of ONE stacked
             # [L, cap, D] x [B, D] top-k dispatch; per-level decision rules
             # (and the L1-beats-L2-beats-peers walk below) run host-side on
             # the returned scores — no extra dispatches
-            ks = [
-                min(max(getattr(c, "max_sources", 4), 1), c.store.capacity)
-                for _, c in levels
-            ]
             t0s = time.perf_counter()
             s_all, i_all = bank.search_lanes(vecs, max(ks))  # [B, L, k_fused]
             search_share = (time.perf_counter() - t0s) / len(levels)
             for li, (_, cache) in enumerate(levels):
-                thresholds = np.asarray(
-                    [cache.effective_threshold(q, c) for q, c in zip(queries, contexts)]
-                )
                 # touch=False equivalent: the join skips the recency bump;
                 # counters move below, only on levels the walk would probe
                 matches = cache.store.join_candidates(
@@ -227,23 +382,18 @@ class HierarchicalCache:
                 if ks[li] < max(ks):  # this level's own k, like its solo search
                     matches = [m[: ks[li]] for m in matches]
                 cache.stats.search_time_s += search_share
-                results, _ = cache._decide_batch(queries, thresholds, matches, lazy_synth=True)
+                results, _ = cache._decide_batch(queries, thr[:, li], matches, lazy_synth=True)
                 level_results.append(results)
                 level_matches.append(matches)
         else:
-            for _, cache in levels:
-                thresholds = np.asarray(
-                    [cache.effective_threshold(q, c) for q, c in zip(queries, contexts)]
-                )
+            for li, (_, cache) in enumerate(levels):
                 # touch=False: every level is probed speculatively here, but the
                 # sequential walk stops at the winning level — recency/frequency
                 # bookkeeping is applied after winners resolve, only on levels
                 # the walk would actually have searched (eviction hygiene)
-                matches = cache.search_candidates(
-                    vecs, k=max(getattr(cache, "max_sources", 4), 1), touch=False
-                )
+                matches = cache.search_candidates(vecs, k=ks[li], touch=False)
                 # lazy_synth: only levels that win a query synthesize (below)
-                results, _ = cache._decide_batch(queries, thresholds, matches, lazy_synth=True)
+                results, _ = cache._decide_batch(queries, thr[:, li], matches, lazy_synth=True)
                 level_results.append(results)
                 level_matches.append(matches)
 
@@ -322,11 +472,14 @@ class HierarchicalCache:
                         self.l1.effective_threshold(queries[i], contexts[i]),
                         0.0, "multi-level:generative",
                     )
+        return out, promotions, l2_copies, deferred
 
-        # batched writebacks: one scatter per destination cache. Dedupe
-        # repeated in-batch queries first — sequentially only the first
-        # occurrence writes (later ones would hit the fresh L1 copy), and a
-        # coalesced batch of duplicates must not flush L1 with clones.
+    def _apply_writebacks(self, queries, vecs, promotions, l2_copies, deferred):
+        """Batched writebacks: one scatter per destination cache. Dedupe
+        repeated in-batch queries first — sequentially only the first
+        occurrence writes (later ones would hit the fresh L1 copy), and a
+        coalesced batch of duplicates must not flush L1 with clones."""
+
         def _dedupe(items: List[tuple]) -> List[tuple]:
             seen, out = set(), []
             for it in items:
@@ -363,13 +516,6 @@ class HierarchicalCache:
                 metas=[m for _, _, m in items],
                 vecs=np.stack([vecs[i] for i, _, _ in items]),
             )
-
-        per_query_s = (time.perf_counter() - t0) / n
-        for i in range(n):
-            if out[i] is None:
-                out[i] = CacheResult(False)
-            out[i].latency_s = per_query_s
-        return out  # type: ignore[return-value]
 
     def insert(
         self,

@@ -139,38 +139,96 @@ class SemanticCache:
             False, None, best, best, False, matches[:1], t_s, time.perf_counter() - t_start
         )
 
+    def _solo_k(self) -> int:
+        """Candidates a standalone batched lookup searches (and touches)."""
+        return 1
+
+    def _fused_read_decision(self, queries, thresholds, vecs):
+        """Try the zero-host-hop read program for a standalone lookup: one
+        device dispatch covering embed -> search -> decide -> touch. Returns
+        (ReadDecision, k) or (None, 0) when ineligible — customized decide
+        logic, a non-bankable store, a store adopted into a multi-lane bank
+        (a solo search must stay lane-scoped), or an empty store."""
+        from repro.core import read_path
+
+        store = self.store
+        if (
+            not read_path.store_bankable(store)
+            or store._bank.L != 1
+            or len(store) == 0
+        ):
+            return None, 0
+        k = min(max(self._solo_k(), 1), store.capacity)
+        spec = read_path.level_spec(self, k)
+        if spec is None:
+            return None, 0
+        t0 = time.perf_counter()
+        dec = read_path.fused_read(
+            store._bank, self.embedder, queries,
+            np.asarray(thresholds, np.float32).reshape(-1, 1), (spec,), vecs=vecs,
+        )
+        self.stats.search_time_s += time.perf_counter() - t0
+        return dec, k
+
     def lookup_batch(
         self,
         queries: List[str],
         contexts: Optional[List[Optional[dict]]] = None,
         vecs: Optional[np.ndarray] = None,
-    ) -> List[CacheResult]:
-        """Batched lookup: one embed forward + one store search for B queries.
+        return_vecs: bool = False,
+    ):
+        """Batched lookup: one fused device program (embed + search + decide
+        masks + counter touches — see repro.core.read_path) for B queries,
+        or one embed forward + one store search when the store/decide logic
+        is customized. ``return_vecs=True`` additionally returns the [B, D]
+        embeddings (the serving path reuses them for dedup/backfill).
 
         Decision-identical to B sequential ``lookup`` calls against the same
         store snapshot (per-query effective thresholds applied vectorized);
-        store contents are not mutated, so results do not depend on the order
-        of queries within the batch.
+        store contents are not mutated by the decisions themselves, so
+        results do not depend on the order of queries within the batch.
         """
         t_start = time.perf_counter()
         n = len(queries)
         if n == 0:
-            return []
+            empty = np.zeros((0, self.embedder.dim), np.float32)
+            return ([], empty) if return_vecs else []
         contexts = list(contexts) if contexts is not None else [None] * n
         self.stats.lookups += n
         thresholds = np.asarray(
             [self.effective_threshold(q, c) for q, c in zip(queries, contexts)]
         )
-        if vecs is None:
-            vecs = self.embed_batch(list(queries))
-        t0 = time.perf_counter()
-        matches = self.store.search_batch(np.asarray(vecs), k=1)
-        self.stats.search_time_s += time.perf_counter() - t0
-        results, _ = self._decide_batch(queries, thresholds, matches)
+        dec, k = self._fused_read_decision(queries, thresholds, vecs)
+        if dec is not None:
+            matches = [
+                m[:k]
+                for m in self.store.join_candidates(
+                    dec.scores[:, 0], dec.idx[:, 0], touch=False
+                )
+            ]
+            results, to_insert = self._materialize_batch(
+                queries, thresholds, matches, dec.hit[:, 0], dec.generative[:, 0]
+            )
+            vecs = dec.vecs
+        else:
+            if vecs is None:
+                vecs = self.embed_batch(list(queries))
+            t0 = time.perf_counter()
+            matches = self.store.search_batch(np.asarray(vecs), k=self._solo_k())
+            self.stats.search_time_s += time.perf_counter() - t0
+            results, to_insert = self._decide_batch(queries, thresholds, matches)
         per_query_s = (time.perf_counter() - t_start) / n
         for r in results:
             r.latency_s = per_query_s
-        return results
+        if to_insert:
+            # whole synthesized set lands in one add_batch scatter
+            self.insert_batch(
+                [queries[i] for i, _ in to_insert],
+                [r for _, r in to_insert],
+                metas=[{"generative": True}] * len(to_insert),
+                vecs=np.stack([np.asarray(vecs[i]) for i, _ in to_insert]),
+            )
+        return (results, np.asarray(vecs)) if return_vecs else results
 
     def _decide_batch(
         self,
@@ -203,6 +261,56 @@ class SemanticCache:
                     CacheResult(False, None, best, best, False, m[:1], t_s, 0.0)
                 )
         return results, []
+
+    # -- host materialization for the fused (device-decide) read path -----------
+
+    def _materialize_one(
+        self,
+        query: str,
+        t_s: float,
+        m: List[Tuple[float, Entry]],
+        hit: bool,
+        gen: bool,
+        lazy_synth: bool = False,
+    ) -> Tuple[CacheResult, Optional[str]]:
+        """Build one CacheResult from the device decide masks plus the joined
+        candidates — the host half of ``_decide_batch`` after the comparisons
+        moved in-program. Returns (result, deferred synthesized response or
+        None). The generative subclass overrides this; here a hit is always
+        a plain semantic hit."""
+        if hit:
+            score, entry = m[0]
+            self.stats.hits += 1
+            return (
+                CacheResult(True, entry.response, score, score, False,
+                            [(score, entry)], t_s, 0.0, "semantic"),
+                None,
+            )
+        best = m[0][0] if m else -1.0
+        return CacheResult(False, None, best, best, False, m[:1], t_s, 0.0), None
+
+    def _materialize_batch(
+        self,
+        queries: List[str],
+        thresholds: np.ndarray,
+        matches: List[List[Tuple[float, Entry]]],
+        hit: np.ndarray,
+        gen: np.ndarray,
+        lazy_synth: bool = False,
+    ) -> Tuple[List[CacheResult], List[tuple]]:
+        """Vector form of ``_materialize_one`` (same (results, deferred
+        inserts) contract as ``_decide_batch``)."""
+        results: List[CacheResult] = []
+        to_insert: List[tuple] = []
+        for i, m in enumerate(matches):
+            r, ins = self._materialize_one(
+                queries[i], float(thresholds[i]), m, bool(hit[i]), bool(gen[i]),
+                lazy_synth,
+            )
+            results.append(r)
+            if ins is not None:
+                to_insert.append((i, ins))
+        return results, to_insert
 
     def insert(
         self,

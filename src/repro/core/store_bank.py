@@ -17,9 +17,25 @@ here. A standalone store is just a 1-lane bank; ``StoreBank.adopt`` stacks
 live stores into a shared bank (repointing each store's lane view) so a
 hierarchy's levels become rows of one tensor.
 
+Eviction counters are DEVICE-RESIDENT since the zero-host-hop read path:
+``last_access`` (a logical event tick — ordering-equivalent to the old
+``time.monotonic()`` stamps, including the tie semantics of one shared
+stamp per touch event), ``access_count`` and ``insert_seq`` are [L, cap]
+int32 ``jnp`` arrays. Touches are scatter-adds fused into the read dispatch
+(or one small scatter for the legacy host-join paths); insert-time counter
+resets ride the same donated scatter as the row write. Host code
+(``select_victim``, save/load, tests) reads them through a lazily-synced
+numpy mirror — the ``last_access``/``access_count``/``insert_seq``
+properties — which only pays a device->host copy after a fused read touched
+counters on device.
+
 For cosine lanes the bank keeps rows unit-normalized at insert time (dot ==
 cosine on unit vectors), so searches skip the per-call [cap, D]
-re-normalization entirely. Search backends: a jitted jnp einsum+top_k path,
+re-normalization entirely. Lanes may carry *mixed metrics* (per-lane metric
+tags: cosine/dot/euclidean) — the fused jnp search scores each lane under
+its own metric in one program, and the Pallas kernel covers cosine+dot
+mixes by scoring raw dots against unit rows and rescaling cosine lanes by
+1/|q| (rank-preserving). Search backends: a jitted jnp einsum+top_k path,
 or the ``similarity_topk`` Pallas kernel with its batched-lanes grid
 (``use_pallas=True``); the kernel backend (interpret vs compiled) is
 auto-selected per JAX backend via ``repro.kernels.backend``.
@@ -27,12 +43,24 @@ auto-selected per JAX backend via ``repro.kernels.backend``.
 from __future__ import annotations
 
 import functools
-import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+_KERNEL_METRICS = ("cosine", "dot")  # metrics the Pallas kernel path covers
+_INT32_MIN = np.iinfo(np.int32).min
+# renumber the logical event clock well before int32 saturates (headroom for
+# one batch worth of ticks past the check)
+_TICK_COMPACT_AT = np.iinfo(np.int32).max - (1 << 20)
+
+
+def bucket_len(n: int) -> int:
+    """THE bucketing policy: the next power-of-two length >= n (>= 1).
+    Every padded host->device block (rows, scatter indices, touch lists)
+    uses this so jits compile O(log N) variants, not one per size."""
+    return 1 << (n - 1).bit_length() if n > 1 else 1
 
 
 def pad_to_bucket(rows: np.ndarray) -> Tuple[np.ndarray, int]:
@@ -45,7 +73,7 @@ def pad_to_bucket(rows: np.ndarray) -> Tuple[np.ndarray, int]:
     sharded search paths.
     """
     n = rows.shape[0]
-    bucket = 1 << (n - 1).bit_length() if n > 1 else 1
+    bucket = bucket_len(n)
     if bucket > n:
         rows = np.concatenate(
             [rows, np.zeros((bucket - n, *rows.shape[1:]), rows.dtype)]
@@ -53,27 +81,37 @@ def pad_to_bucket(rows: np.ndarray) -> Tuple[np.ndarray, int]:
     return rows, n
 
 
-def prepare_scatter(idxs: List[int], rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-    """Build the (rows, idxs) update for a multi-row ``buf.at[idxs].set``.
+def prepare_scatter(
+    idxs: List[int], rows: np.ndarray, *extras: np.ndarray
+) -> Tuple[np.ndarray, ...]:
+    """Build the (rows, idxs, *extras) update for a multi-row
+    ``buf.at[idxs].set``.
 
     Deduplicates repeated slots last-write-wins (a batch that wraps capacity
     may pick the same victim twice; XLA scatter order for conflicting updates
     is implementation-defined, the sequential loop's is not) and pads to the
     next power-of-two bucket by repeating the final update (identical
     duplicate writes are order-independent) so the scatter jit compiles per
-    bucket, not per batch size. Shared by the in-memory and sharded stores.
+    bucket, not per batch size. ``extras`` are per-row arrays (insert ticks,
+    sequence numbers) deduped and padded in lockstep. Shared by the
+    in-memory and sharded stores.
     """
     slot_to_row: Dict[int, int] = {}
     for j, idx in enumerate(idxs):
         slot_to_row[idx] = j
     out_idx = np.fromiter(slot_to_row.keys(), np.int32, len(slot_to_row))
-    out_rows = rows[np.fromiter(slot_to_row.values(), np.int64, len(slot_to_row))]
-    bucket = 1 << (len(out_idx) - 1).bit_length() if len(out_idx) > 1 else 1
+    keep = np.fromiter(slot_to_row.values(), np.int64, len(slot_to_row))
+    out_rows = rows[keep]
+    out_extras = [np.asarray(e)[keep] for e in extras]
+    bucket = bucket_len(len(out_idx))
     if bucket > len(out_idx):
         pad = bucket - len(out_idx)
         out_idx = np.concatenate([out_idx, np.repeat(out_idx[-1:], pad)])
         out_rows = np.concatenate([out_rows, np.repeat(out_rows[-1:], pad, axis=0)])
-    return out_rows, out_idx
+        out_extras = [
+            np.concatenate([e, np.repeat(e[-1:], pad, axis=0)]) for e in out_extras
+        ]
+    return (out_rows, out_idx, *out_extras)
 
 
 def select_victim(
@@ -99,11 +137,42 @@ def _normalize_rows(rows: jax.Array) -> jax.Array:
 # -- module-level jits: compiled once per shape and shared by every bank ------
 
 
-@functools.partial(jax.jit, donate_argnums=(0, 1), static_argnames=("normalize",))
-def _bank_scatter(buf, valid, lane, idxs, rows, *, normalize: bool):
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4), static_argnames=("normalize",))
+def _bank_scatter(buf, valid, last, cnt, seq, lane, idxs, rows,
+                  c_lanes, c_idxs, c_ticks, c_seqs, *, normalize: bool):
+    """Row scatter with the insert-time counter resets fused in: one donated
+    device update covers rows, masks, and last_access/access_count/insert_seq
+    for the claimed slots (slots deduped host-side; padding repeats the final
+    update with identical values, so conflicting-order scatter is moot)."""
     if normalize:
         rows = _normalize_rows(rows)
-    return buf.at[lane, idxs].set(rows), valid.at[lane, idxs].set(True)
+    return (
+        buf.at[lane, idxs].set(rows),
+        valid.at[lane, idxs].set(True),
+        last.at[c_lanes, c_idxs].set(c_ticks),
+        cnt.at[c_lanes, c_idxs].set(0),
+        seq.at[c_lanes, c_idxs].set(c_seqs),
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def _bank_counter_set(last, cnt, seq, c_lanes, c_idxs, c_ticks, c_seqs):
+    return (
+        last.at[c_lanes, c_idxs].set(c_ticks),
+        cnt.at[c_lanes, c_idxs].set(0),
+        seq.at[c_lanes, c_idxs].set(c_seqs),
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _bank_touch(last, cnt, lanes, idxs, weights, tick):
+    """Batched recency/frequency bump: one scatter for N (lane, idx) touches.
+    ``weights`` is 1 per real touch and 0 for bucket padding — duplicate
+    (lane, idx) pairs accumulate in ``access_count`` (add commutes) and share
+    one tick in ``last_access`` (max of equal values), exactly matching the
+    sequential host loop's one-stamp-per-event semantics."""
+    stamp = jnp.where(weights > 0, tick, jnp.int32(_INT32_MIN))
+    return last.at[lanes, idxs].max(stamp), cnt.at[lanes, idxs].add(weights)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -132,15 +201,29 @@ def _lane_scores(db, q, metric: str, prenormalized: bool):
     raise ValueError(f"unknown metric {metric!r}")
 
 
-@functools.lru_cache(maxsize=None)
-def _fused_search_jnp(k: int, metric: str, prenormalized: bool):
-    def fn(buf, valid, q):  # buf [L, cap, D], valid [L, cap], q [Q, D]
-        s = _lane_scores(buf, q, metric, prenormalized)  # [L, Q, cap]
-        s = jnp.where(valid[:, None, :], s, -jnp.inf)
-        ts, ti = jax.lax.top_k(s, k)  # [L, Q, k]
-        return ts.transpose(1, 0, 2), ti.transpose(1, 0, 2)
+def fused_search_body(buf, valid, q, k: int, metrics: tuple, prenorm: tuple):
+    """Traced body of the fused all-lanes search, shared by the standalone
+    jit below and the zero-host-hop read program (repro.core.read_path):
+    buf [L, cap, D], valid [L, cap], q [Q, D] -> ([Q, L, k], [Q, L, k]).
+    Uniform-metric banks score all lanes in one einsum; mixed-metric banks
+    score each lane under its own per-lane metric tag — still one program,
+    one dispatch."""
+    if len(set(metrics)) == 1:
+        s = _lane_scores(buf, q, metrics[0], all(prenorm))  # [L, Q, cap]
+    else:
+        s = jnp.stack([
+            _lane_scores(buf[li], q, metrics[li], prenorm[li])
+            for li in range(len(metrics))
+        ])
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    ts, ti = jax.lax.top_k(s, k)  # [L, Q, k]
+    return ts.transpose(1, 0, 2), ti.transpose(1, 0, 2)
 
-    return jax.jit(fn)
+
+@functools.lru_cache(maxsize=None)
+def _fused_search_jnp(k: int, metrics: tuple, prenorm: tuple):
+    return jax.jit(functools.partial(fused_search_body, k=k, metrics=metrics,
+                                     prenorm=prenorm))
 
 
 @functools.lru_cache(maxsize=None)
@@ -159,8 +242,8 @@ def _lane_search_pallas(k: int, metric: str, interpret: bool, prenormalized: boo
 
     def fn(buf, valid, lane, q):
         s, i = _similarity_topk_lanes(
-            buf[lane][None], valid[lane][None], q, k=k, metric=metric,
-            block_n=512, interpret=interpret, prenormalized=prenormalized,
+            buf[lane][None], valid[lane][None], q, k=k, metric=(metric,),
+            block_n=None, interpret=interpret, prenormalized=prenormalized,
         )
         return s[:, 0], i[:, 0]
 
@@ -169,50 +252,234 @@ def _lane_search_pallas(k: int, metric: str, interpret: bool, prenormalized: boo
 
 class StoreBank:
     """Device-resident multi-lane store: stacked [L, cap, D] rows + masks +
-    per-lane eviction counters + the fused search dispatch."""
+    per-lane device eviction counters + the fused search dispatch."""
 
     def __init__(
         self,
         dim: int,
         capacities: Sequence[int],
         *,
-        metric: str = "cosine",
+        metric="cosine",  # one metric for every lane, or a per-lane sequence
         use_pallas: bool = False,
         interpret: Optional[bool] = None,
         buf: Optional[jax.Array] = None,
         valid: Optional[jax.Array] = None,
     ):
         self.dim = dim
-        self.metric = metric
         self.use_pallas = use_pallas
         self.interpret = interpret  # None = auto (repro.kernels.backend)
         self.capacities = list(capacities)
         self.L = len(self.capacities)
         self.cap = max(self.capacities)
+        if isinstance(metric, str):
+            self.metrics: Tuple[str, ...] = (metric,) * self.L
+        else:
+            self.metrics = tuple(metric)
+            assert len(self.metrics) == self.L
         # cosine lanes hold unit rows: normalize once at insert, never at search
-        self.prenormalized = metric == "cosine"
+        self.prenorm: Tuple[bool, ...] = tuple(m == "cosine" for m in self.metrics)
         self.buf = (
             buf if buf is not None else jnp.zeros((self.L, self.cap, dim), jnp.float32)
         )
         self.valid = (
             valid if valid is not None else jnp.zeros((self.L, self.cap), bool)
         )
-        # per-lane recency/frequency/insertion counters (host-side, shared by
-        # every lane view's eviction policy — LRU/LFU over sharded lanes too)
-        self.last_access = np.zeros((self.L, self.cap), np.float64)
-        self.access_count = np.zeros((self.L, self.cap), np.int64)
-        self.insert_seq = np.zeros((self.L, self.cap), np.int64)
+        # per-lane recency/frequency/insertion counters: DEVICE arrays, shared
+        # by every lane view's eviction policy (LRU/LFU over sharded lanes
+        # too). last_access holds logical event ticks — order-equivalent to
+        # wall-clock stamps, and exactly one tick per touch event so argmin
+        # tie-breaking matches the old host loop.
+        self.d_last_access = jnp.zeros((self.L, self.cap), jnp.int32)
+        self.d_access_count = jnp.zeros((self.L, self.cap), jnp.int32)
+        self.d_insert_seq = jnp.zeros((self.L, self.cap), jnp.int32)
+        self._mirror: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = (
+            np.zeros((self.L, self.cap), np.int32),
+            np.zeros((self.L, self.cap), np.int32),
+            np.zeros((self.L, self.cap), np.int32),
+        )
+        self._tick = 1  # 0 = never touched/inserted
+        # insert-time counter updates awaiting the next row scatter (claims
+        # run host-side first; the device catches up in the same donated
+        # update that writes the rows)
+        self._pending: List[Tuple[int, int, int, int]] = []
         self.dispatches = 0  # fused/device search dispatches issued by this bank
+        self.counter_scatters = 0  # standalone counter scatters (non-fused paths)
+        self.host_hops = 0  # host<->device data hops on the search path
+
+    # -- metric helpers --------------------------------------------------------
+
+    @property
+    def metric(self) -> str:
+        """Uniform metric name, or "mixed" for per-lane-tagged banks."""
+        return self.metrics[0] if len(set(self.metrics)) == 1 else "mixed"
+
+    @property
+    def prenormalized(self) -> bool:
+        return all(self.prenorm)
+
+    def _kernel_ok(self) -> bool:
+        return all(m in _KERNEL_METRICS for m in self.metrics)
+
+    # -- counters: device truth + lazily-synced host mirror --------------------
+
+    def next_tick(self) -> int:
+        if self._tick >= _TICK_COMPACT_AT:
+            self._compact_ticks()
+        t = self._tick
+        self._tick += 1
+        return t
+
+    def _compact_ticks(self) -> None:
+        """Renumber last_access ticks densely (order- and tie-preserving
+        rank transform) before the int32 event clock saturates: at most
+        L*cap distinct stamps survive, so the clock restarts near zero.
+        Runs once every ~2B touch events — one host sync + one upload."""
+        self.flush_pending()  # pre-compaction ticks must not resurface later
+        last, cnt, seq = self.counters_host()
+        ranks = np.unique(last, return_inverse=True)[1]
+        self.set_counters(ranks.reshape(last.shape).astype(np.int32), cnt, seq)
+        self._tick = int(ranks.max(initial=0)) + 1
+
+    def counters_host(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Host view of the device counters (synced on demand; only a fused
+        read invalidates it, so eviction-time syncs cost one copy per dirty
+        epoch, not one per insert). A clean mirror already reflects pending
+        insert claims (note_insert writes it in place), so no flush happens
+        here — victim selection between claims in one add_batch stays free;
+        only a dirty mirror forces the pending flush + device copy."""
+        if self._mirror is None:
+            self.flush_pending()
+            # np.array (not asarray): jax arrays view as read-only, and the
+            # mirror takes in-place updates from note_insert/touch_slots
+            self._mirror = (
+                np.array(self.d_last_access),
+                np.array(self.d_access_count),
+                np.array(self.d_insert_seq),
+            )
+        return self._mirror
+
+    @property
+    def last_access(self) -> np.ndarray:
+        return self.counters_host()[0]
+
+    @property
+    def access_count(self) -> np.ndarray:
+        return self.counters_host()[1]
+
+    @property
+    def insert_seq(self) -> np.ndarray:
+        return self.counters_host()[2]
+
+    def adopt_fused_counters(self, new_last: jax.Array, new_cnt: jax.Array) -> None:
+        """Install counters returned by a fused read program (the donated
+        scatter-add already applied on device); the host mirror goes stale."""
+        self.d_last_access = new_last
+        self.d_access_count = new_cnt
+        self._mirror = None
+
+    def set_counters(self, last: np.ndarray, cnt: np.ndarray, seq: np.ndarray) -> None:
+        """Install full counter arrays (adoption / snapshot load)."""
+        last = np.asarray(last, np.int32)
+        cnt = np.asarray(cnt, np.int32)
+        seq = np.asarray(seq, np.int32)
+        self.d_last_access = jnp.asarray(last)
+        self.d_access_count = jnp.asarray(cnt)
+        self.d_insert_seq = jnp.asarray(seq)
+        self._mirror = (last.copy(), cnt.copy(), seq.copy())
+        self._tick = max(self._tick, int(last.max(initial=0)) + 1)
+
+    def note_insert(self, lane: int, idx: int, seq: int) -> None:
+        """Counter bookkeeping for one claimed slot. The device update is
+        deferred into the next row scatter; the host mirror (when clean) is
+        updated immediately so victim selection inside the same add_batch
+        sees earlier claims."""
+        tick = self.next_tick()
+        if self._mirror is not None:
+            ml, mc, ms = self._mirror
+            ml[lane, idx] = tick
+            mc[lane, idx] = 0
+            ms[lane, idx] = seq
+        self._pending.append((lane, idx, tick, seq))
+
+    def _drain_pending(self):
+        """Pending insert-counter updates as bucketed scatter arrays
+        (last-wins dedupe per slot, padding repeats the final update)."""
+        last_wins: Dict[Tuple[int, int], Tuple[int, int]] = {}
+        for lane, idx, tick, seq in self._pending:
+            last_wins[(lane, idx)] = (tick, seq)
+        self._pending.clear()
+        n = len(last_wins)
+        lanes = np.fromiter((k[0] for k in last_wins), np.int32, n)
+        idxs = np.fromiter((k[1] for k in last_wins), np.int32, n)
+        ticks = np.fromiter((v[0] for v in last_wins.values()), np.int32, n)
+        seqs = np.fromiter((v[1] for v in last_wins.values()), np.int32, n)
+        bucket = bucket_len(n)
+        if bucket > n:
+            pad = bucket - n
+            lanes = np.concatenate([lanes, np.repeat(lanes[-1:], pad)])
+            idxs = np.concatenate([idxs, np.repeat(idxs[-1:], pad)])
+            ticks = np.concatenate([ticks, np.repeat(ticks[-1:], pad)])
+            seqs = np.concatenate([seqs, np.repeat(seqs[-1:], pad)])
+        return lanes, idxs, ticks, seqs
+
+    def flush_pending(self) -> None:
+        """Push deferred insert-counter updates to device (normally they ride
+        the row scatter; this standalone path is a safety net for callers
+        that read counters between a claim and its ``set_rows``)."""
+        if not self._pending:
+            return
+        cl, ci, ct, cs = self._drain_pending()
+        self.counter_scatters += 1
+        self.d_last_access, self.d_access_count, self.d_insert_seq = _bank_counter_set(
+            self.d_last_access, self.d_access_count, self.d_insert_seq,
+            jnp.asarray(cl), jnp.asarray(ci), jnp.asarray(ct), jnp.asarray(cs),
+        )
+
+    def touch_slots(self, lanes, idxs) -> None:
+        """Bump recency/frequency for N (lane, idx) pairs in ONE device
+        scatter (one shared tick per call — the old one-``now``-per-event
+        semantics). Duplicate pairs accumulate one count each. Keeps the
+        host mirror in sync when it is clean."""
+        lanes = np.asarray(lanes, np.int32).reshape(-1)
+        idxs = np.asarray(idxs, np.int32).reshape(-1)
+        if lanes.size == 0:
+            return
+        tick = self.next_tick()
+        if self._mirror is not None:
+            ml, mc, _ = self._mirror
+            ml[lanes, idxs] = tick
+            np.add.at(mc, (lanes, idxs), 1)
+        n = lanes.size
+        bucket = bucket_len(n)
+        w = np.ones(n, np.int32)
+        if bucket > n:
+            pad = bucket - n
+            lanes = np.concatenate([lanes, np.repeat(lanes[-1:], pad)])
+            idxs = np.concatenate([idxs, np.repeat(idxs[-1:], pad)])
+            w = np.concatenate([w, np.zeros(pad, np.int32)])
+        self.counter_scatters += 1
+        self.d_last_access, self.d_access_count = _bank_touch(
+            self.d_last_access, self.d_access_count,
+            jnp.asarray(lanes), jnp.asarray(idxs), jnp.asarray(w), np.int32(tick),
+        )
 
     # -- device updates --------------------------------------------------------
 
     def set_rows(self, lane: int, idxs: List[int], rows: np.ndarray) -> None:
-        """Scatter N raw rows into one lane (ONE donated device update;
-        rows are unit-normalized in-jit for cosine banks)."""
+        """Scatter N raw rows into one lane (ONE donated device update that
+        also applies the pending insert-counter resets; rows are
+        unit-normalized in-jit for cosine lanes)."""
         sel, scatter_idx = prepare_scatter(idxs, np.asarray(rows, np.float32))
-        self.buf, self.valid = _bank_scatter(
-            self.buf, self.valid, lane, jnp.asarray(scatter_idx), jnp.asarray(sel),
-            normalize=self.prenormalized,
+        cl, ci, ct, cs = self._drain_pending()
+        (
+            self.buf, self.valid,
+            self.d_last_access, self.d_access_count, self.d_insert_seq,
+        ) = _bank_scatter(
+            self.buf, self.valid,
+            self.d_last_access, self.d_access_count, self.d_insert_seq,
+            lane, jnp.asarray(scatter_idx), jnp.asarray(sel),
+            jnp.asarray(cl), jnp.asarray(ci), jnp.asarray(ct), jnp.asarray(cs),
+            normalize=self.prenorm[lane],
         )
 
     def invalidate(self, lane: int, idx: int) -> None:
@@ -230,17 +497,20 @@ class StoreBank:
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Top-k of ONE lane for Q queries in one device dispatch ->
         (scores [Q, k], lane-local idx [Q, k])."""
+        self.flush_pending()
         q, n_q = pad_to_bucket(np.atleast_2d(np.asarray(q_vecs, np.float32)))
         self.dispatches += 1
-        if self.use_pallas:
+        self.host_hops += 2  # query upload + score download around the dispatch
+        metric = self.metrics[lane]
+        if self.use_pallas and metric in _KERNEL_METRICS:
             from repro.kernels.similarity_topk import ops as st_ops
 
             st_ops.record_dispatch()
             fn = _lane_search_pallas(
-                k, self.metric, self._resolved_interpret(), self.prenormalized
+                k, metric, self._resolved_interpret(), self.prenorm[lane]
             )
         else:
-            fn = _lane_search_jnp(k, self.metric, self.prenormalized)
+            fn = _lane_search_jnp(k, metric, self.prenorm[lane])
         s, i = fn(self.buf, self.valid, lane, jnp.asarray(q))
         return np.asarray(s)[:n_q], np.asarray(i)[:n_q]
 
@@ -251,17 +521,23 @@ class StoreBank:
         (scores [Q, L, k], lane-local idx [Q, L, k]). Candidates are never
         merged across lanes — cross-lane policy (hierarchy walk order,
         shard merge) stays with the caller, host-side, on these scores."""
+        self.flush_pending()
         q, n_q = pad_to_bucket(np.atleast_2d(np.asarray(q_vecs, np.float32)))
         self.dispatches += 1
-        if self.use_pallas:
+        self.host_hops += 2
+        if self.use_pallas and self._kernel_ok():
             from repro.kernels.similarity_topk.ops import similarity_topk_lanes
 
+            # mixed cosine/dot banks satisfy the kernel's unit-cosine-rows
+            # requirement by construction (insert normalizes cosine lanes)
+            mixed = len(set(self.metrics)) > 1
             s, i = similarity_topk_lanes(
-                self.buf, self.valid, jnp.asarray(q), k=k, metric=self.metric,
-                interpret=self.interpret, prenormalized=self.prenormalized,
+                self.buf, self.valid, jnp.asarray(q), k=k, metric=self.metrics,
+                interpret=self.interpret,
+                prenormalized=True if mixed else self.prenormalized,
             )
         else:
-            fn = _fused_search_jnp(k, self.metric, self.prenormalized)
+            fn = _fused_search_jnp(k, self.metrics, self.prenorm)
             s, i = fn(self.buf, self.valid, jnp.asarray(q))
         return np.asarray(s)[:n_q], np.asarray(i)[:n_q]
 
@@ -275,11 +551,6 @@ class StoreBank:
         cap = self.capacities[lane] if capacity is None else capacity
         return self.valid[lane, :cap]
 
-    def note_insert(self, lane: int, idx: int, seq: int) -> None:
-        self.last_access[lane, idx] = time.monotonic()
-        self.access_count[lane, idx] = 0
-        self.insert_seq[lane, idx] = seq
-
     # -- composition -----------------------------------------------------------
 
     @classmethod
@@ -288,31 +559,42 @@ class StoreBank:
         store at its row. Contents (rows, masks, counters) are copied from
         each store's current bank lane, so adoption is transparent to the
         stores' own add/search/remove paths — they just start resolving
-        against the shared tensor."""
+        against the shared tensor. Per-lane metric tags let mixed-metric
+        stores share a bank; mixed dims cannot."""
         dims = {s.dim for s in stores}
-        metrics = {s.metric for s in stores}
-        if len(dims) != 1 or len(metrics) != 1:
-            raise ValueError(
-                f"cannot stack stores with mixed dim/metric: {dims}/{metrics}"
-            )
+        if len(dims) != 1:
+            raise ValueError(f"cannot stack stores with mixed dim: {dims}")
+        for s in stores:
+            s._bank.flush_pending()
+        interps = {s._bank.interpret for s in stores}
         bank = cls(
             dims.pop(),
             [s.capacity for s in stores],
-            metric=metrics.pop(),
+            metric=[s.metric for s in stores],
             # conservative: the compiled-kernel path only when every lane opted in
             use_pallas=all(getattr(s, "use_pallas", False) for s in stores),
+            # an explicit interpret override shared by every source lane
+            # survives adoption (like use_pallas); disagreement falls back
+            # to auto-selection
+            interpret=interps.pop() if len(interps) == 1 else None,
         )
         buf = np.zeros((bank.L, bank.cap, bank.dim), np.float32)
         valid = np.zeros((bank.L, bank.cap), bool)
+        last = np.zeros((bank.L, bank.cap), np.int32)
+        cnt = np.zeros((bank.L, bank.cap), np.int32)
+        seq = np.zeros((bank.L, bank.cap), np.int32)
         for li, s in enumerate(stores):
             ob, ol, cap = s._bank, s._lane, s.capacity
+            src_last, src_cnt, src_seq = ob.counters_host()
             buf[li, :cap] = np.asarray(ob.buf[ol, :cap])
             valid[li, :cap] = np.asarray(ob.valid[ol, :cap])
-            bank.last_access[li, :cap] = ob.last_access[ol, :cap]
-            bank.access_count[li, :cap] = ob.access_count[ol, :cap]
-            bank.insert_seq[li, :cap] = ob.insert_seq[ol, :cap]
+            last[li, :cap] = src_last[ol, :cap]
+            cnt[li, :cap] = src_cnt[ol, :cap]
+            seq[li, :cap] = src_seq[ol, :cap]
         bank.buf = jnp.asarray(buf)
         bank.valid = jnp.asarray(valid)
+        bank.set_counters(last, cnt, seq)
+        bank._tick = max(bank._tick, *(s._bank._tick for s in stores))
         for li, s in enumerate(stores):
             s._bank = bank
             s._lane = li

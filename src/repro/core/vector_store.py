@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -83,7 +82,7 @@ class InMemoryVectorStore:
         return self._bank.lane_valid(self._lane, self.capacity)
 
     @property
-    def _last_access(self) -> np.ndarray:  # writable numpy view into the bank
+    def _last_access(self) -> np.ndarray:  # host view of the bank's device counters
         return self._bank.last_access[self._lane][: self.capacity]
 
     @property
@@ -189,9 +188,11 @@ class InMemoryVectorStore:
         """Join raw (scores [Q, k], slot idx [Q, k]) search output against the
         host-side entries — the step shared by this store's ``search_batch``
         and the hierarchy's fused all-lanes lookup, which searches the whole
-        bank in one dispatch and joins each lane's slice here."""
-        now = time.monotonic()
+        bank in one dispatch and joins each lane's slice here. (The fully
+        fused read path never comes through here for touches — its bumps are
+        a scatter-add inside the read program itself.)"""
         out: List[List[Tuple[float, Entry]]] = []
+        touched: List[int] = []
         for srow, irow in zip(scores, idx):
             row = []
             for sc, i in zip(srow, irow):
@@ -201,24 +202,27 @@ class InMemoryVectorStore:
                 if not np.isfinite(sc) or e is None:
                     continue
                 # same recency/frequency bookkeeping as the single-query path,
-                # so eviction behaves identically under batched lookups
+                # so eviction behaves identically under batched lookups — now
+                # ONE device scatter for the whole join instead of a host loop
                 if touch:
-                    self._last_access[int(i)] = now
-                    self._access_count[int(i)] += 1
+                    touched.append(int(i))
                 row.append((float(sc), e))
             out.append(row)
+        if touched:
+            self._bank.touch_slots([self._lane] * len(touched), touched)
         return out
 
     def touch_keys(self, keys) -> None:
-        """Deferred LRU/LFU bookkeeping: one bump per occurrence, matching
-        what per-query sequential probes would have recorded. Keys evicted
-        since the search are skipped."""
-        now = time.monotonic()
-        for key in keys:
-            idx = self._key_to_slot.get(key)
-            if idx is not None:
-                self._last_access[idx] = now
-                self._access_count[idx] += 1
+        """Deferred LRU/LFU bookkeeping: one bump per occurrence (one device
+        scatter for the whole key list), matching what per-query sequential
+        probes would have recorded. Keys evicted since the search are
+        skipped."""
+        idxs = [
+            idx for idx in (self._key_to_slot.get(key) for key in keys)
+            if idx is not None
+        ]
+        if idxs:
+            self._bank.touch_slots([self._lane] * len(idxs), idxs)
 
     def remove(self, key: int) -> bool:
         idx = self._key_to_slot.pop(key, None)
@@ -255,7 +259,10 @@ class InMemoryVectorStore:
             "next_key": self._next_key,
             "seq": self._seq,
             # cosine banks persist unit rows; loaders skip re-normalization
-            "normalized": self._bank.prenormalized,
+            "normalized": self._bank.prenorm[self._lane],
+            # device counters persist as logical int32 ticks (order-preserving);
+            # loaders rank-transform legacy wall-clock float stamps
+            "counter_rep": "tick",
             "entries": [
                 None if e is None else {"key": e.key, "query": e.query, "response": e.response, "meta": e.meta}
                 for e in self._entries
@@ -279,9 +286,16 @@ class InMemoryVectorStore:
             buf = buf / norms
         store._bank.buf = jnp.asarray(buf)[None]
         store._bank.valid = jnp.asarray(z["valid"])[None]
-        store._bank.last_access[0] = z["last_access"]
-        store._bank.access_count[0] = z["access_count"]
-        store._bank.insert_seq[0] = z["insert_seq"]
+        last = np.asarray(z["last_access"])
+        if m.get("counter_rep") != "tick":
+            # pre-device-counter snapshot: float wall-clock stamps on disk.
+            # Rank-transform into the tick representation — order (and ties)
+            # preserved, which is all lru/fifo argmin victim selection uses.
+            last = np.unique(last, return_inverse=True)[1].astype(np.int64)
+        store._bank.set_counters(
+            last[None], np.asarray(z["access_count"])[None],
+            np.asarray(z["insert_seq"])[None],
+        )
         store.size = m["size"]
         store._next_key = m["next_key"]
         store._seq = m["seq"]

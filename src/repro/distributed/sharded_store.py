@@ -21,7 +21,6 @@ lru/lfu/fifo using the same victim rule as ``InMemoryVectorStore``
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -238,18 +237,25 @@ class ShardedVectorStore:
         )
         normalize = self.bank.prenormalized
 
-        def _scatter(buf, valid, lanes, withins, rows):
+        def _scatter(buf, valid, last, cnt, seq, lanes, withins, rows,
+                     c_lanes, c_withins, c_ticks, c_seqs):
+            # rows, masks, AND the insert-time counter resets in one donated
+            # update — the bank's device counters stay co-located with the
+            # sharded lanes' lifecycle (counter placement is left to XLA)
             if normalize:
                 rows = _norm_rows(rows)
             return (
                 buf.at[lanes, withins].set(rows),
                 valid.at[lanes, withins].set(True),
+                last.at[c_lanes, c_withins].set(c_ticks),
+                cnt.at[c_lanes, c_withins].set(0),
+                seq.at[c_lanes, c_withins].set(c_seqs),
             )
 
         self._add_many = jax.jit(
             _scatter,
-            donate_argnums=(0, 1),
-            out_shardings=(self._db_sharding, self._valid_sharding),
+            donate_argnums=(0, 1, 2, 3, 4),
+            out_shardings=(self._db_sharding, self._valid_sharding, None, None, None),
         )
         self._invalidate = jax.jit(
             lambda valid, lane, within: valid.at[lane, within].set(False),
@@ -292,12 +298,11 @@ class ShardedVectorStore:
             within = (self._rr // self.n_shards) % self.cap_local
             self._rr += 1
             return shard * self.cap_local + within
-        # every slot is live: evict per policy over the bank's flat counters
+        # every slot is live: evict per policy over the bank's flat counter
+        # view (host mirror of the device arrays, synced on demand)
+        last, cnt, seq = self.bank.counters_host()
         return select_victim(
-            self.eviction,
-            self.bank.last_access.reshape(-1),
-            self.bank.access_count.reshape(-1),
-            self.bank.insert_seq.reshape(-1),
+            self.eviction, last.reshape(-1), cnt.reshape(-1), seq.reshape(-1)
         )
 
     def _claim_slot(self, idx: int, query: str, response: str) -> int:
@@ -321,9 +326,16 @@ class ShardedVectorStore:
         sel_rows, sel_idx = prepare_scatter(idxs, rows)
         lanes = (sel_idx // self.cap_local).astype(np.int32)
         withins = (sel_idx % self.cap_local).astype(np.int32)
-        self.bank.buf, self.bank.valid = self._add_many(
-            self.bank.buf, self.bank.valid,
+        cl, ci, ct, cs = self.bank._drain_pending()  # the claims' counter resets
+        bank = self.bank
+        (
+            bank.buf, bank.valid,
+            bank.d_last_access, bank.d_access_count, bank.d_insert_seq,
+        ) = self._add_many(
+            bank.buf, bank.valid,
+            bank.d_last_access, bank.d_access_count, bank.d_insert_seq,
             jnp.asarray(lanes), jnp.asarray(withins), jnp.asarray(sel_rows),
+            jnp.asarray(cl), jnp.asarray(ci), jnp.asarray(ct), jnp.asarray(cs),
         )
 
     def add(self, vec: np.ndarray, query: str, response: str) -> int:
@@ -372,21 +384,24 @@ class ShardedVectorStore:
 
     def touch_keys(self, keys) -> None:
         """Deferred recency/frequency bookkeeping (same contract as
-        ``InMemoryVectorStore.touch_keys``): one bump per occurrence; keys
-        overwritten since the search are skipped."""
-        now = time.monotonic()
-        for key in keys:
-            idx = self._key_to_slot.get(key)
-            if idx is not None:
-                lane, within = self._lane_within(idx)
-                self.bank.last_access[lane, within] = now
-                self.bank.access_count[lane, within] += 1
+        ``InMemoryVectorStore.touch_keys``): one bump per occurrence, one
+        device scatter for the whole key list; keys overwritten since the
+        search are skipped."""
+        pairs = [
+            self._lane_within(idx)
+            for idx in (self._key_to_slot.get(key) for key in keys)
+            if idx is not None
+        ]
+        if pairs:
+            self.bank.touch_slots([p[0] for p in pairs], [p[1] for p in pairs])
 
     def search(self, q_vecs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         # Q padded to a power-of-two bucket so variable serving batch sizes
         # reuse O(log Q) compiled variants instead of retracing per size
+        self.bank.flush_pending()
         q, n_q = pad_to_bucket(np.atleast_2d(np.asarray(q_vecs, np.float32)))
         self.bank.dispatches += 1
+        self.bank.host_hops += 2
         s, i = self._lookup(self.bank.buf, self.bank.valid, jnp.asarray(q))
         return np.asarray(s)[:n_q], np.asarray(i)[:n_q]
 
@@ -407,19 +422,20 @@ class ShardedVectorStore:
         q = np.atleast_2d(np.asarray(q_vecs, np.float32))
         s, idx = self.search(q)
         k_eff = self.k if k is None else min(k, self.k)
-        now = time.monotonic()
         out: List[List[Tuple[float, tuple]]] = []
+        touched: List[Tuple[int, int]] = []
         for srow, irow in zip(s, idx):
             row = []
             for sc, i in zip(srow, irow):
                 payload = self.payloads[int(i)] if 0 <= int(i) < self.capacity else None
                 if np.isfinite(sc) and payload is not None:
                     if len(row) < k_eff and touch:
-                        lane, within = self._lane_within(int(i))
-                        self.bank.last_access[lane, within] = now
-                        self.bank.access_count[lane, within] += 1
+                        touched.append(self._lane_within(int(i)))
                     row.append((float(sc), payload))
             out.append(row[:k_eff])
+        if touched:
+            # one scatter (one shared tick) for the whole batch's bumps
+            self.bank.touch_slots([p[0] for p in touched], [p[1] for p in touched])
         return out
 
     def lookup_batch(

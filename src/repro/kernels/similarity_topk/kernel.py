@@ -48,11 +48,14 @@ def _topk_block_kernel(db_ref, valid_ref, q_ref, out_s_ref, out_i_ref, *, k: int
         s = jnp.where(col == idx[:, None], NEG, s)
 
 
-def _topk_lanes_kernel(db_ref, valid_ref, q_ref, out_s_ref, out_i_ref, *, k: int, block_n: int):
+def _topk_lanes_kernel(db_ref, valid_ref, q_ref, out_s_ref, out_i_ref, *, k: int,
+                       block_n: int, block_axis: int = 1):
     """Batched-lanes variant: grid (L, nb) — one lane (hierarchy level or DB
     shard) per row of the grid, so L levels x nb blocks stream through VMEM
-    in ONE pallas dispatch instead of L sequential kernel launches."""
-    j = pl.program_id(1)  # block within the lane
+    in ONE pallas dispatch instead of L sequential kernel launches.
+    ``block_axis`` names which grid axis walks the blocks (1 for the default
+    lanes-outer order, 0 for blocks-outer)."""
+    j = pl.program_id(block_axis)  # block within the lane
     db = db_ref[0]  # [block_n, D] (lane-sliced by the BlockSpec)
     q = q_ref[...]  # [Q, D]
     valid = valid_ref[0]  # [block_n, 1] f32 (1.0 = valid)
@@ -77,32 +80,57 @@ def _topk_lanes_kernel(db_ref, valid_ref, q_ref, out_s_ref, out_i_ref, *, k: int
         s = jnp.where(col == idx[:, None], NEG, s)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret", "grid_order"))
 def similarity_topk_lanes_blocks(db, valid_f32, q, *, k: int, block_n: int = 512,
-                                 interpret: bool = True):
+                                 interpret: bool = True,
+                                 grid_order: str = "lanes_outer"):
     """db [L, N, D], valid_f32 [L, N, 1], q [Q, D] -> per-lane per-block
-    candidates (scores [L, nb, Q, k], lane-local idx [L, nb, Q, k])."""
+    candidates (scores [L, nb, Q, k], lane-local idx [L, nb, Q, k]).
+
+    ``grid_order`` picks the grid iteration layout: ``lanes_outer`` walks
+    (L, nb) — all of a lane's blocks stream consecutively — while
+    ``blocks_outer`` walks (nb, L) — block j of every lane before block
+    j+1, which can pipeline better when lanes are few and blocks are many.
+    Sweep both with ``benchmarks/tune_topk.py`` on real hardware; results
+    are identical either way."""
     L, N, D = db.shape
     Q = q.shape[0]
     assert N % block_n == 0, f"N={N} must be a multiple of block_n={block_n}"
     nb = N // block_n
 
-    kernel = functools.partial(_topk_lanes_kernel, k=k, block_n=block_n)
     out_shape = (
         jax.ShapeDtypeStruct((L, nb, Q, k), jnp.float32),
         jax.ShapeDtypeStruct((L, nb, Q, k), jnp.int32),
     )
+    if grid_order == "lanes_outer":
+        grid = (L, nb)
+        block_axis = 1
+        lane_map = lambda l, j: (l, j, 0)  # noqa: E731
+        out_map = lambda l, j: (l, j, 0, 0)  # noqa: E731
+        q_map = lambda l, j: (0, 0)  # noqa: E731
+    elif grid_order == "blocks_outer":
+        grid = (nb, L)
+        block_axis = 0
+        lane_map = lambda j, l: (l, j, 0)  # noqa: E731
+        out_map = lambda j, l: (l, j, 0, 0)  # noqa: E731
+        q_map = lambda j, l: (0, 0)  # noqa: E731
+    else:
+        raise ValueError(f"unknown grid_order {grid_order!r}")
+
+    kernel = functools.partial(
+        _topk_lanes_kernel, k=k, block_n=block_n, block_axis=block_axis
+    )
     return pl.pallas_call(
         kernel,
-        grid=(L, nb),
+        grid=grid,
         in_specs=[
-            pl.BlockSpec((1, block_n, D), lambda l, j: (l, j, 0)),  # lane tile streams
-            pl.BlockSpec((1, block_n, 1), lambda l, j: (l, j, 0)),  # validity tile
-            pl.BlockSpec((Q, D), lambda l, j: (0, 0)),  # queries resident
+            pl.BlockSpec((1, block_n, D), lane_map),  # lane tile streams
+            pl.BlockSpec((1, block_n, 1), lane_map),  # validity tile
+            pl.BlockSpec((Q, D), q_map),  # queries resident
         ],
         out_specs=(
-            pl.BlockSpec((1, 1, Q, k), lambda l, j: (l, j, 0, 0)),
-            pl.BlockSpec((1, 1, Q, k), lambda l, j: (l, j, 0, 0)),
+            pl.BlockSpec((1, 1, Q, k), out_map),
+            pl.BlockSpec((1, 1, Q, k), out_map),
         ),
         out_shape=out_shape,
         interpret=interpret,

@@ -39,6 +39,10 @@ class Request:
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
+    # absolute time.perf_counter() stamp; the engine cancels the request
+    # (freeing its decode slot) once this passes — even mid-generation
+    deadline_t: Optional[float] = None
+    expired: bool = False  # canceled by deadline; out_tokens hold the partial
 
 
 class ServingEngine:
@@ -84,19 +88,29 @@ class ServingEngine:
 
     # -- API --------------------------------------------------------------------
 
-    def submit(self, tokens, max_new_tokens: int = 32, temperature: float = 0.0) -> int:
+    def submit(self, tokens, max_new_tokens: int = 32, temperature: float = 0.0,
+               deadline_t: Optional[float] = None) -> int:
         rid = self._next_rid
         self._next_rid += 1
         self.pending.append(
             Request(rid, np.asarray(tokens, np.int32), max_new_tokens, temperature,
-                    submitted_at=time.perf_counter())
+                    submitted_at=time.perf_counter(), deadline_t=deadline_t)
         )
         self.metrics["requests"] += 1
         return rid
 
+    def _expire(self, req: Request) -> None:
+        req.done = True
+        req.expired = True
+        req.finished_at = time.perf_counter()
+        self.metrics["deadline_cancels"] = self.metrics.get("deadline_cancels", 0) + 1
+
     def _admit(self) -> None:
         while self.pending and self.slots.free:
             req = self.pending.pop(0)
+            if req.deadline_t is not None and time.perf_counter() > req.deadline_t:
+                self._expire(req)  # expired in queue: never claims a slot
+                continue
             slot = self.slots.alloc()
             req.slot = slot
             S = len(req.tokens)
@@ -119,6 +133,18 @@ class ServingEngine:
             self.active[req.rid] = req
 
     def _tick_decode(self) -> None:
+        # deadline cancellation: a request whose deadline passed mid-
+        # generation stops decoding NOW and frees its slot for the next
+        # pending request (capacity is returned to the continuous batch)
+        now = time.perf_counter()
+        expired = [
+            r for r in self.active.values()
+            if r.deadline_t is not None and now > r.deadline_t
+        ]
+        for req in expired:
+            self._expire(req)
+            self.slots.release(req.slot)
+            del self.active[req.rid]
         if not self.active:
             return
         B = self.max_batch
@@ -164,17 +190,30 @@ class ServingEngine:
             self._admit()
             self._tick_decode()
 
-    def generate(self, prompts: List[np.ndarray], max_new_tokens: int = 32,
-                 temperature: float = 0.0) -> List[List[int]]:
-        rids = [self.submit(p, max_new_tokens, temperature) for p in prompts]
-        results: Dict[int, List[int]] = {}
-        reqs = {}
+    def generate_ex(self, prompts: List[np.ndarray], max_new_tokens: int = 32,
+                    temperature: float = 0.0,
+                    deadlines: Optional[List[Optional[float]]] = None) -> List[Request]:
+        """Continuous-batching generation returning the Request records
+        (tokens + expiry state). ``deadlines`` are absolute perf_counter
+        stamps; a request that outlives its deadline mid-generation is
+        canceled — its slot frees immediately for the next pending request
+        and it comes back with ``expired=True`` and the partial tokens."""
+        deadlines = deadlines if deadlines is not None else [None] * len(prompts)
+        rids = [
+            self.submit(p, max_new_tokens, temperature, deadline_t=d)
+            for p, d in zip(prompts, deadlines)
+        ]
         # capture request objects before they are deleted on completion
         snapshot = {r.rid: r for r in self.pending}
         self.run()
-        for rid in rids:
-            results[rid] = snapshot[rid].out_tokens
-        return [results[r] for r in rids]
+        return [snapshot[r] for r in rids]
+
+    def generate(self, prompts: List[np.ndarray], max_new_tokens: int = 32,
+                 temperature: float = 0.0) -> List[List[int]]:
+        return [
+            r.out_tokens
+            for r in self.generate_ex(prompts, max_new_tokens, temperature)
+        ]
 
 
 class ModelBackend(LLMBackend):
@@ -211,20 +250,29 @@ class ModelBackend(LLMBackend):
         return self.generate_batch([prompt], max_tokens, temperature)[0]
 
     def generate_batch(
-        self, prompts: List[str], max_tokens: int = 32, temperature: float = 0.0
+        self, prompts: List[str], max_tokens: int = 32, temperature: float = 0.0,
+        deadlines: Optional[List[Optional[float]]] = None,
     ) -> List[LLMResponse]:
         """Serve the whole miss batch in ONE continuous-batching pass: all
         prompts are submitted up front, so the engine keeps its decode slots
-        full instead of draining one request at a time."""
+        full instead of draining one request at a time. ``deadlines``
+        (absolute perf_counter stamps) propagate into the engine: a request
+        whose deadline passes mid-generation is canceled, frees its decode
+        slot, and resolves with ``expired=True`` (the service maps it to a
+        typed ``deadline_exceeded`` response)."""
         t0 = time.perf_counter()
         if self.engine.cfg.modality == "audio":
             raise NotImplementedError("audio backends serve token streams, not text prompts")
         toks = [self._tokenize(p) for p in prompts]
         with self._lock:
-            outs = self.engine.generate(toks, max_new_tokens=max_tokens, temperature=temperature)
+            reqs = self.engine.generate_ex(
+                toks, max_new_tokens=max_tokens, temperature=temperature,
+                deadlines=deadlines,
+            )
         latency = time.perf_counter() - t0
         return [
-            LLMResponse(" ".join(f"t{t}" for t in out), self.name,
-                        tokens_in=len(tk), tokens_out=len(out), latency_s=latency)
-            for tk, out in zip(toks, outs)
+            LLMResponse(" ".join(f"t{t}" for t in r.out_tokens), self.name,
+                        tokens_in=len(tk), tokens_out=len(r.out_tokens),
+                        latency_s=latency, expired=r.expired)
+            for tk, r in zip(toks, reqs)
         ]

@@ -60,6 +60,15 @@ from repro.serving.coalescer import (  # noqa: F401 — re-exported service erro
 )
 
 
+def _accepts_return_vecs(target) -> bool:
+    """A cache/hierarchy subclass overriding ``lookup_batch`` with the
+    pre-fused signature (no ``return_vecs``) must keep working behind the
+    service — probe the override's own signature once per class."""
+    from repro.core.client import accepts_kwarg
+
+    return accepts_kwarg(type(target), "lookup_batch", "return_vecs")
+
+
 @dataclass
 class _Pending:
     """A submitted request in flight through the service."""
@@ -317,9 +326,11 @@ class CacheService:
     def _lookup_phase(
         self, pendings: List[_Pending]
     ) -> List[Optional[CacheResponse]]:
-        """One embed forward + one batched lookup for the admitted batch;
-        returns a response per hit and None for each miss (vec stashed on
-        the pending for the backfill scatter)."""
+        """One fused read program for the admitted batch (embed -> search ->
+        decide -> touch in a single device dispatch — repro.core.read_path);
+        returns a response per hit and None for each miss. The embeddings
+        come back with the decision tensors and are stashed on the pendings
+        for the dedup/backfill stages — no second forward."""
         client = self.client
         n = len(pendings)
         responses: List[Optional[CacheResponse]] = [None] * n
@@ -330,19 +341,33 @@ class CacheService:
         embed_idx = [i for i, p in enumerate(pendings) if p.request.use_cache]
         if not embed_idx:
             return responses
-        vecs = np.asarray(
-            owner.embed_batch([pendings[i].request.prompt for i in embed_idx])
-        )
-        for j, i in enumerate(embed_idx):
-            pendings[i].vec = vecs[j]
         lk = [i for i in embed_idx if not pendings[i].request.force_fresh]
+        ff = [i for i in embed_idx if pendings[i].request.force_fresh]
+        if ff:
+            # force_fresh skips the lookup but still needs embeddings for
+            # dedup + backfill: a separate forward for the (rare) residue
+            vecs_ff = np.asarray(
+                owner.embed_batch([pendings[i].request.prompt for i in ff])
+            )
+            for j, i in enumerate(ff):
+                pendings[i].vec = vecs_ff[j]
         if not lk:
             return responses
-        cache_results = target.lookup_batch(
-            [pendings[i].request.prompt for i in lk],
-            [client._context_for(pendings[i].request, pendings[i].chosen) for i in lk],
-            vecs=np.stack([pendings[i].vec for i in lk]),
-        )
+        prompts = [pendings[i].request.prompt for i in lk]
+        contexts = [
+            client._context_for(pendings[i].request, pendings[i].chosen) for i in lk
+        ]
+        if _accepts_return_vecs(target):
+            cache_results, vecs = target.lookup_batch(
+                prompts, contexts, return_vecs=True
+            )
+        else:
+            # a cache subclass overriding lookup_batch with the pre-fused
+            # signature: embed here (its own forward) and call it compatibly
+            vecs = np.asarray(owner.embed_batch(prompts))
+            cache_results = target.lookup_batch(prompts, contexts, vecs=vecs)
+        for j, i in enumerate(lk):
+            pendings[i].vec = np.asarray(vecs[j])
         now = time.perf_counter()
         for i, cr in zip(lk, cache_results):
             if not cr.hit:
@@ -465,9 +490,11 @@ class CacheService:
             groups.setdefault(key, []).append(i)
         for (model, max_tokens, temperature), idxs in groups.items():
             prompts = [pendings[i].request.prompt for i in idxs]
+            ddls = [pendings[i].deadline_t for i in idxs]
             try:
                 resps = client._generate_batch_with_failover(
-                    model, prompts, max_tokens, temperature
+                    model, prompts, max_tokens, temperature,
+                    deadlines=ddls if any(d is not None for d in ddls) else None,
                 )
                 if len(resps) != len(idxs):  # fail fast on a short batch
                     raise RuntimeError(
@@ -478,6 +505,17 @@ class CacheService:
                     outcomes[i] = e
                 continue
             for i, resp in zip(idxs, resps):
+                if getattr(resp, "expired", False):
+                    # deadline passed MID-generation: the deadline-aware
+                    # backend canceled the slot; resolve typed, cache nothing
+                    p = pendings[i]
+                    with self._lock:
+                        self.stats.expired += 1
+                    outcomes[i] = CacheResponse(
+                        None, DEADLINE_EXCEEDED, False, None, None, p.chosen, 0.0,
+                        time.perf_counter() - p.t_submit, p.rid,
+                    )
+                    continue
                 cost = client._cost_of(resp.model, resp)
                 resp.cost_usd = cost
                 with self._lock:

@@ -1,0 +1,457 @@
+"""Zero-host-hop read path: the fused embed->search->decide->touch program
+(repro.core.read_path) — ONE-dispatch budget including touches, device-
+counter victim parity with the PR-4 host-numpy counters across lru/lfu/fifo,
+mixed-metric per-lane tags, the in-program encoder forward, counter
+save/load across the tick representation change, the adopt() interpret fix,
+and the REPRO_TOPK_BLOCK_N override."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ContrieverEncoder,
+    GenerativeCache,
+    HierarchicalCache,
+    NgramHashEmbedder,
+    SemanticCache,
+    StoreBank,
+)
+from repro.core.vector_store import InMemoryVectorStore
+from repro.kernels.similarity_topk import ops as st_ops
+
+Q1 = "What is an application-level denial of service attack?"
+Q2 = "What are the most effective techniques for defending against denial-of-service attacks?"
+Q3 = ("What is an application-level denial of service attack, and what are the "
+      "most effective techniques for defending against such attacks?")
+QA = "How does the attention mechanism work in transformers?"
+QB = "What is the best recipe for chocolate cake?"
+PROBES = [QA, Q1, Q2, Q3, "completely unrelated gardening question"]
+
+DIM = 8
+
+
+@pytest.fixture
+def emb():
+    return NgramHashEmbedder()
+
+
+def _gc(emb, **kw):
+    kw.setdefault("threshold", 0.85)
+    kw.setdefault("t_single", 0.45)
+    kw.setdefault("t_combined", 1.0)
+    return GenerativeCache(emb, **kw)
+
+
+def _hier(emb, *, fused=True, device_decide=True, use_pallas=False, metrics=None,
+          n_peers=1):
+    metrics = metrics or ["cosine"] * (2 + n_peers)
+    levels = [
+        _gc(emb, capacity=64, use_pallas=use_pallas, metric=m)
+        for m in metrics[: 2 + n_peers]
+    ]
+    for cache, (q, a) in zip(levels, [(QA, "ATT"), (Q1, "A1"), (Q2, "A2"), (QB, "CAKE")]):
+        cache.insert(q, a)
+    return HierarchicalCache(
+        levels[0], levels[1], peers=levels[2:], fused=fused,
+        device_decide=device_decide,
+    )
+
+
+def _assert_results_equal(fused_rs, loop_rs):
+    for rf, rl in zip(fused_rs, loop_rs):
+        assert rf.hit == rl.hit
+        assert rf.level == rl.level
+        assert rf.generative == rl.generative
+        assert rf.response == rl.response
+        assert rf.similarity == pytest.approx(rl.similarity, abs=1e-5)
+        assert rf.combined_similarity == pytest.approx(rl.combined_similarity, abs=1e-5)
+
+
+# -- one-dispatch budget -------------------------------------------------------
+
+
+def test_fused_lookup_is_one_dispatch_including_touches(emb):
+    """Acceptance: a 3-level hierarchy lookup_batch — embed, search, decide,
+    winner walk AND the LRU/LFU touches — is exactly ONE device dispatch:
+    one bank dispatch, zero standalone counter scatters, zero host hops."""
+    h = _hier(emb, use_pallas=True)
+    h.ensure_bank()
+    bank = h._shared_bank
+    assert bank is not None and bank.use_pallas
+    h.lookup_batch(PROBES)  # warm: adoption flushes + program compile
+    st_ops.reset_dispatch_count()
+    before = (bank.dispatches, bank.counter_scatters, bank.host_hops)
+    rs = h.lookup_batch(PROBES)
+    assert any(r.hit for r in rs)
+    assert st_ops.dispatch_count() == 1  # the whole read path: ONE kernel call
+    assert bank.dispatches - before[0] == 1
+    assert bank.counter_scatters - before[1] == 0  # touches rode the program
+    assert bank.host_hops - before[2] == 0  # nothing crossed between stages
+
+
+def test_fused_lookup_one_dispatch_jnp_path(emb):
+    h = _hier(emb, use_pallas=False)
+    h.ensure_bank()
+    bank = h._shared_bank
+    h.lookup_batch(PROBES)
+    before = (bank.dispatches, bank.counter_scatters)
+    h.lookup_batch(PROBES)
+    assert bank.dispatches - before[0] == 1
+    assert bank.counter_scatters - before[1] == 0
+
+
+def test_solo_cache_lookup_batch_is_one_dispatch(emb):
+    c = _gc(emb, capacity=32)
+    c.insert(Q1, "A1")
+    c.lookup_batch(PROBES)  # warm
+    bank = c.store._bank
+    before = (bank.dispatches, bank.counter_scatters)
+    c.lookup_batch([QA, Q1])
+    assert bank.dispatches - before[0] == 1
+    assert bank.counter_scatters - before[1] == 0
+
+
+# -- device-counter parity with the PR-4 host-numpy counters -------------------
+
+
+def unit(i: int) -> np.ndarray:
+    v = np.zeros(DIM, np.float32)
+    v[i] = 1.0
+    return v
+
+
+class _HostCounterRef:
+    """Reference implementation of the PR-4 host-side counters: numpy
+    arrays bumped by an event loop with one stamp per touch event (the
+    time.monotonic() semantics, as a strictly increasing event clock)."""
+
+    def __init__(self, capacity):
+        self.last = np.zeros(capacity, np.float64)
+        self.count = np.zeros(capacity, np.int64)
+        self.seq = np.zeros(capacity, np.int64)
+        self._event = 0.0
+        self._seq = 0
+
+    def insert(self, idx):
+        self._event += 1.0
+        self.last[idx] = self._event
+        self.count[idx] = 0
+        self.seq[idx] = self._seq
+        self._seq += 1
+
+    def touch(self, idxs):
+        self._event += 1.0
+        for i in idxs:
+            self.last[i] = self._event
+            self.count[i] += 1
+
+    def victim(self, eviction):
+        key = {"lru": self.last, "lfu": self.count, "fifo": self.seq}[eviction]
+        return int(np.argmin(key))
+
+
+@pytest.mark.parametrize("eviction", ["lru", "lfu", "fifo"])
+def test_device_counters_match_host_reference_victims(eviction):
+    """Same traffic -> same victims: the bank's device counters (tick
+    last_access, scatter-add access_count) agree with the PR-4 host numpy
+    counter semantics for every policy."""
+    cap = 4
+    store = InMemoryVectorStore(DIM, capacity=cap, eviction=eviction)
+    ref = _HostCounterRef(cap)
+    for i in range(cap):
+        store.add(unit(i), f"q{i}", f"a{i}")
+        ref.insert(i)
+    for probe, k in [(0, 1), (0, 2), (3, 1), (1, 1)]:
+        rows = store.search_batch(unit(probe)[None], k=k)[0]
+        ref.touch([store._key_to_slot[e.key] for _, e in rows])
+    for j in range(3):  # three evictions, re-deriving the victim each time
+        expected = ref.victim(eviction)
+        assert store._victim() == expected
+        store.add(unit((cap + j) % DIM), f"n{j}", f"na{j}")
+        ref.insert(expected)
+
+
+@pytest.mark.parametrize("eviction", ["lru", "lfu", "fifo"])
+def test_fused_touches_match_pr4_host_walk_victims(emb, eviction):
+    """Acceptance: eviction is bit-identical to PR 4 — the same traffic
+    through the fused device-touch path and through the PR-4 banked
+    host-decide walk (device_decide=False) leaves identical counters and
+    identical victims on every level."""
+    def build(device_decide):
+        l1 = _gc(emb, capacity=3, eviction=eviction)
+        l2 = _gc(emb, capacity=3, eviction=eviction)
+        for c in (l1, l2):
+            c.insert(QA, "ATT")
+            c.insert(Q1, "A1")
+            c.insert(QB, "CAKE")
+        return HierarchicalCache(l1, l2, promote=False, device_decide=device_decide)
+
+    hf, hs = build(True), build(False)
+    hf.ensure_bank()
+    hs.ensure_bank()
+    for probe in [QA, Q2, QA, QB]:
+        hf.lookup_batch([probe])
+        hs.lookup_batch([probe])
+    for a, b in zip(hf._levels(), hs._levels()):
+        np.testing.assert_array_equal(
+            a[1].store._access_count, b[1].store._access_count
+        )
+    for h in (hf, hs):
+        h.l1.insert(Q3, "NEW")  # forces one eviction per hierarchy
+    live_f = sorted(e.query for e in hf.l1.store._entries if e)
+    live_s = sorted(e.query for e in hs.l1.store._entries if e)
+    assert live_f == live_s
+
+
+# -- mixed-metric per-lane tags ------------------------------------------------
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_mixed_cosine_dot_hierarchy_fused_matches_loop(emb, use_pallas):
+    """cosine + dot levels share one bank (per-lane metric tags) and the
+    fused read matches the per-level loop decision-for-decision. (NgramHash
+    embeddings are unit vectors, so dot == cosine numerically and the same
+    thresholds are meaningful on both lanes.)"""
+    metrics = ["cosine", "dot", "cosine"]
+    hf = _hier(emb, metrics=metrics, n_peers=1, use_pallas=use_pallas)
+    hl = _hier(emb, metrics=metrics, n_peers=1, fused=False, use_pallas=use_pallas)
+    assert hf.ensure_bank() is not None  # mixed metrics no longer fall back
+    assert hf._shared_bank.metrics == tuple(metrics)
+    _assert_results_equal(hf.lookup_batch(PROBES), hl.lookup_batch(PROBES))
+
+
+def test_mixed_metric_with_euclidean_uses_jnp_program(emb):
+    """euclidean lanes cannot ride the kernel, but the jnp fused program
+    still covers the mix in one dispatch."""
+    metrics = ["cosine", "euclidean"]
+    hf = _hier(emb, metrics=metrics, n_peers=0)
+    hl = _hier(emb, metrics=metrics, n_peers=0, fused=False)
+    bank = hf.ensure_bank()
+    assert bank is not None
+    before = bank.dispatches
+    rf = hf.lookup_batch(PROBES)
+    assert bank.dispatches - before == 1
+    _assert_results_equal(rf, hl.lookup_batch(PROBES))
+
+
+def test_lanes_kernel_mixed_metric_tags_match_per_lane_calls():
+    """similarity_topk_lanes with per-lane tags == per-lane single calls."""
+    rng = np.random.default_rng(0)
+    L, N, D, Q, k = 3, 200, 32, 5, 4
+    metrics = ("cosine", "dot", "cosine")
+    db = rng.normal(size=(L, N, D)).astype(np.float32)
+    # the mixed path requires unit cosine rows (the bank's insert invariant)
+    for li, m in enumerate(metrics):
+        if m == "cosine":
+            db[li] /= np.linalg.norm(db[li], axis=-1, keepdims=True)
+    valid = rng.random((L, N)) < 0.9
+    q = rng.normal(size=(Q, D)).astype(np.float32)
+    s, i = st_ops.similarity_topk_lanes(
+        db, valid, q, k=k, metric=metrics, prenormalized=True
+    )
+    for li, m in enumerate(metrics):
+        s1, i1 = st_ops.similarity_topk(db[li], valid[li], q, k=k, metric=m)
+        assert np.array_equal(np.asarray(i[:, li]), np.asarray(i1))
+        np.testing.assert_allclose(
+            np.asarray(s[:, li]), np.asarray(s1), atol=3e-5, rtol=3e-5
+        )
+
+
+# -- in-program encoder forward ------------------------------------------------
+
+
+def test_contriever_in_program_forward_matches_embed_batch():
+    """The fused program's in-jit encoder forward decides like the two-stage
+    embed_batch -> search pipeline (same tokens, same weights)."""
+    from repro.configs.contriever import smoke
+
+    enc = ContrieverEncoder(smoke())
+    cf = _gc(enc, capacity=16)
+    cl = _gc(enc, capacity=16)
+    for c in (cf, cl):
+        c.insert(Q1, "A1")
+        c.insert(QB, "CAKE")
+    # baseline: force the host path by pre-embedding
+    rl = cl.lookup_batch(list(PROBES), vecs=enc.embed_batch(list(PROBES)))
+    rf = cf.lookup_batch(list(PROBES))
+    for a, b in zip(rf, rl):
+        assert a.hit == b.hit and a.response == b.response
+        assert a.similarity == pytest.approx(b.similarity, abs=1e-4)
+
+
+# -- counter persistence across the representation change ----------------------
+
+
+def test_save_load_roundtrips_tick_counters(tmp_path, emb):
+    store = InMemoryVectorStore(emb.dim, capacity=4, eviction="lru")
+    ks = [store.add(emb.embed_one(q), q, f"a{i}") for i, q in enumerate([QA, Q1, Q2])]
+    store.search(emb.embed_one(QA), k=1)  # QA most recent
+    store.save(str(tmp_path / "s"))
+    s2 = InMemoryVectorStore.load(str(tmp_path / "s"))
+    np.testing.assert_array_equal(s2._last_access, store._last_access)
+    np.testing.assert_array_equal(s2._access_count, store._access_count)
+    np.testing.assert_array_equal(s2._insert_seq, store._insert_seq)
+    # post-load traffic keeps ordering: new events outrank every loaded tick
+    s2.search(emb.embed_one(Q2), k=1)
+    s2.add(emb.embed_one(Q3), Q3, "new")  # fills the last free slot
+    s2.add(emb.embed_one(QB), QB, "cake")  # evicts Q1 (least recent)
+    live = {e.query for e in s2._entries if e is not None}
+    assert live == {QA, Q2, Q3, QB}
+    assert ks[1] not in {e.key for e in s2._entries if e is not None}
+
+
+def test_legacy_float_counter_snapshot_rank_transforms(tmp_path, emb):
+    """A PR-4 snapshot stores float64 time.monotonic() stamps; the loader
+    rank-transforms them into ticks, preserving victim order."""
+    import json
+    import os
+
+    store = InMemoryVectorStore(emb.dim, capacity=3, eviction="lru")
+    for i, q in enumerate([QA, Q1, Q2]):
+        store.add(emb.embed_one(q), q, f"a{i}")
+    store.search(emb.embed_one(QA), k=1)
+    path = str(tmp_path / "legacy")
+    store.save(path)
+    # forge the legacy format: float stamps, no counter_rep flag
+    with open(os.path.join(path, "manifest.json")) as f:
+        m = json.load(f)
+    m.pop("counter_rep", None)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(m, f)
+    z = dict(np.load(os.path.join(path, "vectors.npz")))
+    base = 98765.4321  # monotonic-clock-looking stamps, same ordering
+    z["last_access"] = base + np.asarray(z["last_access"], np.float64) * 0.001
+    np.savez(os.path.join(path, "vectors.npz"), **z)
+    s2 = InMemoryVectorStore.load(path)
+    assert s2._last_access.dtype == np.int32
+    s2.add(emb.embed_one(QB), QB, "cake")  # LRU victim must be Q1 (slot 1)
+    live = {e.query for e in s2._entries if e is not None}
+    assert live == {QA, Q2, QB}
+
+
+def test_mixed_metric_pallas_host_decide_tier(emb):
+    """The banked HOST-decide tier (device_decide=False) must also serve a
+    mixed cosine/dot bank under use_pallas — search_lanes passes the unit-
+    cosine-rows invariant through to the kernel instead of crashing."""
+    metrics = ["cosine", "dot"]
+    hh = _hier(emb, metrics=metrics, n_peers=0, use_pallas=True,
+               device_decide=False)
+    hl = _hier(emb, metrics=metrics, n_peers=0, use_pallas=True, fused=False)
+    assert hh.ensure_bank() is not None and hh._shared_bank.use_pallas
+    _assert_results_equal(hh.lookup_batch(PROBES), hl.lookup_batch(PROBES))
+
+
+def test_add_batch_eviction_issues_no_standalone_counter_scatters(emb):
+    """Victim selection between claims inside one add_batch reads the clean
+    host mirror — the insert-counter resets ride the single row scatter,
+    with zero standalone counter dispatches."""
+    s = InMemoryVectorStore(DIM, capacity=4, eviction="lru")
+    s.add_batch(np.stack([unit(i) for i in range(4)]),
+                [f"q{i}" for i in range(4)], [f"a{i}" for i in range(4)])
+    before = s._bank.counter_scatters
+    s.add_batch(np.stack([unit(i % DIM) for i in range(8)]),  # full: 8 evictions
+                [f"n{i}" for i in range(8)], [f"na{i}" for i in range(8)])
+    assert s._bank.counter_scatters == before
+
+
+def test_service_supports_legacy_lookup_batch_override(emb):
+    """A cache subclass still overriding lookup_batch with the pre-fused
+    signature (no return_vecs) keeps working behind CacheService."""
+    from repro.core import EnhancedClient, MockLLM
+
+    class LegacyCache(GenerativeCache):
+        def lookup_batch(self, queries, contexts=None, vecs=None):
+            return super().lookup_batch(queries, contexts, vecs)
+
+    cache = LegacyCache(emb, threshold=0.85, t_single=0.45, t_combined=1.0)
+    cache.insert(Q1, "A1")
+    client = EnhancedClient(cache=cache)
+    client.register_backend(MockLLM("m1"))
+    rs = client.complete_batch([Q1, QB])
+    assert rs[0].from_cache and rs[0].text == "A1"
+    assert not rs[1].from_cache
+    client.close()
+
+
+def test_tick_clock_compacts_before_int32_overflow(emb):
+    """The logical event clock renumbers (rank transform) near INT32_MAX
+    instead of overflowing; relative recency — and therefore the LRU
+    victim — survives compaction."""
+    from repro.core.store_bank import _TICK_COMPACT_AT
+
+    s = InMemoryVectorStore(DIM, capacity=3, eviction="lru")
+    for i in range(3):
+        s.add(unit(i), f"q{i}", f"a{i}")
+    s.search(unit(0), k=1)  # entry 0 most recent; entry 1 is the LRU victim
+    s._bank._tick = _TICK_COMPACT_AT  # fast-forward ~2B events
+    s.search(unit(2), k=1)  # triggers compaction, then touches entry 2
+    assert s._bank._tick < 10  # clock restarted near zero
+    s.add(unit(3), "q3", "a3")
+    live = {e.query for e in s._entries if e is not None}
+    assert live == {"q0", "q2", "q3"}  # q1 still the victim after renumbering
+
+
+# -- adopt(): interpret override threading -------------------------------------
+
+
+def test_adopt_preserves_shared_interpret_override(emb):
+    stores = [InMemoryVectorStore(emb.dim, capacity=8) for _ in range(2)]
+    for s in stores:
+        s._bank.interpret = False  # explicit compiled override on every lane
+    bank = StoreBank.adopt(stores)
+    assert bank.interpret is False
+    # disagreement (or any None) falls back to auto-selection
+    stores2 = [InMemoryVectorStore(emb.dim, capacity=8) for _ in range(2)]
+    stores2[0]._bank.interpret = True
+    bank2 = StoreBank.adopt(stores2)
+    assert bank2.interpret is None
+
+
+# -- REPRO_TOPK_BLOCK_N override -----------------------------------------------
+
+
+def test_topk_block_n_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_TOPK_BLOCK_N", "256")
+    assert st_ops.default_block_n() == 256
+    monkeypatch.setenv("REPRO_TOPK_BLOCK_N", "100")
+    with pytest.raises(ValueError):
+        st_ops.default_block_n()
+    monkeypatch.delenv("REPRO_TOPK_BLOCK_N")
+    assert st_ops.default_block_n() == 512
+
+
+def test_topk_grid_orders_agree():
+    rng = np.random.default_rng(3)
+    L, N, D, Q, k = 2, 512, 16, 3, 4
+    db = rng.normal(size=(L, N, D)).astype(np.float32)
+    valid = np.ones((L, N), bool)
+    q = rng.normal(size=(Q, D)).astype(np.float32)
+    s_a, i_a = st_ops.similarity_topk_lanes(
+        db, valid, q, k=k, block_n=128, grid_order="lanes_outer"
+    )
+    s_b, i_b = st_ops.similarity_topk_lanes(
+        db, valid, q, k=k, block_n=128, grid_order="blocks_outer"
+    )
+    np.testing.assert_allclose(np.asarray(s_a), np.asarray(s_b), atol=1e-6)
+    assert np.array_equal(np.asarray(i_a), np.asarray(i_b))
+
+
+# -- serving integration -------------------------------------------------------
+
+
+def test_service_lookup_rides_fused_program(emb):
+    """The CacheService micro-batch stage calls the fused program: one bank
+    dispatch per admitted batch, embeddings reused for backfill."""
+    from repro.core import EnhancedClient, MockLLM
+
+    h = _hier(emb)
+    client = EnhancedClient(hierarchy=h)
+    client.register_backend(MockLLM("m1"))
+    svc = client.service
+    bank = h._shared_bank
+    assert bank is not None  # prewarmed at service construction
+    client.complete_batch([QA, Q1])  # warm
+    before = bank.dispatches
+    rs = client.complete_batch([QA, "never seen before query"])
+    assert bank.dispatches - before == 1
+    assert rs[0].from_cache and not rs[1].from_cache
+    svc.close()
