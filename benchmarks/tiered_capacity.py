@@ -1,0 +1,247 @@
+"""Tiered capacity + entry lifecycle: what the TTL machinery costs and what
+the host-RAM tier buys.
+
+Three measurements over the same banked store layout:
+
+  * tier0_hit_latency — fused read-path hit latency with lifecycle OFF
+    (TTL-free deployments compile the exact PR-5 program) vs lifecycle ON
+    (expiry mask + staleness rescoring + in-program re-sort). CI gates the
+    overhead at <=10%: TTL support must not tax the hot path.
+  * promotion_throughput — tier-1 consult rate: a working set larger than
+    the device bank, probed uniformly; every tier-0 miss pops its winner
+    out of the host ring and rides one batched restore scatter back into
+    the bank. Reported as promoted entries/second.
+  * working_set_4x — the acceptance bar: a working set 4x the device
+    capacity keeps serving (hit fraction 1.0, responses byte-identical to
+    what was inserted), with the dataflow counters proving the tier-0 hot
+    path is still ONE dispatch with ZERO host hops even with TTL active.
+
+Results land in ``BENCH_tiered_capacity.json``.
+
+Run:  PYTHONPATH=src python benchmarks/tiered_capacity.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import emit  # noqa: E402
+from repro.core import NgramHashEmbedder, SemanticCache  # noqa: E402
+from repro.core.tiers import HostRamTier  # noqa: E402
+from repro.core.vector_store import InMemoryVectorStore  # noqa: E402
+
+DIM = 256
+
+
+def _unit(rng, n, dim):
+    v = rng.normal(size=(n, dim)).astype(np.float32)
+    return v / np.linalg.norm(v, axis=1, keepdims=True)
+
+
+def _median_pair(fn_a, fn_b, repeats):
+    """Interleaved a/b samples so machine-load drift biases neither."""
+    ta, tb = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn_a()
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        tb.append(time.perf_counter() - t0)
+    ta.sort()
+    tb.sort()
+    return ta[len(ta) // 2], tb[len(tb) // 2]
+
+
+def _filled_cache(emb, n_entries, capacity, vecs, *, ttl_s=None, staleness=0.0):
+    store = InMemoryVectorStore(emb.dim, capacity=capacity,
+                                staleness_weight=staleness)
+    cache = SemanticCache(emb, threshold=0.85, store=store)
+    queries = [f"corpus entry {i} about topic {i % 17}" for i in range(n_entries)]
+    responses = [f"answer {i}" for i in range(n_entries)]
+    kw = {"ttls": [ttl_s] * n_entries} if ttl_s is not None else {}
+    cache.insert_batch(queries, responses, vecs=vecs, **kw)
+    return cache
+
+
+def bench_tier0_hit_latency(batch_sizes, n_entries, capacity, repeats) -> dict:
+    """Fused hit path, lifecycle off (PR-5 program) vs on (expiry mask +
+    staleness rescoring). Same rows, same probes."""
+    emb = NgramHashEmbedder(DIM)
+    rng = np.random.default_rng(0)
+    vecs = _unit(rng, n_entries, DIM)
+    plain = _filled_cache(emb, n_entries, capacity, vecs)
+    lc = _filled_cache(emb, n_entries, capacity, vecs, ttl_s=3600.0,
+                       staleness=0.1)
+    assert not plain.store._bank.lifecycle_active()
+    assert lc.store._bank.lifecycle_active()
+
+    out = {}
+    for b in batch_sizes:
+        rng2 = np.random.default_rng(7)
+        probes = []
+        for j in range(b):  # ~2/3 near-duplicates of stored rows, ~1/3 novel
+            if j % 3 < 2:
+                v = vecs[j % 11] + 0.03 * rng2.normal(size=DIM).astype(np.float32)
+            else:
+                v = rng2.normal(size=DIM).astype(np.float32)
+            probes.append(v / np.linalg.norm(v))
+        probes = np.stack(probes).astype(np.float32)
+        queries = [f"probe {j}" for j in range(b)]
+
+        def run_plain():
+            return plain.lookup_batch(queries, vecs=probes)
+
+        def run_lc():
+            return lc.lookup_batch(queries, vecs=probes)
+
+        ref, got = run_plain(), run_lc()  # warm both programs
+        for x, y in zip(ref, got):  # fresh entries: lifecycle must not flip
+            assert (x.hit, x.response) == (y.hit, y.response), (x, y)
+        plain_s, lc_s = _median_pair(run_plain, run_lc, repeats)
+        out[f"b{b}"] = {
+            "plain_ms": plain_s * 1e3,
+            "lifecycle_ms": lc_s * 1e3,
+            "overhead": lc_s / plain_s,
+            "hit_fraction": sum(1 for r in got if r.hit) / b,
+        }
+        emit(f"tier0_hit_b{b}", lc_s * 1e6,
+             f"vs plain {plain_s * 1e6:.0f}us = {lc_s / plain_s:.2f}x")
+
+    # dataflow: TTL active, the hot path is still 1 dispatch / 0 host hops
+    bank = lc.store._bank
+    d0, h0 = bank.dispatches, bank.host_hops
+    lc.lookup_batch(queries, vecs=probes)
+    out["dataflow"] = {
+        "dispatches": bank.dispatches - d0,
+        "host_hops_between_embed_and_decide": bank.host_hops - h0,
+    }
+    return out
+
+
+def bench_promotion_throughput(capacity, working_factor, batch, rounds) -> dict:
+    """Uniform probes over a working set ``working_factor``x the device
+    bank: misses consult the host ring, winners promote back via one
+    batched restore scatter per lookup batch."""
+    emb = NgramHashEmbedder(DIM)
+    n = working_factor * capacity
+    tier = HostRamTier(emb.dim, capacity=2 * n)
+    store = InMemoryVectorStore(emb.dim, capacity=capacity, tier1=tier)
+    cache = SemanticCache(emb, threshold=0.85, store=store)
+    rng = np.random.default_rng(3)
+    vecs = _unit(rng, n, DIM)
+    queries = [f"working set entry {i} topic {i % 29}" for i in range(n)]
+    cache.insert_batch(queries, [f"answer {i}" for i in range(n)], vecs=vecs)
+    cache.lookup_batch(queries[:batch], vecs=vecs[:batch])  # warm/compile
+
+    order = rng.permutation(n)
+    p0 = tier.promotions
+    misses = 0
+    t0 = time.perf_counter()
+    served = 0
+    for r in range(rounds):
+        sel = order[(r * batch) % n:(r * batch) % n + batch]
+        if len(sel) < batch:
+            sel = order[:batch]
+        rs = cache.lookup_batch([queries[i] for i in sel], vecs=vecs[sel])
+        served += len(rs)
+        misses += sum(1 for x in rs if not x.hit)
+    dt = time.perf_counter() - t0
+    promoted = tier.promotions - p0
+    assert misses == 0, f"{misses} unservable probes with tier 1 attached"
+    emit("promotion_throughput", dt / max(promoted, 1) * 1e6,
+         f"{promoted / dt:.0f} promotions/s over {served} lookups")
+    return {
+        "promotions": promoted,
+        "promotions_per_s": promoted / dt,
+        "lookups": served,
+        "elapsed_s": dt,
+        "tier1_hit_fraction": promoted / served,
+    }
+
+
+def bench_working_set_4x(capacity, batch) -> dict:
+    """Acceptance bar: 4x the device capacity, every entry servable,
+    responses byte-identical to what was inserted."""
+    emb = NgramHashEmbedder(DIM)
+    n = 4 * capacity
+    tier = HostRamTier(emb.dim, capacity=2 * n)
+    store = InMemoryVectorStore(emb.dim, capacity=capacity, tier1=tier)
+    cache = SemanticCache(emb, threshold=0.85, store=store)
+    rng = np.random.default_rng(5)
+    vecs = _unit(rng, n, DIM)
+    queries = [f"4x entry {i} subject {i % 31}" for i in range(n)]
+    responses = [f"payload {i}" for i in range(n)]
+    cache.insert_batch(queries, responses, vecs=vecs)
+
+    hits, identical = 0, 0
+    for start in range(0, n, batch):
+        sel = list(range(start, min(start + batch, n)))
+        rs = cache.lookup_batch([queries[i] for i in sel], vecs=vecs[sel])
+        for i, r in zip(sel, rs):
+            hits += int(r.hit)
+            identical += int(r.hit and r.response == responses[i])
+    emit("working_set_4x", 0.0,
+         f"hit {hits}/{n}, byte-identical {identical}/{n}")
+    return {
+        "working_set": n,
+        "device_capacity": capacity,
+        "hit_fraction": hits / n,
+        "byte_identical_fraction": identical / n,
+        "tier1_hits": cache.stats.tier1_hits,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    args = ap.parse_args()
+
+    if args.smoke:
+        batch_sizes, n_entries, capacity, repeats = [8, 64], 512, 1024, 15
+        prom_cap, prom_rounds = 256, 24
+    else:
+        batch_sizes, n_entries, capacity, repeats = [1, 8, 64, 256], 512, 1024, 25
+        prom_cap, prom_rounds = 1024, 48
+
+    results = {
+        "config": {"dim": DIM, "batch_sizes": batch_sizes,
+                   "n_entries": n_entries, "capacity": capacity,
+                   "repeats": repeats},
+        "tier0_hit_latency": bench_tier0_hit_latency(
+            batch_sizes, n_entries, capacity, repeats),
+        "promotion_throughput": bench_promotion_throughput(
+            prom_cap, 4, 64, prom_rounds),
+        "working_set_4x": bench_working_set_4x(prom_cap, 64),
+    }
+    b_gate = 64 if 64 in batch_sizes else batch_sizes[-1]
+    gate = results["tier0_hit_latency"][f"b{b_gate}"]
+    results["tier0_hit_overhead_at_64"] = gate["overhead"]
+    results["tier0_hit_p50_ms"] = gate["lifecycle_ms"]
+    flow = results["tier0_hit_latency"]["dataflow"]
+    results["fused_dispatches_per_batch"] = flow["dispatches"]
+    results["fused_host_hops"] = flow["host_hops_between_embed_and_decide"]
+
+    path = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "BENCH_tiered_capacity.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"\nwrote {path}")
+    print(f"tier-0 hit overhead with lifecycle active at batch {b_gate}: "
+          f"{results['tier0_hit_overhead_at_64']:.3f}x "
+          f"(dispatches={results['fused_dispatches_per_batch']}, "
+          f"host hops={results['fused_host_hops']}); "
+          f"promotions/s={results['promotion_throughput']['promotions_per_s']:.0f}; "
+          f"4x working set hit fraction="
+          f"{results['working_set_4x']['hit_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,4 +31,5 @@ from repro.core.request import (  # noqa: F401
 )
 from repro.core.semantic_cache import CacheResult, GPTCacheLike, SemanticCache  # noqa: F401
 from repro.core.store_bank import StoreBank  # noqa: F401
+from repro.core.tiers import HostRamTier, SnapshotTier, TierEntry  # noqa: F401
 from repro.core.vector_store import Entry, InMemoryVectorStore  # noqa: F401

@@ -76,6 +76,11 @@ class GenerativeCache(SemanticCache):
                 self.insert(query, response, {"generative": True}, vec=vec)
             return CacheResult(True, response, best, combined, True, X, t_s,
                                time.perf_counter() - t_start, "generative")
+        promoted = self.consult_tier1([query], np.asarray(vec)[None], [t_s], [0])
+        if 0 in promoted:
+            r = promoted[0]
+            r.latency_s = time.perf_counter() - t_start
+            return r
         return CacheResult(False, None, best, combined, False, X, t_s,
                            time.perf_counter() - t_start)
 

@@ -267,6 +267,21 @@ class HierarchicalCache:
             out, promotions, l2_copies, deferred = self._decide_host(
                 queries, contexts, thr, levels, ks, vecs, bank
             )
+        # residual misses consult each level's host-RAM demotion tier, in the
+        # same L1 > L2 > peers priority as tier 0 (host-side; the fused
+        # dispatch above is untouched). A tier-1 winner promotes into its own
+        # level's device lane, and — like any lower-level winner — into L1.
+        for li, (name, cache) in enumerate(levels):
+            rows = [i for i in range(n) if out[i] is None]
+            if not rows:
+                break
+            for i, res in cache.consult_tier1(queries, vecs, thr[:, li], rows).items():
+                res.level = f"{name}:{res.level}"
+                if self.promote and cache is not self.l1:
+                    promotions.append((i, res.response, name))
+                    if self.inclusive and self.l2 is not None and cache is not self.l2:
+                        l2_copies.append((i, res.response, name))
+                out[i] = res
         self._apply_writebacks(queries, vecs, promotions, l2_copies, deferred)
         per_query_s = (time.perf_counter() - t0) / n
         for i in range(n):
@@ -525,6 +540,7 @@ class HierarchicalCache:
         cache_l1: bool = True,
         cache_l2: bool = True,
         vec: Optional[np.ndarray] = None,
+        ttl_s: Optional[float] = None,
     ) -> None:
         """Privacy hints (§4): callers may exclude either level.
 
@@ -534,9 +550,9 @@ class HierarchicalCache:
         if vec is None:
             vec = self.l1.embed(query)
         if cache_l1:
-            self.l1.insert(query, response, meta, vec=vec)
+            self.l1.insert(query, response, meta, vec=vec, ttl_s=ttl_s)
         if cache_l2 and self.l2 is not None:
-            self.l2.insert(query, response, meta, vec=vec)
+            self.l2.insert(query, response, meta, vec=vec, ttl_s=ttl_s)
 
     def insert_batch(
         self,
@@ -546,6 +562,7 @@ class HierarchicalCache:
         cache_l1: bool = True,
         cache_l2: bool = True,
         vecs: Optional[np.ndarray] = None,
+        ttls: Optional[List[Optional[float]]] = None,
     ) -> None:
         """Batched ``insert``: one embed forward + one scatter per level the
         privacy hints allow (same veto semantics as ``insert``)."""
@@ -555,6 +572,11 @@ class HierarchicalCache:
             vecs = self.l1.embed_batch(list(queries))
         vecs = np.asarray(vecs)
         if cache_l1:
-            self.l1.insert_batch(list(queries), list(responses), metas, vecs=vecs)
+            self.l1.insert_batch(list(queries), list(responses), metas, vecs=vecs, ttls=ttls)
         if cache_l2 and self.l2 is not None:
-            self.l2.insert_batch(list(queries), list(responses), metas, vecs=vecs)
+            self.l2.insert_batch(list(queries), list(responses), metas, vecs=vecs, ttls=ttls)
+
+    def clear(self, older_than: Optional[float] = None) -> int:
+        """Prune every level (tier-1 rings included). Returns total entries
+        dropped across levels."""
+        return sum(cache.clear(older_than=older_than) for _, cache in self._levels())

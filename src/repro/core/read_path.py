@@ -112,7 +112,7 @@ class ReadDecision:
 def _build_program(forward, specs: Tuple[LevelSpec, ...], K: int,
                    metrics: Tuple[str, ...], prenorm: Tuple[bool, ...],
                    use_pallas: bool, interpret: bool, block_n: int,
-                   grid_order: str):
+                   grid_order: str, lifecycle: bool = False):
     """Compile-cached fused read program. Keyed on the forward fn identity
     (stable per embedder instance — host embedders share one module-level
     identity forward), the level specs, and the bank layout; jax.jit adds
@@ -130,19 +130,19 @@ def _build_program(forward, specs: Tuple[LevelSpec, ...], K: int,
     sec_l = np.asarray([(not s.generative) or s.secondary for s in specs])
     mixed = len(set(metrics)) > 1
 
-    def program(embed_args, thresholds, qmask, buf, valid, last, cnt, tick):
-        q = forward(*embed_args)  # [B, D] — embeds never leave the device
+    def search(q, buf, valid):
         if use_pallas:
             from repro.kernels.similarity_topk.ops import _similarity_topk_lanes
 
-            s, idx = _similarity_topk_lanes(
+            return _similarity_topk_lanes(
                 buf, valid, q, k=K, metric=metrics, block_n=block_n,
                 interpret=interpret,
                 prenormalized=True if mixed else all(prenorm),
                 grid_order=grid_order,
             )
-        else:
-            s, idx = fused_search_body(buf, valid, q, K, metrics, prenorm)
+        return fused_search_body(buf, valid, q, K, metrics, prenorm)
+
+    def decide_and_touch(s, idx, thresholds, qmask, last, cnt, tick):
         # -- decide: the _decide_batch semantics as [B, L] masks -------------
         colK = jnp.arange(K)
         finite = s > jnp.float32(_NEG_FINITE)
@@ -174,9 +174,47 @@ def _build_program(forward, specs: Tuple[LevelSpec, ...], K: int,
         cnt = cnt.at[lanes3, idx].add(tmask.astype(jnp.int32))
         stamp = jnp.where(tmask, tick, jnp.int32(_INT32_MIN))
         last = last.at[lanes3, idx].max(stamp)
+        return s, idx, winner, hit, generative, last, cnt
+
+    if not lifecycle:
+        # TTL-free deployments compile the exact PR-5 program: same signature,
+        # same donation, byte-identical trace
+        def program(embed_args, thresholds, qmask, buf, valid, last, cnt, tick):
+            q = forward(*embed_args)  # [B, D] — embeds never leave the device
+            s, idx = search(q, buf, valid)
+            s, idx, winner, hit, generative, last, cnt = decide_and_touch(
+                s, idx, thresholds, qmask, last, cnt, tick
+            )
+            return q, s, idx, winner, hit, generative, last, cnt
+
+        return jax.jit(program, donate_argnums=(5, 6))
+
+    def program_lc(embed_args, thresholds, qmask, buf, valid, created,
+                   expires, w, now, last, cnt, tick):
+        q = forward(*embed_args)
+        # expiry mask INSIDE the decide stage: a dead row is invalid for this
+        # dispatch, so it can never surface as a candidate, let alone win
+        s, idx = search(q, buf, valid & (expires > now))
+        finite = s > jnp.float32(_NEG_FINITE)
+        lanes3 = jnp.broadcast_to(jnp.arange(L)[None, :, None], s.shape)
+        c = created[lanes3, idx]
+        e = expires[lanes3, idx]
+        # staleness-aware scoring: an aging entry must beat a higher bar —
+        # w[lane] * clip(age/ttl, 0, 1) comes off its similarity
+        frac = jnp.clip((now - c) / jnp.maximum(e - c, 1e-6), 0.0, 1.0)
+        pen = jnp.where(
+            finite & jnp.isfinite(e), w[None, :, None] * frac, 0.0
+        )
+        s = s - pen
+        # re-establish descending order (decide assumes best-first candidates)
+        s, order = jax.lax.top_k(s, K)
+        idx = jnp.take_along_axis(idx, order, axis=-1)
+        s, idx, winner, hit, generative, last, cnt = decide_and_touch(
+            s, idx, thresholds, qmask, last, cnt, tick
+        )
         return q, s, idx, winner, hit, generative, last, cnt
 
-    return jax.jit(program, donate_argnums=(5, 6))
+    return jax.jit(program_lc, donate_argnums=(9, 10))
 
 
 def fused_read(
@@ -210,19 +248,28 @@ def fused_read(
 
     bank.flush_pending()
     use_pallas = bank.use_pallas and bank._kernel_ok()
+    lifecycle = bank.lifecycle_active()
     program = _build_program(
         forward, specs, K, bank.metrics, bank.prenorm, use_pallas,
         bank._resolved_interpret(), st_ops.default_block_n(),
-        st_ops.default_grid_order(),
+        st_ops.default_grid_order(), lifecycle,
     )
     tick = bank.next_tick()
     bank.dispatches += 1
     if use_pallas:
         st_ops.record_dispatch()
-    q, s, idx, winner, hit, gen, last, cnt = program(
-        args, thr, qmask, bank.buf, bank.valid,
-        bank.d_last_access, bank.d_access_count, np.int32(tick),
-    )
+    if lifecycle:
+        q, s, idx, winner, hit, gen, last, cnt = program(
+            args, thr, qmask, bank.buf, bank.valid,
+            bank.d_created, bank.d_expires, bank.d_staleness(),
+            np.float32(bank.rel_now()),
+            bank.d_last_access, bank.d_access_count, np.int32(tick),
+        )
+    else:
+        q, s, idx, winner, hit, gen, last, cnt = program(
+            args, thr, qmask, bank.buf, bank.valid,
+            bank.d_last_access, bank.d_access_count, np.int32(tick),
+        )
     bank.adopt_fused_counters(last, cnt)
     # ONE host fetch for all decision tensors (the counters stay on device)
     q, s, idx, winner, hit, gen = jax.device_get((q, s, idx, winner, hit, gen))

@@ -40,6 +40,7 @@ class CacheRequest:
     connectivity: float = 1.0
     priority: int = 0  # higher is scheduled sooner
     deadline_s: Optional[float] = None  # relative to submit; expired misses don't generate
+    ttl_s: Optional[float] = None  # backfilled answer's cache lifetime; None = store default
     metadata: Dict[str, Any] = field(default_factory=dict)
 
 

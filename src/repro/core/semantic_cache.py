@@ -36,6 +36,7 @@ class CacheStats:
     lookups: int = 0
     hits: int = 0
     generative_hits: int = 0
+    tier1_hits: int = 0  # tier-0 misses served from the host-RAM tier
     adds: int = 0
     embed_time_s: float = 0.0
     search_time_s: float = 0.0
@@ -114,6 +115,54 @@ class SemanticCache:
         if touch_keys is not None and keys:
             touch_keys(keys)
 
+    # -- tier-1 consult (tier-0 miss only; host-side, off the fused path) -------
+
+    def consult_tier1(
+        self, queries: List[str], vecs: np.ndarray, thresholds, rows: List[int]
+    ) -> Dict[int, CacheResult]:
+        """Consult the store's host-RAM demotion tier for the listed miss
+        rows. Hits promote back into the device lane via the same batched
+        row scatter inserts ride (one scatter for all winners), then resolve
+        as hits at level "tier1". Runs only after a tier-0 miss, so the
+        fused read program stays one dispatch / zero host hops."""
+        tier = getattr(self.store, "tier1", None)
+        if tier is None or len(tier) == 0 or not rows:
+            return {}
+        vecs = np.asarray(vecs, np.float32)
+        sc, slots = tier.search(vecs[rows], k=1)
+        winners = []  # (batch row, effective score, tier slot)
+        for j, i in enumerate(rows):
+            s = float(sc[j, 0])
+            if np.isfinite(s) and s > float(thresholds[i]):
+                winners.append((i, s, int(slots[j, 0])))
+        if not winners:
+            return {}
+        popped: Dict[int, tuple] = {}  # slot -> (TierEntry, vec); pop once
+        for _, _, slot in winners:
+            if slot not in popped:
+                popped[slot] = tier.pop(slot)
+        self.store._restore_batch(
+            np.stack([v for _, v in popped.values()]),
+            [e for e, _ in popped.values()],
+        )
+        out: Dict[int, CacheResult] = {}
+        for i, s, slot in winners:
+            te = popped[slot][0]
+            idx = self.store._key_to_slot.get(te.key)
+            entry = (
+                self.store._entries[idx]
+                if idx is not None  # promoted row already re-evicted
+                else Entry(te.key, te.query, te.response, dict(te.meta),
+                           te.created_at, te.expires_at)
+            )
+            self.stats.hits += 1
+            self.stats.tier1_hits += 1
+            out[i] = CacheResult(
+                True, entry.response, s, s, False, [(s, entry)],
+                float(thresholds[i]), 0.0, "tier1",
+            )
+        return out
+
     # -- lookup / insert --------------------------------------------------------
 
     def lookup(
@@ -134,6 +183,11 @@ class SemanticCache:
                 True, entry.response, score, score, False, [(score, entry)], t_s,
                 time.perf_counter() - t_start, "semantic",
             )
+        promoted = self.consult_tier1([query], np.asarray(vec)[None], [t_s], [0])
+        if 0 in promoted:
+            r = promoted[0]
+            r.latency_s = time.perf_counter() - t_start
+            return r
         best = matches[0][0] if matches else -1.0
         return CacheResult(
             False, None, best, best, False, matches[:1], t_s, time.perf_counter() - t_start
@@ -217,6 +271,11 @@ class SemanticCache:
             matches = self.store.search_batch(np.asarray(vecs), k=self._solo_k())
             self.stats.search_time_s += time.perf_counter() - t0
             results, to_insert = self._decide_batch(queries, thresholds, matches)
+        misses = [i for i, r in enumerate(results) if not r.hit]
+        if misses:
+            promoted = self.consult_tier1(queries, vecs, thresholds, misses)
+            for i, r in promoted.items():
+                results[i] = r
         per_query_s = (time.perf_counter() - t_start) / n
         for r in results:
             r.latency_s = per_query_s
@@ -318,11 +377,15 @@ class SemanticCache:
         response: str,
         meta: Optional[Dict[str, Any]] = None,
         vec: Optional[np.ndarray] = None,
+        ttl_s: Optional[float] = None,
     ) -> int:
         if vec is None:
             vec = self.embed(query)
         t0 = time.perf_counter()
-        key = self.store.add(vec, query, response, meta)
+        if ttl_s is not None:
+            key = self.store.add(vec, query, response, meta, ttl_s=ttl_s)
+        else:  # stores without TTL support keep working unchanged
+            key = self.store.add(vec, query, response, meta)
         self.stats.add_time_s += time.perf_counter() - t0
         self.stats.adds += 1
         return key
@@ -333,6 +396,7 @@ class SemanticCache:
         responses: List[str],
         metas: Optional[List[Optional[Dict[str, Any]]]] = None,
         vecs: Optional[np.ndarray] = None,
+        ttls: Optional[List[Optional[float]]] = None,
     ) -> List[int]:
         """Insert N pairs with one embed forward + one ``add_batch`` scatter."""
         n = len(queries)
@@ -341,10 +405,22 @@ class SemanticCache:
         if vecs is None:
             vecs = self.embed_batch(list(queries))
         t0 = time.perf_counter()
-        keys = self.store.add_batch(np.asarray(vecs), list(queries), list(responses), metas)
+        if ttls is not None and any(t is not None for t in ttls):
+            keys = self.store.add_batch(
+                np.asarray(vecs), list(queries), list(responses), metas, ttls=ttls
+            )
+        else:
+            keys = self.store.add_batch(np.asarray(vecs), list(queries), list(responses), metas)
         self.stats.add_time_s += time.perf_counter() - t0
         self.stats.adds += n
         return keys
+
+    def clear(self, older_than: Optional[float] = None) -> int:
+        """Prune: everything, or entries older than ``older_than`` seconds
+        (expired entries always qualify). Cascades through the store into
+        any attached tier-1 ring."""
+        clear = getattr(self.store, "clear", None)
+        return int(clear(older_than=older_than)) if clear is not None else 0
 
     def warm_start(self, pairs: List[Tuple[str, str]]) -> None:
         """Load query-answer pairs from past sessions (paper §4)."""

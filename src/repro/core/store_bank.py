@@ -43,6 +43,7 @@ auto-selected per JAX backend via ``repro.kernels.backend``.
 from __future__ import annotations
 
 import functools
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -54,6 +55,12 @@ _INT32_MIN = np.iinfo(np.int32).min
 # renumber the logical event clock well before int32 saturates (headroom for
 # one batch worth of ticks past the check)
 _TICK_COMPACT_AT = np.iinfo(np.int32).max - (1 << 20)
+# lifecycle epoch: created/expires stamps are float seconds RELATIVE to this
+# process-wide origin, so every bank in the process shares one time base
+# (adoption copies stamps verbatim) and the device float32 copies keep
+# sub-second precision over any realistic process lifetime. Snapshots persist
+# absolute times and re-base on load.
+_EPOCH = time.time()
 
 
 def bucket_len(n: int) -> int:
@@ -137,30 +144,56 @@ def _normalize_rows(rows: jax.Array) -> jax.Array:
 # -- module-level jits: compiled once per shape and shared by every bank ------
 
 
-@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4), static_argnames=("normalize",))
-def _bank_scatter(buf, valid, last, cnt, seq, lane, idxs, rows,
-                  c_lanes, c_idxs, c_ticks, c_seqs, *, normalize: bool):
-    """Row scatter with the insert-time counter resets fused in: one donated
-    device update covers rows, masks, and last_access/access_count/insert_seq
-    for the claimed slots (slots deduped host-side; padding repeats the final
-    update with identical values, so conflicting-order scatter is moot)."""
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4, 5, 6),
+                   static_argnames=("normalize",))
+def _bank_scatter(buf, valid, last, cnt, seq, created, expires, lane, idxs, rows,
+                  c_lanes, c_idxs, c_ticks, c_seqs, c_cnts, c_created, c_expires,
+                  *, normalize: bool):
+    """Row scatter with the insert-time counter AND lifecycle resets fused in:
+    one donated device update covers rows, masks,
+    last_access/access_count/insert_seq, and created/expires stamps for the
+    claimed slots (slots deduped host-side; padding repeats the final update
+    with identical values, so conflicting-order scatter is moot).
+    ``c_cnts`` is 0 for a fresh insert and the preserved count for a tier-1
+    promotion restoring a demoted entry."""
     if normalize:
         rows = _normalize_rows(rows)
     return (
         buf.at[lane, idxs].set(rows),
         valid.at[lane, idxs].set(True),
         last.at[c_lanes, c_idxs].set(c_ticks),
-        cnt.at[c_lanes, c_idxs].set(0),
+        cnt.at[c_lanes, c_idxs].set(c_cnts),
         seq.at[c_lanes, c_idxs].set(c_seqs),
+        created.at[c_lanes, c_idxs].set(c_created),
+        expires.at[c_lanes, c_idxs].set(c_expires),
     )
 
 
-@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
-def _bank_counter_set(last, cnt, seq, c_lanes, c_idxs, c_ticks, c_seqs):
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4))
+def _bank_counter_set(last, cnt, seq, created, expires,
+                      c_lanes, c_idxs, c_ticks, c_seqs, c_cnts, c_created, c_expires):
     return (
         last.at[c_lanes, c_idxs].set(c_ticks),
-        cnt.at[c_lanes, c_idxs].set(0),
+        cnt.at[c_lanes, c_idxs].set(c_cnts),
         seq.at[c_lanes, c_idxs].set(c_seqs),
+        created.at[c_lanes, c_idxs].set(c_created),
+        expires.at[c_lanes, c_idxs].set(c_expires),
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4, 5))
+def _bank_free(valid, last, cnt, seq, created, expires, lanes, idxs):
+    """Freed-slot hygiene in ONE donated update: clearing validity alone
+    would leave stale recency/frequency/TTL metadata attached to the slot
+    (visible to snapshots, counter mirrors, and any future policy that scans
+    invalid slots) — a remove resets the slot's whole metadata row."""
+    return (
+        valid.at[lanes, idxs].set(False),
+        last.at[lanes, idxs].set(0),
+        cnt.at[lanes, idxs].set(0),
+        seq.at[lanes, idxs].set(0),
+        created.at[lanes, idxs].set(0.0),
+        expires.at[lanes, idxs].set(jnp.inf),
     )
 
 
@@ -173,11 +206,6 @@ def _bank_touch(last, cnt, lanes, idxs, weights, tick):
     sequential host loop's one-stamp-per-event semantics."""
     stamp = jnp.where(weights > 0, tick, jnp.int32(_INT32_MIN))
     return last.at[lanes, idxs].max(stamp), cnt.at[lanes, idxs].add(weights)
-
-
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _bank_invalidate(valid, lane, idx):
-    return valid.at[lane, idx].set(False)
 
 
 def _lane_scores(db, q, metric: str, prenormalized: bool):
@@ -297,13 +325,31 @@ class StoreBank:
             np.zeros((self.L, self.cap), np.int32),
             np.zeros((self.L, self.cap), np.int32),
         )
+        # entry lifecycle: created/expires stamps (seconds relative to the
+        # process _EPOCH). The device float32 copies feed the fused read
+        # program's expiry mask + staleness penalty; the float64 host arrays
+        # are the source of truth — lifecycle only changes on host-initiated
+        # paths (insert/remove/clear), so unlike the eviction counters they
+        # never go stale and need no mirror-sync machinery.
+        self.d_created = jnp.zeros((self.L, self.cap), jnp.float32)
+        self.d_expires = jnp.full((self.L, self.cap), jnp.inf, jnp.float32)
+        self.h_created = np.zeros((self.L, self.cap), np.float64)
+        self.h_expires = np.full((self.L, self.cap), np.inf, np.float64)
+        # per-lane staleness weight: an aging entry's effective score drops by
+        # w * age_fraction (0 at insert -> w at expiry), so it must beat a
+        # correspondingly higher threshold. 0 = scoring unchanged.
+        self.staleness_w = np.zeros(self.L, np.float32)
+        self._d_stale: Optional[jax.Array] = None  # device cache of staleness_w
+        self._ttl_live = False  # any finite expiry ever installed
         self._tick = 1  # 0 = never touched/inserted
         # insert-time counter updates awaiting the next row scatter (claims
         # run host-side first; the device catches up in the same donated
         # update that writes the rows)
-        self._pending: List[Tuple[int, int, int, int]] = []
+        self._pending: List[Tuple[int, int, int, int, int, float, float]] = []
+        self._free_jit = _bank_free  # sharded lane views swap in a sharded jit
         self.dispatches = 0  # fused/device search dispatches issued by this bank
         self.counter_scatters = 0  # standalone counter scatters (non-fused paths)
+        self.free_scatters = 0  # slot-free updates (remove/clear; off the read path)
         self.host_hops = 0  # host<->device data hops on the search path
 
     # -- metric helpers --------------------------------------------------------
@@ -319,6 +365,82 @@ class StoreBank:
 
     def _kernel_ok(self) -> bool:
         return all(m in _KERNEL_METRICS for m in self.metrics)
+
+    # -- entry lifecycle (TTL/expiry + staleness) ------------------------------
+
+    @staticmethod
+    def rel_now() -> float:
+        """Current time on the bank's relative clock (seconds since _EPOCH)."""
+        return time.time() - _EPOCH
+
+    @staticmethod
+    def to_rel(abs_time: float) -> float:
+        return abs_time - _EPOCH if np.isfinite(abs_time) else float("inf")
+
+    @staticmethod
+    def to_abs(rel_time: float) -> float:
+        return rel_time + _EPOCH if np.isfinite(rel_time) else float("inf")
+
+    def lifecycle_active(self) -> bool:
+        """True once any entry carries a finite TTL or any lane scores with a
+        staleness penalty — the read paths skip all lifecycle math until then,
+        so TTL-free deployments pay nothing."""
+        return self._ttl_live or bool((self.staleness_w != 0).any())
+
+    def set_staleness(self, lane: int, weight: float) -> None:
+        self.staleness_w[lane] = np.float32(weight)
+        self._d_stale = None
+
+    def d_staleness(self) -> jax.Array:
+        if self._d_stale is None:
+            self._d_stale = jnp.asarray(self.staleness_w)
+        return self._d_stale
+
+    def set_lifecycle(self, created_rel: np.ndarray, expires_rel: np.ndarray) -> None:
+        """Install full lifecycle arrays (adoption / snapshot load), in the
+        relative-seconds representation."""
+        self.h_created = np.asarray(created_rel, np.float64).copy()
+        self.h_expires = np.asarray(expires_rel, np.float64).copy()
+        self.d_created = jnp.asarray(self.h_created.astype(np.float32))
+        self.d_expires = jnp.asarray(self.h_expires.astype(np.float32))
+        if np.isfinite(self.h_expires).any():
+            self._ttl_live = True
+
+    def lifecycle_rescore(
+        self, scores: np.ndarray, lanes, idx: np.ndarray, now: Optional[float] = None
+    ) -> Optional[np.ndarray]:
+        """Host-side expiry mask + staleness penalty for the legacy search
+        paths (the fused read program applies the same rule in-program):
+        expired candidates drop to -inf (never served; ``join_candidates``'
+        finite filter discards them), live TTL'd candidates lose
+        ``w[lane] * clip(age / ttl, 0, 1)``. Returns the effective scores
+        (same shape as ``scores``; the caller re-sorts), or None when no
+        lifecycle state is active — pure numpy, zero extra dispatches."""
+        if not self.lifecycle_active():
+            return None
+        now = self.rel_now() if now is None else now
+        lanes = np.broadcast_to(np.asarray(lanes, np.int64), idx.shape)
+        c = self.h_created[lanes, idx]
+        e = self.h_expires[lanes, idx]
+        s = np.asarray(scores, np.float32).copy()
+        finite = np.isfinite(s)
+        expired = finite & (e <= now)
+        aging = finite & ~expired & np.isfinite(e)
+        if aging.any():
+            frac = np.clip(
+                (now - c[aging]) / np.maximum(e[aging] - c[aging], 1e-6), 0.0, 1.0
+            )
+            s[aging] -= (self.staleness_w[lanes[aging]] * frac).astype(np.float32)
+        s[expired] = -np.inf
+        return s
+
+    @staticmethod
+    def resort_desc(s: np.ndarray, idx: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Re-establish descending score order after lifecycle rescoring
+        (decide rules assume candidates arrive best-first); stable, so
+        untouched rows keep their original top-k order exactly."""
+        order = np.argsort(-s, axis=-1, kind="stable")
+        return np.take_along_axis(s, order, -1), np.take_along_axis(idx, order, -1)
 
     # -- counters: device truth + lazily-synced host mirror --------------------
 
@@ -388,39 +510,57 @@ class StoreBank:
         self._mirror = (last.copy(), cnt.copy(), seq.copy())
         self._tick = max(self._tick, int(last.max(initial=0)) + 1)
 
-    def note_insert(self, lane: int, idx: int, seq: int) -> None:
-        """Counter bookkeeping for one claimed slot. The device update is
-        deferred into the next row scatter; the host mirror (when clean) is
-        updated immediately so victim selection inside the same add_batch
-        sees earlier claims."""
+    def note_insert(
+        self,
+        lane: int,
+        idx: int,
+        seq: int,
+        *,
+        created: Optional[float] = None,
+        expires: Optional[float] = None,
+        count: int = 0,
+    ) -> None:
+        """Counter + lifecycle bookkeeping for one claimed slot. The device
+        update is deferred into the next row scatter; the host mirror (when
+        clean) and the host lifecycle arrays are updated immediately so
+        victim selection inside the same add_batch sees earlier claims.
+        ``created``/``expires`` are relative-clock stamps (defaults: now /
+        never); ``count`` restores a promoted entry's access_count."""
         tick = self.next_tick()
+        created = self.rel_now() if created is None else float(created)
+        expires = float("inf") if expires is None else float(expires)
+        if np.isfinite(expires):
+            self._ttl_live = True
         if self._mirror is not None:
             ml, mc, ms = self._mirror
             ml[lane, idx] = tick
-            mc[lane, idx] = 0
+            mc[lane, idx] = count
             ms[lane, idx] = seq
-        self._pending.append((lane, idx, tick, seq))
+        self.h_created[lane, idx] = created
+        self.h_expires[lane, idx] = expires
+        self._pending.append((lane, idx, tick, seq, count, created, expires))
 
     def _drain_pending(self):
         """Pending insert-counter updates as bucketed scatter arrays
         (last-wins dedupe per slot, padding repeats the final update)."""
-        last_wins: Dict[Tuple[int, int], Tuple[int, int]] = {}
-        for lane, idx, tick, seq in self._pending:
-            last_wins[(lane, idx)] = (tick, seq)
+        last_wins: Dict[Tuple[int, int], Tuple[int, int, int, float, float]] = {}
+        for lane, idx, tick, seq, count, created, expires in self._pending:
+            last_wins[(lane, idx)] = (tick, seq, count, created, expires)
         self._pending.clear()
         n = len(last_wins)
         lanes = np.fromiter((k[0] for k in last_wins), np.int32, n)
         idxs = np.fromiter((k[1] for k in last_wins), np.int32, n)
         ticks = np.fromiter((v[0] for v in last_wins.values()), np.int32, n)
         seqs = np.fromiter((v[1] for v in last_wins.values()), np.int32, n)
+        cnts = np.fromiter((v[2] for v in last_wins.values()), np.int32, n)
+        created = np.fromiter((v[3] for v in last_wins.values()), np.float32, n)
+        expires = np.fromiter((v[4] for v in last_wins.values()), np.float32, n)
+        cols = [lanes, idxs, ticks, seqs, cnts, created, expires]
         bucket = bucket_len(n)
         if bucket > n:
             pad = bucket - n
-            lanes = np.concatenate([lanes, np.repeat(lanes[-1:], pad)])
-            idxs = np.concatenate([idxs, np.repeat(idxs[-1:], pad)])
-            ticks = np.concatenate([ticks, np.repeat(ticks[-1:], pad)])
-            seqs = np.concatenate([seqs, np.repeat(seqs[-1:], pad)])
-        return lanes, idxs, ticks, seqs
+            cols = [np.concatenate([c, np.repeat(c[-1:], pad)]) for c in cols]
+        return tuple(cols)
 
     def flush_pending(self) -> None:
         """Push deferred insert-counter updates to device (normally they ride
@@ -428,11 +568,16 @@ class StoreBank:
         that read counters between a claim and its ``set_rows``)."""
         if not self._pending:
             return
-        cl, ci, ct, cs = self._drain_pending()
+        cl, ci, ct, cs, cc, ccr, cex = self._drain_pending()
         self.counter_scatters += 1
-        self.d_last_access, self.d_access_count, self.d_insert_seq = _bank_counter_set(
+        (
             self.d_last_access, self.d_access_count, self.d_insert_seq,
+            self.d_created, self.d_expires,
+        ) = _bank_counter_set(
+            self.d_last_access, self.d_access_count, self.d_insert_seq,
+            self.d_created, self.d_expires,
             jnp.asarray(cl), jnp.asarray(ci), jnp.asarray(ct), jnp.asarray(cs),
+            jnp.asarray(cc), jnp.asarray(ccr), jnp.asarray(cex),
         )
 
     def touch_slots(self, lanes, idxs) -> None:
@@ -467,23 +612,81 @@ class StoreBank:
 
     def set_rows(self, lane: int, idxs: List[int], rows: np.ndarray) -> None:
         """Scatter N raw rows into one lane (ONE donated device update that
-        also applies the pending insert-counter resets; rows are
+        also applies the pending insert-counter/lifecycle resets; rows are
         unit-normalized in-jit for cosine lanes)."""
         sel, scatter_idx = prepare_scatter(idxs, np.asarray(rows, np.float32))
-        cl, ci, ct, cs = self._drain_pending()
+        cl, ci, ct, cs, cc, ccr, cex = self._drain_pending()
         (
             self.buf, self.valid,
             self.d_last_access, self.d_access_count, self.d_insert_seq,
+            self.d_created, self.d_expires,
         ) = _bank_scatter(
             self.buf, self.valid,
             self.d_last_access, self.d_access_count, self.d_insert_seq,
+            self.d_created, self.d_expires,
             lane, jnp.asarray(scatter_idx), jnp.asarray(sel),
             jnp.asarray(cl), jnp.asarray(ci), jnp.asarray(ct), jnp.asarray(cs),
+            jnp.asarray(cc), jnp.asarray(ccr), jnp.asarray(cex),
             normalize=self.prenorm[lane],
         )
 
     def invalidate(self, lane: int, idx: int) -> None:
-        self.valid = _bank_invalidate(self.valid, lane, idx)
+        self.free_slots([lane], [idx])
+
+    def free_slots(self, lanes, idxs) -> None:
+        """Free N (lane, idx) slots in ONE donated update, resetting the
+        whole metadata row (validity, recency/frequency/insertion counters,
+        created/expires) — a recycled slot must be indistinguishable from a
+        never-used one. Shared by remove() and clear(older_than) on both
+        lane-view stores (the sharded view swaps in a jit with its output
+        shardings via ``_free_jit``)."""
+        lanes = np.asarray(lanes, np.int32).reshape(-1)
+        idxs = np.asarray(idxs, np.int32).reshape(-1)
+        if lanes.size == 0:
+            return
+        # drop any pending insert for a slot freed before its row scatter
+        if self._pending:
+            freed = set(zip(lanes.tolist(), idxs.tolist()))
+            self._pending = [p for p in self._pending if (p[0], p[1]) not in freed]
+        if self._mirror is not None:
+            ml, mc, ms = self._mirror
+            ml[lanes, idxs] = 0
+            mc[lanes, idxs] = 0
+            ms[lanes, idxs] = 0
+        self.h_created[lanes, idxs] = 0.0
+        self.h_expires[lanes, idxs] = np.inf
+        n = lanes.size
+        bucket = bucket_len(n)
+        if bucket > n:  # pad repeats the final pair — the free is idempotent
+            pad = bucket - n
+            lanes = np.concatenate([lanes, np.repeat(lanes[-1:], pad)])
+            idxs = np.concatenate([idxs, np.repeat(idxs[-1:], pad)])
+        self.free_scatters += 1
+        (
+            self.valid,
+            self.d_last_access, self.d_access_count, self.d_insert_seq,
+            self.d_created, self.d_expires,
+        ) = self._free_jit(
+            self.valid,
+            self.d_last_access, self.d_access_count, self.d_insert_seq,
+            self.d_created, self.d_expires,
+            jnp.asarray(lanes), jnp.asarray(idxs),
+        )
+
+    def compact_seqs(self) -> int:
+        """Rank-rebase the insert_seq counters before the int32 insertion
+        clock saturates — the insert-side twin of ``_compact_ticks`` (same
+        order- and tie-preserving rank transform as the legacy-snapshot
+        loader). At most L*cap distinct sequence numbers survive, so the
+        clock restarts near zero; per-lane fifo victim ordering is unchanged
+        (a rank transform is monotone, and it is applied bank-wide so every
+        lane view's future inserts stay above every surviving rank). Returns
+        the next free sequence number for the calling store."""
+        self.flush_pending()
+        last, cnt, seq = self.counters_host()
+        ranks = np.unique(seq, return_inverse=True)[1].reshape(seq.shape)
+        self.set_counters(last, cnt, ranks.astype(np.int32))
+        return int(ranks.max(initial=0)) + 1
 
     # -- search ----------------------------------------------------------------
 
@@ -512,7 +715,11 @@ class StoreBank:
         else:
             fn = _lane_search_jnp(k, metric, self.prenorm[lane])
         s, i = fn(self.buf, self.valid, lane, jnp.asarray(q))
-        return np.asarray(s)[:n_q], np.asarray(i)[:n_q]
+        s, i = np.asarray(s)[:n_q], np.asarray(i)[:n_q]
+        s_eff = self.lifecycle_rescore(s, lane, i)
+        if s_eff is not None:
+            s, i = self.resort_desc(s_eff, i)
+        return s, i
 
     def search_lanes(
         self, q_vecs: np.ndarray, k: int
@@ -539,7 +746,11 @@ class StoreBank:
         else:
             fn = _fused_search_jnp(k, self.metrics, self.prenorm)
             s, i = fn(self.buf, self.valid, jnp.asarray(q))
-        return np.asarray(s)[:n_q], np.asarray(i)[:n_q]
+        s, i = np.asarray(s)[:n_q], np.asarray(i)[:n_q]
+        s_eff = self.lifecycle_rescore(s, np.arange(self.L)[None, :, None], i)
+        if s_eff is not None:
+            s, i = self.resort_desc(s_eff, i)
+        return s, i
 
     # -- lane views ------------------------------------------------------------
 
@@ -583,6 +794,8 @@ class StoreBank:
         last = np.zeros((bank.L, bank.cap), np.int32)
         cnt = np.zeros((bank.L, bank.cap), np.int32)
         seq = np.zeros((bank.L, bank.cap), np.int32)
+        created = np.zeros((bank.L, bank.cap), np.float64)
+        expires = np.full((bank.L, bank.cap), np.inf, np.float64)
         for li, s in enumerate(stores):
             ob, ol, cap = s._bank, s._lane, s.capacity
             src_last, src_cnt, src_seq = ob.counters_host()
@@ -591,9 +804,16 @@ class StoreBank:
             last[li, :cap] = src_last[ol, :cap]
             cnt[li, :cap] = src_cnt[ol, :cap]
             seq[li, :cap] = src_seq[ol, :cap]
+            # lifecycle stamps share the process-wide epoch, so they copy
+            # verbatim across banks; per-lane staleness follows the store
+            created[li, :cap] = ob.h_created[ol, :cap]
+            expires[li, :cap] = ob.h_expires[ol, :cap]
+            bank.staleness_w[li] = ob.staleness_w[ol]
         bank.buf = jnp.asarray(buf)
         bank.valid = jnp.asarray(valid)
         bank.set_counters(last, cnt, seq)
+        bank.set_lifecycle(created, expires)
+        bank._d_stale = None
         bank._tick = max(bank._tick, *(s._bank._tick for s in stores))
         for li, s in enumerate(stores):
             s._bank = bank

@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.store_bank import (
+    _TICK_COMPACT_AT,
     StoreBank,
     _normalize_rows as _norm_rows,
     pad_to_bucket,
@@ -206,6 +207,8 @@ class ShardedVectorStore:
     def __init__(
         self, mesh, dim: int, capacity: int, *, k: int = 4, metric: str = "cosine",
         eviction: str = "lru",  # lru | lfu | fifo
+        default_ttl_s: Optional[float] = None,
+        staleness_weight: float = 0.0,
     ):
         assert eviction in ("lru", "lfu", "fifo")
         self.mesh = mesh
@@ -235,32 +238,54 @@ class ShardedVectorStore:
         self._lookup = make_banked_lookup(
             mesh, k=k, metric=metric, prenormalized=self.bank.prenormalized
         )
+        self.default_ttl_s = default_ttl_s
+        self.staleness_weight = float(staleness_weight)
+        for lane in range(n_shards):
+            self.bank.set_staleness(lane, staleness_weight)
         normalize = self.bank.prenormalized
 
-        def _scatter(buf, valid, last, cnt, seq, lanes, withins, rows,
-                     c_lanes, c_withins, c_ticks, c_seqs):
-            # rows, masks, AND the insert-time counter resets in one donated
-            # update — the bank's device counters stay co-located with the
-            # sharded lanes' lifecycle (counter placement is left to XLA)
+        def _scatter(buf, valid, last, cnt, seq, created, expires, lanes, withins,
+                     rows, c_lanes, c_withins, c_ticks, c_seqs, c_cnts, c_created,
+                     c_expires):
+            # rows, masks, AND the insert-time counter/lifecycle resets in one
+            # donated update — the bank's device counters stay co-located with
+            # the sharded lanes' lifecycle (counter placement is left to XLA)
             if normalize:
                 rows = _norm_rows(rows)
             return (
                 buf.at[lanes, withins].set(rows),
                 valid.at[lanes, withins].set(True),
                 last.at[c_lanes, c_withins].set(c_ticks),
-                cnt.at[c_lanes, c_withins].set(0),
+                cnt.at[c_lanes, c_withins].set(c_cnts),
                 seq.at[c_lanes, c_withins].set(c_seqs),
+                created.at[c_lanes, c_withins].set(c_created),
+                expires.at[c_lanes, c_withins].set(c_expires),
             )
 
         self._add_many = jax.jit(
             _scatter,
-            donate_argnums=(0, 1, 2, 3, 4),
-            out_shardings=(self._db_sharding, self._valid_sharding, None, None, None),
+            donate_argnums=(0, 1, 2, 3, 4, 5, 6),
+            out_shardings=(self._db_sharding, self._valid_sharding,
+                           None, None, None, None, None),
         )
-        self._invalidate = jax.jit(
-            lambda valid, lane, within: valid.at[lane, within].set(False),
-            donate_argnums=(0,),
-            out_shardings=self._valid_sharding,
+
+        def _free(valid, last, cnt, seq, created, expires, lanes, withins):
+            # freed-slot hygiene: the full metadata row resets with the mask
+            # (same contract as the in-memory lane view's _bank_free)
+            return (
+                valid.at[lanes, withins].set(False),
+                last.at[lanes, withins].set(0),
+                cnt.at[lanes, withins].set(0),
+                seq.at[lanes, withins].set(0),
+                created.at[lanes, withins].set(0.0),
+                expires.at[lanes, withins].set(jnp.inf),
+            )
+
+        # the bank's free path must re-shard the validity mask like ours
+        self.bank._free_jit = jax.jit(
+            _free,
+            donate_argnums=(0, 1, 2, 3, 4, 5),
+            out_shardings=(self._valid_sharding, None, None, None, None, None),
         )
         self.size = 0
         self.payloads: List[Optional[tuple]] = [None] * self.capacity
@@ -298,14 +323,23 @@ class ShardedVectorStore:
             within = (self._rr // self.n_shards) % self.cap_local
             self._rr += 1
             return shard * self.cap_local + within
-        # every slot is live: evict per policy over the bank's flat counter
-        # view (host mirror of the device arrays, synced on demand)
+        # every slot is live: already-expired entries are free capacity — the
+        # most-expired slot goes first, before any live entry is evicted
+        if self.bank.lifecycle_active():
+            exp = self.bank.h_expires.reshape(-1)
+            dead = exp <= self.bank.rel_now()
+            if dead.any():
+                return int(np.argmin(np.where(dead, exp, np.inf)))
+        # evict per policy over the bank's flat counter view (host mirror of
+        # the device arrays, synced on demand)
         last, cnt, seq = self.bank.counters_host()
         return select_victim(
             self.eviction, last.reshape(-1), cnt.reshape(-1), seq.reshape(-1)
         )
 
-    def _claim_slot(self, idx: int, query: str, response: str) -> int:
+    def _claim_slot(
+        self, idx: int, query: str, response: str, ttl_s: Optional[float] = None
+    ) -> int:
         """Host-side bookkeeping for one placement (shared by add/add_batch)."""
         old = self._slot_key[idx]
         if old is not None:  # policy eviction overwrote a live entry
@@ -318,7 +352,13 @@ class ShardedVectorStore:
         self._slot_key[idx] = key
         self._key_to_slot[key] = idx
         lane, within = self._lane_within(idx)
-        self.bank.note_insert(lane, within, self._seq)
+        if self._seq >= _TICK_COMPACT_AT:  # int32 insertion clock: rank-rebase
+            self._seq = self.bank.compact_seqs()
+        ttl_s = self.default_ttl_s if ttl_s is None else ttl_s
+        created = self.bank.rel_now()
+        expires = created + ttl_s if ttl_s is not None else None
+        self.bank.note_insert(lane, within, self._seq, created=created,
+                              expires=expires)
         self._seq += 1
         return key
 
@@ -326,58 +366,92 @@ class ShardedVectorStore:
         sel_rows, sel_idx = prepare_scatter(idxs, rows)
         lanes = (sel_idx // self.cap_local).astype(np.int32)
         withins = (sel_idx % self.cap_local).astype(np.int32)
-        cl, ci, ct, cs = self.bank._drain_pending()  # the claims' counter resets
+        # the claims' counter + lifecycle resets ride the same donated update
+        cl, ci, ct, cs, cc, ccr, cex = self.bank._drain_pending()
         bank = self.bank
         (
             bank.buf, bank.valid,
             bank.d_last_access, bank.d_access_count, bank.d_insert_seq,
+            bank.d_created, bank.d_expires,
         ) = self._add_many(
             bank.buf, bank.valid,
             bank.d_last_access, bank.d_access_count, bank.d_insert_seq,
+            bank.d_created, bank.d_expires,
             jnp.asarray(lanes), jnp.asarray(withins), jnp.asarray(sel_rows),
             jnp.asarray(cl), jnp.asarray(ci), jnp.asarray(ct), jnp.asarray(cs),
+            jnp.asarray(cc), jnp.asarray(ccr), jnp.asarray(cex),
         )
 
-    def add(self, vec: np.ndarray, query: str, response: str) -> int:
+    def add(self, vec: np.ndarray, query: str, response: str,
+            ttl_s: Optional[float] = None) -> int:
         idx = self._next_index()
-        key = self._claim_slot(idx, query, response)
+        key = self._claim_slot(idx, query, response, ttl_s)
         self._scatter_rows([idx], np.asarray(vec, np.float32).reshape(1, self.dim))
         return key
 
-    def add_batch(self, vecs: np.ndarray, queries, responses) -> List[int]:
+    def add_batch(self, vecs: np.ndarray, queries, responses,
+                  ttls: Optional[List[Optional[float]]] = None) -> List[int]:
         """N placements in ONE donated scatter into the sharded bank.
 
         Placement order (and therefore the shard lane each entry lands on)
         matches N sequential ``add`` calls, freed-slot reuse and policy
         eviction included; if the batch overwrites one slot twice, the last
         write wins — exactly what the sequential loop would leave behind.
+        ``ttls`` carries an optional per-entry TTL (None = default_ttl_s).
         """
         n = len(queries)
         if n == 0:
             return []
         rows = np.asarray(vecs, np.float32).reshape(n, self.dim)
+        ttls = list(ttls) if ttls is not None else [None] * n
         idxs: List[int] = []
         keys: List[int] = []
         for j in range(n):
             idx = self._next_index()
-            keys.append(self._claim_slot(idx, queries[j], responses[j]))
+            keys.append(self._claim_slot(idx, queries[j], responses[j], ttls[j]))
             idxs.append(idx)
         self._scatter_rows(idxs, rows)
         return keys
 
     def remove(self, key: int) -> bool:
-        """Evict one entry: clears its validity lane on-device and frees the
-        slot for reuse by the next add (before the cursor advances)."""
+        """Evict one entry: clears its validity lane AND the slot's
+        counter/lifecycle metadata on-device, then frees the slot for reuse
+        by the next add (before the cursor advances)."""
         idx = self._key_to_slot.pop(key, None)
         if idx is None:
             return False
         self.payloads[idx] = None
         self._slot_key[idx] = None
         lane, within = self._lane_within(idx)
-        self.bank.valid = self._invalidate(self.bank.valid, lane, within)
+        self.bank.free_slots([lane], [within])
         self._free.append(idx)
         self.size -= 1
         return True
+
+    def clear(self, older_than: Optional[float] = None) -> int:
+        """Drop entries older than ``older_than`` seconds (None = everything);
+        already-expired entries always qualify. One batched free update."""
+        cutoff = self.bank.rel_now() - (older_than if older_than is not None else 0)
+        rel_now = self.bank.rel_now()
+        lanes: List[int] = []
+        withins: List[int] = []
+        for idx, key in enumerate(self._slot_key):
+            if key is None:
+                continue
+            lane, within = self._lane_within(idx)
+            created = self.bank.h_created[lane, within]
+            expired = self.bank.h_expires[lane, within] <= rel_now
+            if older_than is None or created <= cutoff or expired:
+                self._key_to_slot.pop(key, None)
+                self.payloads[idx] = None
+                self._slot_key[idx] = None
+                self._free.append(idx)
+                self.size -= 1
+                lanes.append(lane)
+                withins.append(within)
+        if lanes:
+            self.bank.free_slots(lanes, withins)
+        return len(lanes)
 
     def __len__(self) -> int:
         return self.size
@@ -403,7 +477,16 @@ class ShardedVectorStore:
         self.bank.dispatches += 1
         self.bank.host_hops += 2
         s, i = self._lookup(self.bank.buf, self.bank.valid, jnp.asarray(q))
-        return np.asarray(s)[:n_q], np.asarray(i)[:n_q]
+        s, i = np.asarray(s)[:n_q], np.asarray(i)[:n_q]
+        # entry lifecycle: expired candidates drop out, TTL'd ones pay the
+        # staleness penalty (host-side on the tiny [Q, k] candidate sets —
+        # the global flat idx decomposes into the bank's (lane, within))
+        s_eff = self.bank.lifecycle_rescore(
+            s, np.asarray(i) // self.cap_local, np.asarray(i) % self.cap_local
+        )
+        if s_eff is not None:
+            s, i = self.bank.resort_desc(s_eff, i)
+        return s, i
 
     def search_batch(
         self, q_vecs: np.ndarray, k: Optional[int] = None, touch: bool = True

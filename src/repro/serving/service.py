@@ -231,6 +231,20 @@ class CacheService:
 
     # -- lifecycle -------------------------------------------------------------
 
+    def clear(self, older_than: Optional[float] = None) -> int:
+        """Prune the cache behind the service: everything, or — with
+        ``older_than`` (seconds) — entries created more than that long ago
+        plus anything already expired. Serialized against in-flight lookups
+        and backfills through the shared cache lock; cascades through every
+        hierarchy level and its host-RAM tier. Returns entries dropped."""
+        client = self.client
+        target = client.hierarchy if client.hierarchy is not None else client.cache
+        clear = getattr(target, "clear", None)
+        if clear is None:
+            return 0
+        with self._cache_lock:
+            return int(clear(older_than=older_than))
+
     def close(self, timeout: Optional[float] = 10.0) -> None:
         """Stop admissions and drain: lookup first (misses forward to the
         dispatcher), then the dispatcher — every accepted future resolves."""
@@ -455,14 +469,17 @@ class CacheService:
         return leader_of
 
     def _dispatch_phase(
-        self, pendings: List[_Pending], dedup: bool = False
+        self, pendings: List[_Pending], dedup: bool = False,
+        _regen_depth: int = 0,
     ) -> List[Union[CacheResponse, Exception]]:
         """Generate the miss residue: expired misses resolve typed (no
         backend call), near-identical misses coalesce onto one generation
         (``dedup=True``, the async dispatcher), the rest group by
         (model, max_tokens, temperature) into one ``generate_batch`` each,
         then backfill the cache with one scatter per destination level
-        before the futures resolve."""
+        before the futures resolve. A deduped follower whose leader expired
+        mid-generation re-dispatches (``_regen_depth`` bounds the recursion)
+        when the follower itself still has deadline headroom."""
         client = self.client
         n = len(pendings)
         outcomes: List[Optional[Union[CacheResponse, Exception]]] = [None] * n
@@ -544,10 +561,29 @@ class CacheService:
             outcomes[i] = out
         # deduped followers resolve from their leader's single generation:
         # same text, zero marginal cost, no second backfill scatter
+        regen: List[int] = []
         for i, j in leader_of.items():
             p, resp = pendings[i], llm_resps[j]
-            if resp is None:  # the leader's group failed — carry its error
-                outcomes[i] = outcomes[j]
+            if resp is None:
+                lead_out = outcomes[j]
+                if not isinstance(lead_out, CacheResponse):
+                    outcomes[i] = lead_out  # group failure — carry its error
+                    continue
+                # the leader expired mid-generation; its deadline is NOT the
+                # follower's. A follower with headroom re-dispatches (its own
+                # deadline still applies there); one without resolves with
+                # its OWN typed response, never the leader's (own rid/latency)
+                if (
+                    p.deadline_t is None or time.perf_counter() <= p.deadline_t
+                ) and _regen_depth < 2:
+                    regen.append(i)
+                    continue
+                with self._lock:
+                    self.stats.expired += 1
+                outcomes[i] = CacheResponse(
+                    None, DEADLINE_EXCEEDED, False, None, None, p.chosen, 0.0,
+                    time.perf_counter() - p.t_submit, p.rid,
+                )
                 continue
             out = CacheResponse(
                 resp.text, GENERATED, False, None, resp, resp.model, 0.0,
@@ -557,6 +593,13 @@ class CacheService:
                 client.stats.total_latency_s += out.latency_s
                 client._results[p.rid] = client._to_client_result(out)
             outcomes[i] = out
+        if regen:
+            redo = self._dispatch_phase(
+                [pendings[i] for i in regen], dedup=dedup,
+                _regen_depth=_regen_depth + 1,
+            )
+            for i, out in zip(regen, redo):
+                outcomes[i] = out
         return outcomes  # type: ignore[return-value]
 
     def _backfill(
@@ -575,15 +618,25 @@ class CacheService:
         groups: Dict[tuple, List[tuple]] = {}
         for p, r in eligible:
             groups.setdefault((p.request.cache_l1, p.request.cache_l2), []).append((p, r))
+        from repro.core.client import accepts_kwarg
+
         with self._cache_lock:
             for (l1_ok, l2_ok), members in groups.items():
                 prompts = [p.request.prompt for p, _ in members]
                 texts = [r.text for _, r in members]
                 vecs = np.stack([p.vec for p, _ in members])
+                ttls = [p.request.ttl_s for p, _ in members]
+                target = client.hierarchy if client.hierarchy is not None else client.cache
+                kw = {}
+                if any(t is not None for t in ttls) and accepts_kwarg(
+                    type(target), "insert_batch", "ttls"
+                ):
+                    kw["ttls"] = ttls
                 if client.hierarchy is not None:
                     if l1_ok or l2_ok:
                         client.hierarchy.insert_batch(
-                            prompts, texts, cache_l1=l1_ok, cache_l2=l2_ok, vecs=vecs
+                            prompts, texts, cache_l1=l1_ok, cache_l2=l2_ok,
+                            vecs=vecs, **kw,
                         )
                 elif l1_ok:
                     client.cache.insert_batch(
@@ -591,4 +644,5 @@ class CacheService:
                         texts,
                         metas=[{"model": r.model} for _, r in members],
                         vecs=vecs,
+                        **kw,
                     )

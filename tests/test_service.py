@@ -504,3 +504,75 @@ def test_dedup_disabled_on_non_cosine_metric():
         for rid in range(2)
     ]
     assert svc._dedup_misses(pendings, [0, 1]) == {}
+
+
+class StallingDeadlineLLM(LLMBackend):
+    """Deadline-aware backend that stalls exactly long enough for a deadline
+    carried into ``generate_batch`` to pass mid-generation: those prompts
+    come back ``expired=True``, the rest generate normally. First call
+    blocks on ``gate`` like GatedLLM so tests can pile work behind it."""
+
+    name = "stalling"
+
+    def __init__(self, stall_s: float = 1.3):
+        self.stall_s = stall_s
+        self.calls = []
+        self.gate = threading.Event()
+        self.entered = threading.Event()
+
+    def generate_batch(self, prompts, max_tokens: int = 256,
+                       temperature: float = 0.0, deadlines=None):
+        self.calls.append((tuple(prompts), deadlines))
+        if not self.entered.is_set():
+            self.entered.set()
+            assert self.gate.wait(timeout=10)
+        if deadlines is not None and any(d is not None for d in deadlines):
+            time.sleep(self.stall_s)
+        now = time.perf_counter()
+        out = []
+        for i, p in enumerate(prompts):
+            dl = deadlines[i] if deadlines is not None else None
+            if dl is not None and now > dl:
+                out.append(LLMResponse("", self.name, expired=True))
+            else:
+                out.append(LLMResponse(f"generated: {p}", self.name))
+        return out
+
+
+def test_deduped_follower_regenerates_when_leader_expires_mid_generation():
+    """Regression: a deduped follower must not inherit its leader's
+    mid-generation deadline expiry. A follower with headroom re-dispatches
+    and generates; one whose own deadline also passed resolves with its OWN
+    typed DEADLINE_EXCEEDED response (own request_id, own latency)."""
+    backend = StallingDeadlineLLM(stall_s=1.3)
+    client, cache = _client(backend=backend)
+    cache.lookup_batch(["warm 1"])  # compile outside the timing-sensitive window
+    with CacheService(client, max_batch=8, max_wait_ms=2.0) as svc:
+        blocker = svc.submit(CacheRequest("blocker question zzz"))
+        assert backend.entered.wait(timeout=10)
+        # leader first (it becomes the dedup leader), then two followers
+        lead_f = svc.submit(CacheRequest("the shared doomed prompt", deadline_s=1.0))
+        free_f = svc.submit(CacheRequest("the shared doomed prompt"))
+        tight_f = svc.submit(CacheRequest("the shared doomed prompt", deadline_s=1.0))
+        assert _wait_for(lambda: svc.scheduler_stats[1].submitted >= 4)
+        backend.gate.set()
+        lead = lead_f.result(timeout=15)
+        free = free_f.result(timeout=15)
+        tight = tight_f.result(timeout=15)
+        blocker.result(timeout=15)
+    # the leader's deadline passed while the backend stalled
+    assert lead.status == DEADLINE_EXCEEDED and lead.text is None
+    # the deadline-free follower regenerated instead of inheriting the expiry
+    assert free.status == GENERATED
+    assert free.text == "generated: the shared doomed prompt"
+    assert free.request_id != lead.request_id
+    # the tight follower had no headroom left: its OWN typed expiry, own rid
+    assert tight.status == DEADLINE_EXCEEDED
+    assert tight.request_id not in (lead.request_id, free.request_id)
+    assert svc.stats.deduped == 2
+    assert svc.stats.expired == 2  # leader mid-generation + tight follower
+    assert svc.stats.generated == 2  # blocker + the follower's regeneration
+    # three backend calls: blocker, the stalled dedup group, the regen retry
+    assert len(backend.calls) == 3
+    prompts, ddls = backend.calls[2]
+    assert prompts == ("the shared doomed prompt",) and ddls is None
