@@ -1,0 +1,65 @@
+"""repro.analysis — JAX/Pallas-aware static analysis for this codebase.
+
+The repo's performance story rests on invariants no generic linter knows
+about: the hot read path must stay one fused device dispatch with zero
+host hops, jitted call sites must not retrace per request, the serving
+layer's hand-maintained locks must actually cover the state they claim
+to, donated device buffers must never be touched after donation, and the
+int32 logical clocks must rebase before they saturate. Each checker here
+encodes one of those invariants over the stdlib ``ast`` (no third-party
+dependencies), seeded with an interprocedural call graph so a host sync
+three calls below a ``jax.jit`` region is still caught.
+
+Run it as ``python -m repro.analysis [--baseline analysis_baseline.txt]``.
+Findings print as ``path:line: CODE message``. Grandfathered findings live
+in the committed baseline (keyed without line numbers, so they survive
+drift); new code suppresses an intentional finding inline with
+``# repro: noqa[CODE]`` plus a short justification.
+
+Codes:
+  RA101  host sync inside a jit/pallas-reachable function
+  RA201  retrace hazard at a jit creation/call site
+  RA202  Python branch on a traced value
+  RA301  guarded attribute accessed without its lock
+  RA401  donated buffer referenced after donation
+  RA501  int32 monotonic counter incremented without a rebase guard
+  RA502  float32 narrowing of an absolute timestamp
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from repro.analysis.core import Baseline, Finding, SourceModule, collect_modules
+
+CHECKERS: Dict[str, Callable] = {}
+
+
+def register(name: str) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        CHECKERS[name] = fn
+        return fn
+
+    return deco
+
+
+def run_checks(paths: List[str], root: str) -> List[Finding]:
+    """Parse ``paths`` (files or directories), run every registered checker,
+    and return suppression-filtered findings sorted by location."""
+    from repro.analysis.project import ProjectIndex
+    import repro.analysis.checkers  # noqa: F401 — registers the checkers
+
+    modules = collect_modules(paths, root)
+    project = ProjectIndex(modules)
+    findings: List[Finding] = []
+    for checker in CHECKERS.values():
+        findings.extend(checker(project))
+    by_rel = {m.rel: m for m in modules}
+    kept = [
+        f
+        for f in set(findings)
+        if not by_rel[f.path].suppressed(f.line, f.code)
+    ]
+    return sorted(kept, key=lambda f: (f.path, f.line, f.code, f.message))
+
+
+__all__ = ["Baseline", "Finding", "SourceModule", "CHECKERS", "register", "run_checks"]

@@ -1,0 +1,2 @@
+"""Importing this package registers every checker with the registry."""
+from repro.analysis.checkers import donation, host_sync, locks, overflow, retrace  # noqa: F401

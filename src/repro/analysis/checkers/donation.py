@@ -1,0 +1,187 @@
+"""RA401 — donated device buffers referenced after donation.
+
+``donate_argnums`` lets the StoreBank scatter/free/touch jits reuse their
+input buffers in place — after the call, the donated array is dead and
+reading it raises (or worse, silently returns garbage under some
+backends). The safe idiom in this repo is to rebind every donated buffer
+from the jit's results *in the same statement*::
+
+    (self.buf, self.valid, ...) = _bank_scatter(self.buf, self.valid, ...)
+
+This checker builds a registry of donated jits (decorated defs,
+``self.x = jax.jit(..., donate_argnums=...)`` assignments, aliases of
+known donated jits, and locals returned from factories like
+``_build_program``), then flags any later *read* of a donated argument
+expression that was not rebound at the call site.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis import register
+from repro.analysis.core import Finding
+from repro.analysis.project import FuncNode, ProjectIndex, dotted
+
+
+def _donated_registry(project: ProjectIndex):
+    by_name: Dict[Tuple[str, str], Set[int]] = {}  # (module, func name) -> positions
+    by_attr: Dict[str, Set[int]] = {}  # attribute name -> positions (class-agnostic)
+    factories: Dict[int, Set[int]] = {}  # factory def id -> union of donate positions
+
+    for root in project.jit_roots:
+        if not root.donate:
+            continue
+        node = root.func.node
+        rel = root.func.module.src.rel
+        if isinstance(node, FuncNode) and root.func.cls is None:
+            by_name[(rel, node.name)] = by_name.get((rel, node.name), set()) | root.donate
+        # Call-form roots (`self.x = jax.jit(...)`) are recovered from the
+        # assignment scan below.
+
+    for mod in project.modules:
+        src = mod.src
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                continue
+            tgt = node.targets[0]
+            val = node.value
+            donate = _donate_of_jit_call(project, mod, val)
+            if donate:
+                if isinstance(tgt, ast.Attribute):
+                    by_attr[tgt.attr] = by_attr.get(tgt.attr, set()) | donate
+                elif isinstance(tgt, ast.Name):
+                    by_name[(src.rel, tgt.id)] = by_name.get((src.rel, tgt.id), set()) | donate
+            elif isinstance(tgt, ast.Attribute) and isinstance(val, ast.Name):
+                # Alias: self._free_jit = _bank_free
+                known = by_name.get((src.rel, val.id))
+                if known:
+                    by_attr[tgt.attr] = by_attr.get(tgt.attr, set()) | known
+
+    # Factories: module-level defs whose returns are jax.jit(..., donate_argnums=...).
+    for mod in project.modules:
+        for infos in mod.defs.values():
+            for fi in infos:
+                if not isinstance(fi.node, FuncNode):
+                    continue
+                union: Set[int] = set()
+                for sub in ast.walk(fi.node):
+                    if isinstance(sub, ast.Return) and sub.value is not None:
+                        union |= _donate_of_jit_call(project, mod, sub.value)
+                if union:
+                    factories[id(fi.node)] = union
+    return by_name, by_attr, factories
+
+
+def _donate_of_jit_call(project: ProjectIndex, mod, node: ast.AST) -> Set[int]:
+    if not isinstance(node, ast.Call) or project._jit_kind(mod, node.func) != "jit":
+        return set()
+    donate: Set[int] = set()
+    for kw in node.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            donate |= project._const_ints(kw.value)
+    return donate
+
+
+def _assigned_names(stmt: ast.stmt) -> Set[str]:
+    if not isinstance(stmt, ast.Assign):
+        return set()
+    out: Set[str] = set()
+    for tgt in stmt.targets:
+        elts = tgt.elts if isinstance(tgt, (ast.Tuple, ast.List)) else [tgt]
+        for e in elts:
+            text = dotted(e)
+            if text:
+                out.add(text)
+    return out
+
+
+def _statements_after(src, stmt: ast.stmt) -> List[ast.stmt]:
+    """Statements that can execute after ``stmt``: suffixes of every
+    enclosing block, plus whole bodies of enclosing loops (a later
+    iteration re-executes the top of the loop)."""
+    after: List[ast.stmt] = []
+    cur: ast.AST = stmt
+    while True:
+        parent = src.parent.get(cur)
+        if parent is None:
+            break
+        for field in ("body", "orelse", "finalbody", "handlers"):
+            block = getattr(parent, field, None)
+            if isinstance(block, list) and cur in block:
+                after.extend(block[block.index(cur) + 1 :])
+        if isinstance(parent, (ast.For, ast.While)):
+            after.extend(parent.body)
+        if isinstance(parent, FuncNode):
+            break
+        cur = parent
+    return after
+
+
+@register("donation")
+def check(project: ProjectIndex) -> List[Finding]:
+    findings: List[Finding] = []
+    by_name, by_attr, factories = _donated_registry(project)
+
+    for mod in project.modules:
+        src = mod.src
+        for func in [n for n in ast.walk(src.tree) if isinstance(n, FuncNode)]:
+            # Locals bound from donated-jit factories inside this function.
+            local_donated: Dict[str, Set[int]] = {}
+            for stmt in ast.walk(func):
+                if (
+                    isinstance(stmt, ast.Assign)
+                    and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)
+                    and isinstance(stmt.value, ast.Call)
+                ):
+                    callee = project.resolve_call(mod, stmt.value)
+                    if callee is not None and id(callee.node) in factories:
+                        local_donated[stmt.targets[0].id] = factories[id(callee.node)]
+
+            for node in ast.walk(func):
+                if not isinstance(node, ast.Call):
+                    continue
+                positions = _donated_positions(mod, node, by_name, by_attr, local_donated)
+                if not positions:
+                    continue
+                stmt = src.stmt_of(node)
+                rebound = _assigned_names(stmt)
+                callee_text = dotted(node.func) or "<jit>"
+                for pos in sorted(positions):
+                    if pos >= len(node.args):
+                        continue
+                    expr = dotted(node.args[pos])
+                    if expr is None or expr in rebound:
+                        continue
+                    for later in _statements_after(src, stmt):
+                        for use in ast.walk(later):
+                            if (
+                                isinstance(use, (ast.Attribute, ast.Name))
+                                and isinstance(getattr(use, "ctx", None), ast.Load)
+                                and dotted(use) == expr
+                            ):
+                                findings.append(
+                                    Finding(
+                                        src.rel,
+                                        use.lineno,
+                                        "RA401",
+                                        f"`{expr}` was donated to `{callee_text}` "
+                                        f"(line {node.lineno}) and read afterwards — "
+                                        "a donated buffer is dead after the call; "
+                                        "rebind it from the jit's results",
+                                    )
+                                )
+                                break  # one finding per later statement is enough
+    return findings
+
+
+def _donated_positions(mod, call: ast.Call, by_name, by_attr, local_donated) -> Set[int]:
+    fn = call.func
+    if isinstance(fn, ast.Name):
+        if fn.id in local_donated:
+            return local_donated[fn.id]
+        return by_name.get((mod.src.rel, fn.id), set())
+    if isinstance(fn, ast.Attribute):
+        return by_attr.get(fn.attr, set())
+    return set()

@@ -1,0 +1,63 @@
+"""RA101 — implicit device→host syncs inside jit/pallas-reachable code.
+
+The zero-host-hop contract (PR 5/6) is that everything between embed and
+decide runs as one device program. A stray ``.item()``, ``float()`` on a
+traced array, or ``np.asarray`` of a jnp value forces a blocking transfer
+and silently re-introduces the host round-trip the fused read path was
+built to remove. Device regions are every function reachable (through the
+call graph) from a ``jax.jit`` / ``pallas_call`` / ``shard_map`` root.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis import register
+from repro.analysis.core import Finding
+from repro.analysis.project import ProjectIndex, dotted
+
+_HOST_BUILTINS = {"float", "int", "bool", "complex"}
+_HOST_METHODS = {"item", "tolist", "block_until_ready", "copy_to_host_async"}
+_NUMPY_FUNCS = {"asarray", "array", "copy", "ascontiguousarray"}
+
+
+@register("host-sync")
+def check(project: ProjectIndex) -> List[Finding]:
+    findings: List[Finding] = []
+    for fi in project.device_funcs.values():
+        mod = fi.module
+        numpy_aliases = {
+            alias for alias, target in mod.import_mods.items() if target == "numpy"
+        }
+        body = fi.node.body if isinstance(fi.node.body, list) else [fi.node.body]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if not isinstance(node, ast.Call):
+                    continue
+                msg = None
+                fn = node.func
+                if isinstance(fn, ast.Attribute) and fn.attr in _HOST_METHODS and not node.args:
+                    msg = (
+                        f".{fn.attr}() forces a device->host sync inside "
+                        f"device region `{fi.qualname}`"
+                    )
+                elif isinstance(fn, ast.Name) and fn.id in _HOST_BUILTINS and node.args:
+                    msg = (
+                        f"host {fn.id}() conversion inside device region "
+                        f"`{fi.qualname}` blocks on a device->host transfer"
+                    )
+                elif isinstance(fn, ast.Attribute) and isinstance(fn.value, ast.Name):
+                    base, attr = fn.value.id, fn.attr
+                    if base in numpy_aliases and attr in _NUMPY_FUNCS:
+                        msg = (
+                            f"{base}.{attr}() materializes a device value on host "
+                            f"inside device region `{fi.qualname}`"
+                        )
+                    elif dotted(fn) == "jax.device_get":
+                        msg = (
+                            f"jax.device_get inside device region `{fi.qualname}` "
+                            "is a host round-trip"
+                        )
+                if msg:
+                    findings.append(Finding(mod.src.rel, node.lineno, "RA101", msg))
+    return findings

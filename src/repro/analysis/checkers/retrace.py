@@ -1,0 +1,170 @@
+"""RA201/RA202 — retrace hazards (the PR-3 per-batch-size stall class).
+
+RA201 flags jit *construction/call* sites that defeat the compile cache:
+a ``jax.jit(...)`` invoked immediately (fresh trace per call), a jit
+built inside a loop without being cached into a subscript/attribute, an
+unhashable literal passed to a known static parameter, and a static
+argument derived from per-request sizes (``len(...)`` / ``.shape``)
+without going through the power-of-two bucketing helpers.
+
+RA202 flags Python ``if``/``while`` branches on traced parameters inside
+jit root functions — those burn a concrete value into the trace and
+retrace (or crash) on the next distinct input. Parameters bound via
+``static_argnames``/``static_argnums`` or ``functools.partial`` are
+exempt by construction.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from repro.analysis import register
+from repro.analysis.core import Finding
+from repro.analysis.project import FuncNode, JitRoot, ProjectIndex, dotted
+
+_CACHED_TARGET = (ast.Subscript, ast.Attribute)
+
+
+def _is_jit_call(project: ProjectIndex, mod, node: ast.Call) -> bool:
+    return project._jit_kind(mod, node.func) == "jit"
+
+
+def _unhashable(node: ast.AST) -> bool:
+    return isinstance(
+        node,
+        (ast.List, ast.Set, ast.Dict, ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp),
+    )
+
+
+def _size_derived(node: ast.AST) -> bool:
+    """True when the expression computes a per-request size (len/.shape)
+    without routing through a bucketing helper."""
+    text = ast.unparse(node)
+    if "bucket" in text:
+        return False
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) and sub.func.id == "len":
+            return True
+        if isinstance(sub, ast.Attribute) and sub.attr == "shape":
+            return True
+    return False
+
+
+@register("retrace")
+def check(project: ProjectIndex) -> List[Finding]:
+    findings: List[Finding] = []
+
+    # Map jitted-def nodes -> their static parameter names, for call-site
+    # checks against known jitted functions.
+    statics_by_def: Dict[int, JitRoot] = {}
+    for root in project.jit_roots:
+        if isinstance(root.func.node, FuncNode):
+            statics_by_def[id(root.func.node)] = root
+
+    for mod in project.modules:
+        src = mod.src
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if _is_jit_call(project, mod, node):
+                parent = src.parent.get(node)
+                # jax.jit(f)(args...) — a fresh trace on every call.
+                if isinstance(parent, ast.Call) and parent.func is node:
+                    findings.append(
+                        Finding(
+                            src.rel,
+                            node.lineno,
+                            "RA201",
+                            "jax.jit(...) invoked immediately — the traced function is "
+                            "rebuilt (and retraced) on every call; hoist the jit to "
+                            "module/init scope or cache it",
+                        )
+                    )
+                # jit constructed inside a loop without a subscript/attribute
+                # cache slot to land in.
+                elif any(src.enclosing(node, (ast.For, ast.While))):
+                    stmt = src.stmt_of(node)
+                    cached = isinstance(stmt, ast.Assign) and all(
+                        isinstance(t, _CACHED_TARGET) for t in stmt.targets
+                    )
+                    if not cached:
+                        findings.append(
+                            Finding(
+                                src.rel,
+                                node.lineno,
+                                "RA201",
+                                "jax.jit(...) constructed inside a loop without being "
+                                "cached — each iteration pays a full retrace",
+                            )
+                        )
+                continue
+
+            # Calls *to* known jitted functions: inspect static arguments.
+            callee = project.resolve_call(mod, node)
+            root = statics_by_def.get(id(callee.node)) if callee else None
+            if root is None or not root.statics:
+                continue
+            params = root.func.params
+            static_args = []
+            for i, arg in enumerate(node.args):
+                if i < len(params) and params[i] in root.statics:
+                    static_args.append((params[i], arg))
+            for kw in node.keywords:
+                if kw.arg in root.statics:
+                    static_args.append((kw.arg, kw.value))
+            for name, value in static_args:
+                if _unhashable(value):
+                    findings.append(
+                        Finding(
+                            src.rel,
+                            value.lineno,
+                            "RA201",
+                            f"unhashable literal passed to static arg `{name}` of "
+                            f"jitted `{root.func.qualname}` — every call retraces; "
+                            "pass a tuple or hashable scalar",
+                        )
+                    )
+                elif _size_derived(value):
+                    findings.append(
+                        Finding(
+                            src.rel,
+                            value.lineno,
+                            "RA201",
+                            f"static arg `{name}` of jitted `{root.func.qualname}` is "
+                            "derived from a per-request size — bucket it "
+                            "(see store_bank.bucket_len) or the compile cache grows "
+                            "per distinct size",
+                        )
+                    )
+
+    # RA202: branches on traced parameters inside jit roots.
+    seen: Set[int] = set()
+    for root in project.jit_roots:
+        node = root.func.node
+        if not isinstance(node, FuncNode) or id(node) in seen:
+            continue
+        seen.add(id(node))
+        traced = {
+            p for p in root.func.params if p not in root.statics and p not in ("self", "cls")
+        }
+        if not traced:
+            continue
+        src = root.func.module.src
+        for sub in ast.walk(node):
+            if isinstance(sub, (ast.If, ast.While, ast.IfExp)):
+                test_names = {
+                    n.id for n in ast.walk(sub.test) if isinstance(n, ast.Name)
+                }
+                hit = test_names & traced
+                if hit:
+                    findings.append(
+                        Finding(
+                            src.rel,
+                            sub.test.lineno,
+                            "RA202",
+                            f"Python branch on traced value `{sorted(hit)[0]}` inside "
+                            f"jitted `{root.func.qualname}` — use jnp.where/lax.cond "
+                            "or mark the arg static",
+                        )
+                    )
+    return findings

@@ -1,0 +1,314 @@
+"""Interprocedural index: imports, jit/pallas roots, call graph, donation map.
+
+The index is deliberately syntactic — it resolves names through ``import``
+aliases, module-level defs, same-class methods, and nested defs, which is
+enough to follow this repo's dispatch structure (``jax.jit`` over local
+functions, ``functools.partial``-bound kernels, donated jits stashed on
+``self``) without a type checker.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import SourceModule
+
+FuncNode = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """`a.b.c` text for Name/Attribute chains, None for anything else."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+@dataclass
+class FuncInfo:
+    module: "ModuleIndex"
+    node: ast.AST  # FunctionDef / AsyncFunctionDef / Lambda
+    qualname: str
+    cls: Optional[str] = None
+
+    @property
+    def params(self) -> List[str]:
+        a = self.node.args
+        return [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+
+
+@dataclass
+class JitRoot:
+    func: FuncInfo
+    statics: Set[str] = field(default_factory=set)
+    donate: Set[int] = field(default_factory=set)
+    kind: str = "jit"  # jit | pallas | shard_map
+
+
+class ModuleIndex:
+    def __init__(self, src: SourceModule):
+        self.src = src
+        self.import_mods: Dict[str, str] = {}  # alias -> dotted module
+        self.import_syms: Dict[str, Tuple[str, str]] = {}  # name -> (module, symbol)
+        self.defs: Dict[str, List[FuncInfo]] = {}
+        self.methods: Dict[Tuple[str, str], FuncInfo] = {}
+        self.classes: Dict[str, ast.ClassDef] = {}
+        self._scan()
+
+    def _scan(self) -> None:
+        for node in ast.walk(self.src.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    self.import_mods[alias.asname or alias.name.split(".")[0]] = alias.name
+            elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+                for alias in node.names:
+                    self.import_syms[alias.asname or alias.name] = (node.module, alias.name)
+            elif isinstance(node, ast.ClassDef):
+                self.classes[node.name] = node
+        for node in ast.walk(self.src.tree):
+            if isinstance(node, FuncNode):
+                cls = self._owning_class(node)
+                qual = f"{cls}.{node.name}" if cls else node.name
+                info = FuncInfo(self, node, qual, cls)
+                self.defs.setdefault(node.name, []).append(info)
+                if cls:
+                    self.methods[(cls, node.name)] = info
+
+    def _owning_class(self, node: ast.AST) -> Optional[str]:
+        cur = self.src.parent.get(node)
+        if isinstance(cur, ast.ClassDef):
+            return cur.name
+        return None
+
+    def alias_for(self, target_module: str) -> Optional[str]:
+        for alias, mod in self.import_mods.items():
+            if mod == target_module:
+                return alias
+        return None
+
+    def resolve_local(self, name: str, at: ast.AST) -> Optional[FuncInfo]:
+        """Resolve ``name`` to a def visible from ``at``: nested defs of the
+        enclosing function chain first, then module level."""
+        candidates = self.defs.get(name)
+        if not candidates:
+            return None
+        enclosing = set(self.src.enclosing(at, FuncNode))
+        for info in candidates:
+            if self.src.parent.get(info.node) in enclosing:
+                return info
+        for info in candidates:
+            if info.cls is None and isinstance(self.src.parent.get(info.node), ast.Module):
+                return info
+        return candidates[0]
+
+
+class ProjectIndex:
+    def __init__(self, modules: Sequence[SourceModule]):
+        self.modules: List[ModuleIndex] = [ModuleIndex(m) for m in modules]
+        self.by_name: Dict[str, ModuleIndex] = {
+            m.src.modname: m for m in self.modules if m.src.modname
+        }
+        self.jit_roots: List[JitRoot] = []
+        for m in self.modules:
+            self._find_roots(m)
+        self.device_funcs: Dict[int, FuncInfo] = {}
+        self._propagate()
+
+    # -- name resolution ---------------------------------------------------
+    def resolve_call(self, mod: ModuleIndex, call: ast.Call) -> Optional[FuncInfo]:
+        fn = call.func
+        if isinstance(fn, ast.Name):
+            info = mod.resolve_local(fn.id, call)
+            if info is not None:
+                return info
+            imp = mod.import_syms.get(fn.id)
+            if imp and imp[0] in self.by_name:
+                other = self.by_name[imp[0]]
+                for cand in other.defs.get(imp[1], []):
+                    if cand.cls is None:
+                        return cand
+            return None
+        if isinstance(fn, ast.Attribute):
+            if isinstance(fn.value, ast.Name):
+                if fn.value.id == "self":
+                    cls = self._enclosing_class(mod, call)
+                    if cls:
+                        return mod.methods.get((cls, fn.attr))
+                    return None
+                target = mod.import_mods.get(fn.value.id)
+                if target is None and fn.value.id in mod.import_syms:
+                    # `from repro.models import transformer as T` — a module
+                    # imported as a symbol.
+                    pkg, sym = mod.import_syms[fn.value.id]
+                    target = f"{pkg}.{sym}"
+                if target in self.by_name:
+                    other = self.by_name[target]
+                    for cand in other.defs.get(fn.attr, []):
+                        if cand.cls is None:
+                            return cand
+        return None
+
+    def _enclosing_class(self, mod: ModuleIndex, node: ast.AST) -> Optional[str]:
+        for anc in mod.src.enclosing(node, (ast.ClassDef,)):
+            return anc.name
+        return None
+
+    # -- jit root discovery ------------------------------------------------
+    def _jit_kind(self, mod: ModuleIndex, fn: ast.AST) -> Optional[str]:
+        text = dotted(fn)
+        if text is None:
+            return None
+        if text == "jax.jit" or text.endswith(".jit"):
+            return "jit"
+        if text == "jit" and mod.import_syms.get("jit", ("", ""))[0].startswith("jax"):
+            return "jit"
+        if text.endswith("pallas_call"):
+            return "pallas"
+        if text.endswith("shard_map"):
+            return "shard_map"
+        return None
+
+    @staticmethod
+    def _const_names(node: ast.AST) -> Set[str]:
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            return {node.value}
+        if isinstance(node, (ast.Tuple, ast.List)):
+            out: Set[str] = set()
+            for elt in node.elts:
+                if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                    out.add(elt.value)
+            return out
+        return set()
+
+    @staticmethod
+    def _const_ints(node: ast.AST) -> Set[int]:
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            return {node.value}
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return {
+                e.value
+                for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, int)
+            }
+        return set()
+
+    def _jit_opts(self, call: ast.Call, target: FuncInfo) -> Tuple[Set[str], Set[int]]:
+        statics: Set[str] = set()
+        donate: Set[int] = set()
+        params = target.params
+        for kw in call.keywords:
+            if kw.arg in ("static_argnames",):
+                statics |= self._const_names(kw.value)
+            elif kw.arg in ("static_argnums", "static_argnum"):
+                for i in self._const_ints(kw.value):
+                    if 0 <= i < len(params):
+                        statics.add(params[i])
+            elif kw.arg in ("donate_argnums", "donate_argnames"):
+                donate |= self._const_ints(kw.value)
+                statics_from_names = self._const_names(kw.value)
+                for name in statics_from_names:
+                    if name in params:
+                        donate.add(params.index(name))
+        return statics, donate
+
+    def _unwrap_partial(
+        self, mod: ModuleIndex, node: ast.AST
+    ) -> Tuple[Optional[ast.AST], Set[str], int]:
+        """Peel ``functools.partial(f, ...)``: returns (inner, bound kwarg
+        names, count of bound positional args)."""
+        if (
+            isinstance(node, ast.Call)
+            and dotted(node.func) in ("functools.partial", "partial")
+            and node.args
+        ):
+            kw = {k.arg for k in node.keywords if k.arg}
+            return node.args[0], kw, len(node.args) - 1
+        return None, set(), 0
+
+    def _target_info(self, mod: ModuleIndex, node: ast.AST, at: ast.AST):
+        """Resolve the function object a jit/pallas call wraps."""
+        statics: Set[str] = set()
+        inner, kw, npos = self._unwrap_partial(mod, node)
+        if inner is not None:
+            info = self._target_info(mod, inner, at)
+            if info is None:
+                return None
+            fi, extra = info
+            params = fi.params
+            extra |= kw
+            extra |= set(params[:npos])
+            return fi, extra
+        if isinstance(node, ast.Lambda):
+            return FuncInfo(mod, node, "<lambda>"), statics
+        if isinstance(node, ast.Name):
+            fi = mod.resolve_local(node.id, at)
+            if fi is None:
+                imp = mod.import_syms.get(node.id)
+                if imp and imp[0] in self.by_name:
+                    other = self.by_name[imp[0]]
+                    for cand in other.defs.get(imp[1], []):
+                        if cand.cls is None:
+                            fi = cand
+                            break
+            return (fi, statics) if fi else None
+        return None
+
+    def _find_roots(self, mod: ModuleIndex) -> None:
+        for node in ast.walk(mod.src.tree):
+            if isinstance(node, FuncNode):
+                for deco in node.decorator_list:
+                    kind = None
+                    statics: Set[str] = set()
+                    donate: Set[int] = set()
+                    if self._jit_kind(mod, deco):
+                        kind = self._jit_kind(mod, deco)
+                    elif isinstance(deco, ast.Call):
+                        if self._jit_kind(mod, deco.func):
+                            kind = self._jit_kind(mod, deco.func)
+                            fi = FuncInfo(mod, node, node.name, mod._owning_class(node))
+                            statics, donate = self._jit_opts(deco, fi)
+                        elif dotted(deco.func) in ("functools.partial", "partial") and deco.args:
+                            if self._jit_kind(mod, deco.args[0]):
+                                kind = self._jit_kind(mod, deco.args[0])
+                                fi = FuncInfo(mod, node, node.name, mod._owning_class(node))
+                                statics, donate = self._jit_opts(deco, fi)
+                    if kind:
+                        cls = mod._owning_class(node)
+                        qual = f"{cls}.{node.name}" if cls else node.name
+                        self.jit_roots.append(
+                            JitRoot(FuncInfo(mod, node, qual, cls), statics, donate, kind)
+                        )
+            elif isinstance(node, ast.Call):
+                kind = self._jit_kind(mod, node.func)
+                if not kind or not node.args:
+                    continue
+                info = self._target_info(mod, node.args[0], node)
+                if info is None:
+                    continue
+                fi, partial_statics = info
+                statics, donate = self._jit_opts(node, fi)
+                self.jit_roots.append(
+                    JitRoot(fi, statics | partial_statics, donate, kind)
+                )
+
+    # -- reachability ------------------------------------------------------
+    def _propagate(self) -> None:
+        queue: List[FuncInfo] = [r.func for r in self.jit_roots]
+        while queue:
+            fi = queue.pop()
+            if id(fi.node) in self.device_funcs:
+                continue
+            self.device_funcs[id(fi.node)] = fi
+            body = fi.node.body if isinstance(fi.node.body, list) else [fi.node.body]
+            for stmt in body:
+                for sub in ast.walk(stmt):
+                    if isinstance(sub, ast.Call):
+                        callee = self.resolve_call(fi.module, sub)
+                        if callee is not None and id(callee.node) not in self.device_funcs:
+                            queue.append(callee)
+
+    def is_device_func(self, node: ast.AST) -> bool:
+        return id(node) in self.device_funcs

@@ -116,6 +116,13 @@ class ModelConfig:
     # via kernel_interpret / REPRO_KERNEL_INTERPRET (repro.kernels.backend)
     use_pallas: bool = False
     kernel_interpret: Optional[bool] = None  # None = auto-select per backend
+    # similarity-top-k kernel tuning defaults, baked from the
+    # benchmarks/tune_topk.py sweep (block 512 / lanes_outer won the
+    # CPU-interpret smoke sweep — a smoke signal ONLY; re-run the sweep on
+    # real TPU/GPU hardware and update these). The REPRO_TOPK_BLOCK_N /
+    # REPRO_TOPK_GRID_ORDER env vars always win over these config values.
+    topk_block_n: Optional[int] = 512  # positive multiple of 128; None = leave env/default
+    topk_grid_order: Optional[str] = "lanes_outer"  # lanes_outer | blocks_outer | None
     optimizer: str = "adamw"  # "adamw" | "adamw8bit"
     grad_accum: int = 1  # microbatch count for train_step
     unroll: bool = False  # python-loop layers instead of lax.scan (exact HLO cost accounting)

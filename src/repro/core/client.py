@@ -217,15 +217,16 @@ class EnhancedClient:
         )
         self.stats = ClientStats()
         self.max_workers = max_workers
-        self._service = None  # lazily-built CacheService (repro.serving.service)
-        self._results: Dict[int, ClientResult] = {}
-        self._next_id = 0
+        # lazily-built CacheService (repro.serving.service)
+        self._service = None  # guarded-by: _state_lock
+        self._results: Dict[int, ClientResult] = {}  # guarded-by: _state_lock
+        self._next_id = 0  # guarded-by: _state_lock
         # client-owned locks, so several CacheService instances sharing this
         # client cannot tear them: _state_lock guards stats/_next_id/_results,
         # _cache_lock serializes store lookups against backfill scatters
         self._state_lock = threading.Lock()
         self._cache_lock = threading.RLock()
-        self._preferred_level = 0  # model-selection escalation state
+        self._preferred_level = 0  # guarded-by: _state_lock
 
     # -- service delegation ----------------------------------------------------
 
@@ -233,17 +234,19 @@ class EnhancedClient:
     def service(self):
         """The CacheService every request path delegates to. Built lazily
         (runtime import: core and serving reference each other)."""
-        if self._service is None:
+        if self._service is None:  # repro: noqa[RA301] — double-checked fast path; GIL-atomic read, confirmed under the lock below
             from repro.serving.service import CacheService
 
             with self._state_lock:  # concurrent first use must not build two
                 if self._service is None:
                     self._service = CacheService(self)
-        return self._service
+        return self._service  # repro: noqa[RA301] — monotonic once-set publish; rebuilt never, torn never (single reference assignment)
 
     def close(self) -> None:
-        if self._service is not None:
-            self._service.close()
+        with self._state_lock:
+            service = self._service
+        if service is not None:
+            service.close()
 
     @staticmethod
     def _to_client_result(resp: CacheResponse) -> ClientResult:
@@ -272,7 +275,9 @@ class EnhancedClient:
             return model
         if not self._order:
             raise RuntimeError("no backends registered")
-        return self._order[min(self._preferred_level, len(self._order) - 1)]
+        with self._state_lock:
+            level = self._preferred_level
+        return self._order[min(level, len(self._order) - 1)]
 
     def _context_for(self, request: CacheRequest, chosen: str) -> dict:
         """ThresholdPolicy context (§2) for one request."""
@@ -378,7 +383,8 @@ class EnhancedClient:
                 return backend.generate_batch(prompts, max_tokens, temperature)
             except Exception as e:  # noqa: BLE001 — failover on any backend error
                 tried.append((name, repr(e)))
-                self.stats.llm_errors += 1
+                with self._state_lock:
+                    self.stats.llm_errors += 1
         raise ConnectionError(f"all backends failed: {tried}")
 
     # -- parallel multi-LLM dispatch (§5.2) ---------------------------------------
@@ -422,7 +428,10 @@ class EnhancedClient:
         if result.from_cache:
             self.quality_ctl.record(satisfied)
         else:
-            if satisfied:
-                self._preferred_level = max(0, self._preferred_level - 1)
-            else:
-                self._preferred_level = min(len(self._order) - 1, self._preferred_level + 1)
+            with self._state_lock:
+                if satisfied:
+                    self._preferred_level = max(0, self._preferred_level - 1)
+                else:
+                    self._preferred_level = min(
+                        len(self._order) - 1, self._preferred_level + 1
+                    )

@@ -146,12 +146,15 @@ class SemanticCache:
             [e for e, _ in popped.values()],
         )
         out: Dict[int, CacheResult] = {}
+        # the sharded store keeps (query, response) payloads, not Entry rows —
+        # reconstruct from the TierEntry there
+        entry_table = getattr(self.store, "_entries", None)
         for i, s, slot in winners:
             te = popped[slot][0]
             idx = self.store._key_to_slot.get(te.key)
             entry = (
-                self.store._entries[idx]
-                if idx is not None  # promoted row already re-evicted
+                entry_table[idx]
+                if idx is not None and entry_table is not None
                 else Entry(te.key, te.query, te.response, dict(te.meta),
                            te.created_at, te.expires_at)
             )

@@ -209,6 +209,7 @@ class ShardedVectorStore:
         eviction: str = "lru",  # lru | lfu | fifo
         default_ttl_s: Optional[float] = None,
         staleness_weight: float = 0.0,
+        tier1=None,  # HostRamTier: eviction victims demote here, keyed by home shard
     ):
         assert eviction in ("lru", "lfu", "fifo")
         self.mesh = mesh
@@ -298,6 +299,118 @@ class ShardedVectorStore:
         self._key_to_slot: Dict[int, int] = {}
         self._slot_key: List[Optional[int]] = [None] * self.capacity
         self._free: List[int] = []
+        # tier-1 demotion target + raw-row host mirror (same contract as
+        # InMemoryVectorStore: eviction victims demote instead of vanishing;
+        # demoted entries remember their home shard lane in TierEntry.meta)
+        self.tier1 = None
+        self._host_rows: Optional[np.ndarray] = None
+        if tier1 is not None:
+            self.attach_tier1(tier1)
+
+    # -- tiering -------------------------------------------------------------
+
+    def attach_tier1(self, tier) -> None:
+        """Attach a host-RAM demotion tier (``repro.core.tiers.HostRamTier``).
+        Eviction victims demote into it instead of vanishing — matching the
+        in-memory lane view — with their home shard lane recorded in
+        ``TierEntry.meta['home_shard']`` so promotions can land back on the
+        shard whose counters/lifecycle they rode. A raw-row host mirror makes
+        demotion a numpy copy instead of a device pull on the eviction path."""
+        self.tier1 = tier
+        self._host_rows = np.array(
+            np.asarray(self.bank.buf).reshape(self.capacity, self.dim), np.float32
+        )
+
+    def _demote(self, idx: int) -> None:
+        """Hand the (still-live) entry in flat slot ``idx`` to tier 1."""
+        if self.tier1 is None:
+            return
+        payload = self.payloads[idx]
+        key = self._slot_key[idx]
+        if payload is None or key is None:
+            return
+        lane, within = self._lane_within(idx)
+        expires_rel = float(self.bank.h_expires[lane, within])
+        if expires_rel <= self.bank.rel_now():
+            return  # dead entries are dropped, never demoted
+        from repro.core.tiers import TierEntry
+
+        row = (
+            self._host_rows[idx]
+            if self._host_rows is not None
+            else np.asarray(self._db[idx])
+        )
+        self.tier1.put(
+            TierEntry(
+                key=key,
+                query=payload[0],
+                response=payload[1],
+                meta={"home_shard": lane},
+                created_at=self.bank.to_abs(float(self.bank.h_created[lane, within])),
+                expires_at=self.bank.to_abs(expires_rel),
+                access_count=int(self.bank.access_count[lane, within]),
+            ),
+            np.array(row, np.float32),
+        )
+
+    def _free_slot_in_lane(self, lane) -> Optional[int]:
+        """A reusable freed slot on the given lane, if any — the home-shard
+        preference promotions use before falling back to global placement."""
+        if not isinstance(lane, int) or not 0 <= lane < self.n_shards:
+            return None
+        lo = lane * self.cap_local
+        hi = lo + self.cap_local
+        for pos in range(len(self._free) - 1, -1, -1):
+            if lo <= self._free[pos] < hi:
+                return self._free.pop(pos)
+        return None
+
+    def _restore_batch(self, rows: np.ndarray, tier_entries: List) -> None:
+        """Promote tier-1 entries back into the sharded bank through the SAME
+        donated batched scatter inserts ride. Keys, created/expires stamps,
+        and access counts are preserved (a promoted hit is byte-identical to
+        its pre-demotion self); each entry prefers a freed slot on its home
+        shard lane and falls back to the global cursor/eviction policy."""
+        n = len(tier_entries)
+        if n == 0:
+            return
+        rows = np.asarray(rows, np.float32).reshape(n, self.dim)
+        idxs: List[int] = []
+        for j, te in enumerate(tier_entries):
+            if self._seq >= _TICK_COMPACT_AT:
+                self._seq = self.bank.compact_seqs()
+            home = te.meta.get("home_shard") if isinstance(te.meta, dict) else None
+            idx = self._free_slot_in_lane(home)
+            if idx is None:
+                idx = self._next_index()
+            old = self._slot_key[idx]
+            if old is not None:  # promotion displaced a live entry: demote it
+                self._demote(idx)
+                self._key_to_slot.pop(old, None)
+            else:
+                self.size += 1
+            self.payloads[idx] = (te.query, te.response)
+            self._slot_key[idx] = te.key
+            self._key_to_slot[te.key] = idx
+            self._next_key = max(self._next_key, te.key + 1)
+            lane, within = self._lane_within(idx)
+            self.bank.note_insert(
+                lane, within, self._seq,
+                created=self.bank.to_rel(te.created_at),
+                expires=(
+                    self.bank.to_rel(te.expires_at)
+                    if np.isfinite(te.expires_at)
+                    else None
+                ),
+                count=int(te.access_count),
+            )
+            self._seq += 1
+            idxs.append(idx)
+            if self._host_rows is not None:
+                # mirror immediately (not after the loop): a later placement
+                # in this same batch may evict this row and demote its vector
+                self._host_rows[idx] = rows[j]
+        self._scatter_rows(idxs, rows)
 
     # flat views of the banked buffers (the pre-bank [N, D] layout; lane-major
     # flattening preserves the old global slot numbering)
@@ -343,6 +456,7 @@ class ShardedVectorStore:
         """Host-side bookkeeping for one placement (shared by add/add_batch)."""
         old = self._slot_key[idx]
         if old is not None:  # policy eviction overwrote a live entry
+            self._demote(idx)  # still-live victims move to tier 1, not /dev/null
             self._key_to_slot.pop(old, None)
         else:
             self.size += 1
@@ -386,7 +500,10 @@ class ShardedVectorStore:
             ttl_s: Optional[float] = None) -> int:
         idx = self._next_index()
         key = self._claim_slot(idx, query, response, ttl_s)
-        self._scatter_rows([idx], np.asarray(vec, np.float32).reshape(1, self.dim))
+        row = np.asarray(vec, np.float32).reshape(1, self.dim)
+        if self._host_rows is not None:
+            self._host_rows[idx] = row[0]
+        self._scatter_rows([idx], row)
         return key
 
     def add_batch(self, vecs: np.ndarray, queries, responses,
@@ -410,6 +527,10 @@ class ShardedVectorStore:
             idx = self._next_index()
             keys.append(self._claim_slot(idx, queries[j], responses[j], ttls[j]))
             idxs.append(idx)
+            if self._host_rows is not None:
+                # mirror immediately (not after the loop): a later claim in
+                # this same batch may evict this row and demote its vector
+                self._host_rows[idx] = rows[j]
         self._scatter_rows(idxs, rows)
         return keys
 
@@ -451,7 +572,10 @@ class ShardedVectorStore:
                 withins.append(within)
         if lanes:
             self.bank.free_slots(lanes, withins)
-        return len(lanes)
+        dropped = len(lanes)
+        if self.tier1 is not None:  # age-based clears prune the tiers together
+            dropped += self.tier1.clear(older_than=older_than)
+        return dropped
 
     def __len__(self) -> int:
         return self.size

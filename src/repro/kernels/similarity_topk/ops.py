@@ -64,7 +64,7 @@ def default_block_n() -> int:
     raw = os.environ.get("REPRO_TOPK_BLOCK_N")
     if raw is None:
         return 512
-    v = int(raw)
+    v = int(raw)  # repro: noqa[RA101] — env string at trace time, not a traced value
     if v <= 0 or v % 128:
         raise ValueError(
             f"REPRO_TOPK_BLOCK_N={raw!r}: expected a positive multiple of 128"
@@ -82,6 +82,31 @@ def default_grid_order() -> str:
             f"REPRO_TOPK_GRID_ORDER={raw!r}: expected one of {_GRID_ORDERS}"
         )
     return v
+
+
+def apply_topk_tuning(
+    block_n: "int | None" = None, grid_order: "str | None" = None
+) -> None:
+    """Install config-level tuning defaults for the top-k kernels.
+
+    The launch configs bake the winners of the ``benchmarks/tune_topk.py``
+    sweep here (``ModelConfig.topk_block_n`` / ``topk_grid_order``). Values
+    land via ``os.environ.setdefault``, so an explicit
+    ``REPRO_TOPK_BLOCK_N`` / ``REPRO_TOPK_GRID_ORDER`` in the environment
+    always wins over the config. Invalid values fail fast here rather than
+    at first kernel trace."""
+    if block_n is not None:
+        if block_n <= 0 or block_n % 128:
+            raise ValueError(
+                f"topk_block_n={block_n!r}: expected a positive multiple of 128"
+            )
+        os.environ.setdefault("REPRO_TOPK_BLOCK_N", str(block_n))
+    if grid_order is not None:
+        if grid_order not in _GRID_ORDERS:
+            raise ValueError(
+                f"topk_grid_order={grid_order!r}: expected one of {_GRID_ORDERS}"
+            )
+        os.environ.setdefault("REPRO_TOPK_GRID_ORDER", grid_order)
 
 
 def _block_for(N: int, block_n: int) -> int:

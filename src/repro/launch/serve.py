@@ -56,6 +56,12 @@ def main(argv=None):
         from repro.kernels.backend import set_interpret_override
 
         set_interpret_override(cfg.kernel_interpret)
+    # top-k kernel tuning defaults from the benchmarks/tune_topk.py sweep
+    # (CPU-interpret winners are a smoke signal only — re-sweep on real
+    # hardware); explicit REPRO_TOPK_* env vars win over the config
+    from repro.kernels.similarity_topk.ops import apply_topk_tuning
+
+    apply_topk_tuning(cfg.topk_block_n, cfg.topk_grid_order)
     engine = ServingEngine(cfg, max_batch=args.max_batch, max_seq=256)
     backend = ModelBackend(args.arch, engine)
 

@@ -152,7 +152,7 @@ def moe_ffn(params, cfg, x: jax.Array, capacity_factor: float = 0.0):
     B, S, D = x.shape
     T = B * S
     cf = capacity_factor or mo.capacity_factor
-    capacity = max(int(math.ceil(T * mo.top_k / mo.num_experts * cf)), min(8, T))
+    capacity = max(int(math.ceil(T * mo.top_k / mo.num_experts * cf)), min(8, T))  # repro: noqa[RA101] — shape math on Python ints at trace time
 
     x_flat = x.reshape(T, D)
     expert_idx, gates = _route(params, cfg, x_flat)
@@ -184,7 +184,7 @@ def _moe_ffn_sharded(params, cfg, x: jax.Array, mesh, capacity_factor: float = 0
     E_loc = mo.num_experts // n_model
     T_loc = (B // n_batch_shards) * S
     cf = capacity_factor or mo.capacity_factor
-    capacity = max(int(math.ceil(T_loc * mo.top_k / mo.num_experts * cf)), min(8, T_loc))
+    capacity = max(int(math.ceil(T_loc * mo.top_k / mo.num_experts * cf)), min(8, T_loc))  # repro: noqa[RA101] — shape math on Python ints at trace time
 
     batch_spec = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
 

@@ -53,12 +53,12 @@ Params = Dict[str, Any]
 def layer_meta(cfg, n: int, offset: int = 0):
     """(window[n] i32, theta[n] f32, use_rope[n] bool) built from attn_pattern."""
     kinds = [cfg.attn_pattern[(offset + i) % len(cfg.attn_pattern)] for i in range(n)]
-    window = np.array([cfg.window_size if k == "local" else 0 for k in kinds], np.int32)
+    window = np.array([cfg.window_size if k == "local" else 0 for k in kinds], np.int32)  # repro: noqa[RA101] — builds config metadata from Python scalars at trace time
     theta_local = cfg.rope_theta_local or cfg.rope_theta
-    theta = np.array(
+    theta = np.array(  # repro: noqa[RA101] — config metadata from Python scalars at trace time
         [theta_local if k == "local" else cfg.rope_theta for k in kinds], np.float32
     )
-    use_rope = np.array([k != "nope_global" for k in kinds], bool)
+    use_rope = np.array([k != "nope_global" for k in kinds], bool)  # repro: noqa[RA101] — config metadata from Python scalars at trace time
     return jnp.asarray(window), jnp.asarray(theta), jnp.asarray(use_rope)
 
 

@@ -100,10 +100,10 @@ class BatchCoalescer:
         self.stats = CoalescerStats()
         # entries: (-priority, deadline_key, seq, item, future) — seq is unique,
         # so comparisons never reach the (unorderable) item
-        self._heap: List[tuple] = []
-        self._seq = 0
+        self._heap: List[tuple] = []  # guarded-by: _cv
+        self._seq = 0  # guarded-by: _cv
         self._cv = threading.Condition()
-        self._closed = False
+        self._closed = False  # guarded-by: _cv
         self._thread = threading.Thread(target=self._collect, daemon=True)
         self._thread.start()
 

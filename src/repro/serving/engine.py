@@ -57,9 +57,16 @@ class ServingEngine:
         self.eos_id = eos_id
         self.slots = SlotManager(max_batch)
         self.cache, _ = T.init_cache(cfg, max_batch, max_seq)
-        self.pending: List[Request] = []
+        # the submission queue is the engine's only cross-thread surface:
+        # CacheService's miss dispatcher and sync callers may submit while
+        # another thread drives run() (see `# guarded-by:` convention in
+        # repro.serving.service)
+        self.pending: List[Request] = []  # guarded-by: _lock
+        self._next_rid = 0  # guarded-by: _lock
+        self._lock = threading.Lock()
+        # decode state (active/slots/cache/_key) is single-driver by design:
+        # whoever calls run() owns it (ModelBackend serializes drivers)
         self.active: Dict[int, Request] = {}
-        self._next_rid = 0
         self._key = jax.random.PRNGKey(seed + 1)
         self.metrics = {"prefill_tokens": 0, "decode_steps": 0, "requests": 0}
 
@@ -90,14 +97,26 @@ class ServingEngine:
 
     def submit(self, tokens, max_new_tokens: int = 32, temperature: float = 0.0,
                deadline_t: Optional[float] = None) -> int:
-        rid = self._next_rid
-        self._next_rid += 1
-        self.pending.append(
-            Request(rid, np.asarray(tokens, np.int32), max_new_tokens, temperature,
-                    submitted_at=time.perf_counter(), deadline_t=deadline_t)
-        )
+        return self._submit_req(tokens, max_new_tokens, temperature, deadline_t).rid
+
+    def _submit_req(self, tokens, max_new_tokens: int = 32, temperature: float = 0.0,
+                    deadline_t: Optional[float] = None) -> Request:
+        req = Request(0, np.asarray(tokens, np.int32), max_new_tokens, temperature,
+                      submitted_at=time.perf_counter(), deadline_t=deadline_t)
+        with self._lock:
+            req.rid = self._next_rid
+            self._next_rid += 1
+            self.pending.append(req)
         self.metrics["requests"] += 1
-        return rid
+        return req
+
+    def _pop_pending(self) -> Optional[Request]:
+        with self._lock:
+            return self.pending.pop(0) if self.pending else None
+
+    def _has_pending(self) -> bool:
+        with self._lock:
+            return bool(self.pending)
 
     def _expire(self, req: Request) -> None:
         req.done = True
@@ -106,8 +125,10 @@ class ServingEngine:
         self.metrics["deadline_cancels"] = self.metrics.get("deadline_cancels", 0) + 1
 
     def _admit(self) -> None:
-        while self.pending and self.slots.free:
-            req = self.pending.pop(0)
+        while self.slots.free:
+            req = self._pop_pending()
+            if req is None:
+                return
             if req.deadline_t is not None and time.perf_counter() > req.deadline_t:
                 self._expire(req)  # expired in queue: never claims a slot
                 continue
@@ -186,7 +207,7 @@ class ServingEngine:
 
     def run(self) -> None:
         """Drive until all submitted work completes (continuous batching)."""
-        while self.pending or self.active:
+        while self._has_pending() or self.active:
             self._admit()
             self._tick_decode()
 
@@ -199,14 +220,14 @@ class ServingEngine:
         canceled — its slot frees immediately for the next pending request
         and it comes back with ``expired=True`` and the partial tokens."""
         deadlines = deadlines if deadlines is not None else [None] * len(prompts)
-        rids = [
-            self.submit(p, max_new_tokens, temperature, deadline_t=d)
+        # hold the Request records directly — another thread's run() may admit
+        # (and drop from `pending`) anything we enqueue before we snapshot
+        reqs = [
+            self._submit_req(p, max_new_tokens, temperature, deadline_t=d)
             for p, d in zip(prompts, deadlines)
         ]
-        # capture request objects before they are deleted on completion
-        snapshot = {r.rid: r for r in self.pending}
         self.run()
-        return [snapshot[r] for r in rids]
+        return reqs
 
     def generate(self, prompts: List[np.ndarray], max_new_tokens: int = 32,
                  temperature: float = 0.0) -> List[List[int]]:
@@ -224,17 +245,21 @@ class ModelBackend(LLMBackend):
 
     def __init__(self, name: str, engine: ServingEngine, max_prompt_tokens: int = 32):
         self.name = name
-        self.engine = engine
-        self.max_prompt_tokens = max_prompt_tokens
         # the engine's slot/cache state is not reentrant: the CacheService
         # dispatcher and any sync caller must serialize their batches
+        self.engine = engine  # guarded-by: _lock
+        self.max_prompt_tokens = max_prompt_tokens
+        # immutable config captured up front so the lock-free tokenize/guard
+        # paths never reach through the guarded engine reference
+        self._vocab_size = engine.cfg.vocab_size
+        self._modality = engine.cfg.modality
         self._lock = threading.Lock()
 
     def _tokenize(self, prompt: str) -> np.ndarray:
         import hashlib
 
         words = prompt.split()[: self.max_prompt_tokens] or ["empty"]
-        V = self.engine.cfg.vocab_size
+        V = self._vocab_size
         ids = [
             int.from_bytes(hashlib.blake2b(w.encode(), digest_size=4).digest(), "little") % V
             for w in words
@@ -261,7 +286,7 @@ class ModelBackend(LLMBackend):
         slot, and resolves with ``expired=True`` (the service maps it to a
         typed ``deadline_exceeded`` response)."""
         t0 = time.perf_counter()
-        if self.engine.cfg.modality == "audio":
+        if self._modality == "audio":
             raise NotImplementedError("audio backends serve token streams, not text prompts")
         toks = [self._tokenize(p) for p in prompts]
         with self._lock:

@@ -32,6 +32,22 @@ resolves).
 thread — the compatibility path behind ``EnhancedClient.query`` /
 ``complete_batch``, which are now thin sync wrappers. ``asubmit`` /
 ``acomplete`` wrap the futures for asyncio callers.
+
+Lock discipline (`# guarded-by:` convention)
+--------------------------------------------
+The serving layer's mutable cross-thread state declares its lock with a
+trailing comment on the ``__init__`` assignment::
+
+    self._inflight = 0  # guarded-by: _lock
+
+The contract — enforced at lint time by ``python -m repro.analysis``
+(checker RA301) — is that every later ``self.<attr>`` access sits inside a
+``with self._lock:`` block. Condition variables built over a lock
+(``threading.Condition(self._lock)``) count as aliases of that lock; a
+method documented to be *called* with the lock held may declare
+``# repro: holds[_lock]`` on its ``def`` line instead. The same convention
+covers ``BatchCoalescer`` (``_cv``), ``ServingEngine``/``ModelBackend``
+(``_lock``), and ``EnhancedClient`` (``_state_lock``).
 """
 from __future__ import annotations
 
@@ -120,13 +136,13 @@ class CacheService:
         self.dedup_misses = dedup_misses
         self.dedup_threshold = dedup_threshold
         self.stats = ServiceStats()
-        self._inflight = 0
+        self._inflight = 0  # guarded-by: _lock
         self._lock = threading.Lock()  # service counters + lifecycle
         self._capacity = threading.Condition(self._lock)  # blocking-submit waits
         # client-owned: every service sharing this client serializes its store
         # lookups against backfill scatters through the same lock
         self._cache_lock = client._cache_lock
-        self._closed = False
+        self._closed = False  # guarded-by: _lock
         # schedulers start lazily: the sync complete() path never spawns threads
         self._lookup_sched: Optional[BatchCoalescer] = None
         self._miss_sched: Optional[BatchCoalescer] = None

@@ -1,0 +1,19 @@
+"""Bad: donated buffer read after the donating call (expect RA401 x1)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def scatter(buf, idx, rows):
+    return buf.at[idx].set(rows)
+
+
+class Bank:
+    def __init__(self):
+        self.buf = jnp.zeros((4, 2))
+
+    def set_rows(self, idx, rows):
+        out = scatter(self.buf, idx, rows)  # donates self.buf, never rebinds
+        return out + self.buf.sum()  # RA401: self.buf is dead here

@@ -1,0 +1,19 @@
+"""Good: donated buffers rebound from the jit's results in one statement."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def scatter(buf, idx, rows):
+    return buf.at[idx].set(rows)
+
+
+class Bank:
+    def __init__(self):
+        self.buf = jnp.zeros((4, 2))
+
+    def set_rows(self, idx, rows):
+        self.buf = scatter(self.buf, idx, rows)  # rebound at the call site
+        return self.buf

@@ -1,0 +1,16 @@
+"""Bad: host syncs reachable from a jit region (expect RA101 x3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def helper(x):
+    return float(x[0])  # RA101 via call-graph reachability
+
+
+@jax.jit
+def program(x):
+    y = jnp.sum(x)
+    z = y.item()  # RA101: blocking device->host sync
+    w = np.asarray(y)  # RA101: materializes on host mid-trace
+    return z + helper(x) + w

@@ -1,0 +1,14 @@
+"""Good: host conversions stay on the host side of the jit boundary."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def program(x):
+    return jnp.sum(x) * 2.0
+
+
+def host_side(x):
+    arr = np.asarray(program(x))  # host function: syncing here is the point
+    return float(arr[0]), int(arr.size)

@@ -1,0 +1,21 @@
+"""Good: guarded counter increments, f32 only for relative offsets."""
+import numpy as np
+
+_TICK_COMPACT_AT = 2**31 - 2**20
+
+
+class Bank:
+    def __init__(self):
+        self._tick = 1
+
+    def _compact_ticks(self):
+        self._tick = 1
+
+    def next_tick(self):
+        if self._tick >= _TICK_COMPACT_AT:
+            self._compact_ticks()
+        self._tick += 1
+        return self._tick
+
+    def rel_stamp(self, created_rel):
+        return np.float32(created_rel)  # relative seconds: f32 is plenty

@@ -1,0 +1,27 @@
+"""Bad: retrace hazards (expect RA201 x4, RA202 x1)."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk(x, *, k):
+    return jax.lax.top_k(x, k)
+
+
+def per_request(x, sizes):
+    out = []
+    for s in sizes:
+        fn = jax.jit(lambda v: v * 2)  # RA201: jit built per iteration, uncached
+        out.append(fn(x))
+    y = jax.jit(lambda v: v + 1)(x)  # RA201: immediate invocation
+    scores = topk(x, k=[1, 2])  # RA201: unhashable static arg
+    n = topk(x, k=len(sizes))  # RA201: per-request size as static arg
+    return out, y, scores, n
+
+
+@jax.jit
+def branchy(x):
+    if x:  # RA202: Python branch on a traced value
+        return x + 1
+    return x - 1

@@ -1,0 +1,31 @@
+"""Good: cached jits, bucketed statics, branch-free traced math."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_cache = {}
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk(x, *, k):
+    return jax.lax.top_k(x, k)
+
+
+def bucket_len(n):
+    b = 16
+    while b < n:
+        b *= 2
+    return b
+
+
+def lookup(x, sizes):
+    for s in sizes:
+        if s not in _cache:
+            _cache[s] = jax.jit(lambda v, s=s: v * s)  # cached by subscript
+    return topk(x, k=bucket_len(len(sizes)))  # bucketed static: O(log n) variants
+
+
+@jax.jit
+def no_branch(x):
+    return jnp.where(x > 0, x, -x)

@@ -1,0 +1,164 @@
+"""repro.analysis: per-checker fixture tests + repo self-scan."""
+import os
+import subprocess
+import sys
+from collections import Counter
+
+from repro.analysis import run_checks
+from repro.analysis.core import Baseline
+
+TESTS = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(TESTS)
+FIXTURES = os.path.join(TESTS, "analysis_fixtures")
+BASELINE = os.path.join(REPO, "analysis_baseline.txt")
+
+
+def fixture_codes(name):
+    findings = run_checks([os.path.join(FIXTURES, name)], REPO)
+    return Counter(f.code for f in findings)
+
+
+# -- host-sync (RA101) -------------------------------------------------------
+
+
+def test_host_sync_bad_flags_item_conversions_and_np_materialization():
+    codes = fixture_codes("host_sync_bad.py")
+    assert codes["RA101"] == 3
+    assert set(codes) == {"RA101"}
+
+
+def test_host_sync_good_is_clean():
+    assert not fixture_codes("host_sync_good.py")
+
+
+def test_host_sync_reaches_through_the_call_graph():
+    findings = run_checks([os.path.join(FIXTURES, "host_sync_bad.py")], REPO)
+    assert any("helper" in f.message for f in findings)
+
+
+# -- retrace (RA201/RA202) ---------------------------------------------------
+
+
+def test_retrace_bad_flags_all_four_hazards_plus_branch():
+    codes = fixture_codes("retrace_bad.py")
+    assert codes["RA201"] == 4
+    assert codes["RA202"] == 1
+
+
+def test_retrace_good_is_clean():
+    assert not fixture_codes("retrace_good.py")
+
+
+# -- lock discipline (RA301) -------------------------------------------------
+
+
+def test_locks_bad_flags_unguarded_access():
+    codes = fixture_codes("locks_bad.py")
+    assert codes["RA301"] == 1
+    assert set(codes) == {"RA301"}
+
+
+def test_locks_good_accepts_lock_condition_alias_and_holds():
+    assert not fixture_codes("locks_good.py")
+
+
+# -- donation (RA401) --------------------------------------------------------
+
+
+def test_donation_bad_flags_use_after_donation():
+    codes = fixture_codes("donation_bad.py")
+    assert codes["RA401"] == 1
+    assert set(codes) == {"RA401"}
+
+
+def test_donation_good_rebind_same_statement_is_clean():
+    assert not fixture_codes("donation_good.py")
+
+
+# -- overflow/dtype (RA501/RA502) --------------------------------------------
+
+
+def test_overflow_bad_flags_unguarded_counter_and_f32_timestamps():
+    codes = fixture_codes("overflow_bad.py")
+    assert codes["RA501"] == 1
+    assert codes["RA502"] == 2
+
+
+def test_overflow_good_is_clean():
+    assert not fixture_codes("overflow_good.py")
+
+
+# -- repo self-scan ----------------------------------------------------------
+
+
+def test_repo_is_clean_modulo_committed_baseline():
+    findings = run_checks([os.path.join(REPO, "src", "repro")], REPO)
+    baseline = Baseline.load(BASELINE)
+    new, _, _ = baseline.split(findings)
+    assert not new, "new findings:\n" + "\n".join(f.render() for f in new)
+
+
+def test_cli_exits_nonzero_on_findings_and_zero_when_clean(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(
+        "import jax\n\n\n@jax.jit\ndef f(x):\n    return x.item()\n"
+    )
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(bad), "--root", str(tmp_path)],
+        capture_output=True, text=True, env=env,
+    )
+    assert r.returncode == 1
+    assert "RA101" in r.stdout
+    assert "1 new finding" in r.stdout
+
+    good = tmp_path / "good.py"
+    good.write_text("def f(x):\n    return x + 1\n")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(good), "--root", str(tmp_path)],
+        capture_output=True, text=True, env=env,
+    )
+    assert r.returncode == 0
+
+
+def test_seeded_regression_item_inside_fused_read_program_is_caught(tmp_path):
+    """The CI gate the suite exists for: an .item() smuggled into the fused
+    read program's decide stage must come back as a finding."""
+    src_path = os.path.join(REPO, "src", "repro", "core", "read_path.py")
+    with open(src_path) as fh:
+        source = fh.read()
+    anchor = "    def decide_and_touch(s, idx, thresholds, qmask, last, cnt, tick):"
+    assert anchor in source, "read_path decide stage moved; update the test anchor"
+    seeded = source.replace(
+        anchor, anchor + "\n        _leak = s.item()", 1
+    )
+    target = tmp_path / "read_path_seeded.py"
+    target.write_text(seeded)
+    findings = run_checks([str(target)], str(tmp_path))
+    assert any(
+        f.code == "RA101" and ".item()" in f.message for f in findings
+    ), [f.render() for f in findings]
+
+
+def test_noqa_suppresses_a_finding(tmp_path):
+    bad = tmp_path / "sup.py"
+    bad.write_text(
+        "import jax\n\n\n@jax.jit\ndef f(x):\n"
+        "    return x.item()  # repro: noqa[RA101] — test suppression\n"
+    )
+    assert not run_checks([str(bad)], str(tmp_path))
+
+
+def test_baseline_keys_survive_line_drift(tmp_path):
+    bad = tmp_path / "drift.py"
+    bad.write_text("import jax\n\n\n@jax.jit\ndef f(x):\n    return x.item()\n")
+    findings = run_checks([str(bad)], str(tmp_path))
+    baseline_file = tmp_path / "base.txt"
+    Baseline.write(str(baseline_file), findings)
+    # shift the finding down two lines; the baseline key must still match
+    bad.write_text(
+        "import jax\n\n# pad\n# pad\n\n@jax.jit\ndef f(x):\n    return x.item()\n"
+    )
+    drifted = run_checks([str(bad)], str(tmp_path))
+    new, old, stale = Baseline.load(str(baseline_file)).split(drifted)
+    assert not new and len(old) == 1 and not stale

@@ -1,0 +1,143 @@
+"""ShardedVectorStore tier-1 demotion ring: eviction victims land in the
+host-RAM tier keyed by their home shard (instead of vanishing), promotions
+restore them byte-identical and prefer the freed home-lane slot, and
+age-based clears cascade — matching ``InMemoryVectorStore`` semantics."""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core.embeddings import NgramHashEmbedder  # noqa: E402
+from repro.core.semantic_cache import SemanticCache  # noqa: E402
+from repro.core.tiers import HostRamTier, TierEntry  # noqa: E402
+from repro.distributed.sharded_store import ShardedVectorStore  # noqa: E402
+from repro.launch.mesh import make_test_mesh  # noqa: E402
+
+DIM = 8
+
+
+def unit(i: int) -> np.ndarray:
+    v = np.zeros(DIM, np.float32)
+    v[i] = 1.0
+    return v
+
+
+def _sharded(capacity=3, tier_cap=16, **kw):
+    mesh = make_test_mesh(shape=(len(jax.devices()),), axes=("data",))
+    tier = HostRamTier(DIM, capacity=tier_cap)
+    store = ShardedVectorStore(
+        mesh, dim=DIM, capacity=capacity, k=3, tier1=tier, **kw
+    )
+    return store, tier
+
+
+def test_eviction_demotes_victim_into_tier1():
+    s, tier = _sharded(capacity=3)
+    keys = [s.add(unit(i), f"q{i}", f"a{i}") for i in range(3)]
+    s.search_batch(unit(0)[None], k=1)  # touch q0 -> q1 is the LRU victim
+    s.add(unit(3), "q3", "a3")
+    assert len(tier) == 1
+    sc, slots = tier.search(unit(1), k=1)
+    e = tier.get(int(slots[0, 0]))
+    assert sc[0, 0] == pytest.approx(1.0, abs=1e-5)
+    assert (e.key, e.query, e.response) == (keys[1], "q1", "a1")
+    assert 0 <= e.meta["home_shard"] < s.n_shards
+
+
+def test_demotion_preserves_stamps_and_access_count():
+    s, tier = _sharded(capacity=3, default_ttl_s=3600.0)
+    s.add(unit(0), "q0", "a0")
+    s.add(unit(1), "q1", "a1")
+    s.add(unit(2), "q2", "a2")
+    for _ in range(3):  # bump q0's frequency counter, then evict it anyway
+        s.search_batch(unit(0)[None], k=1)
+    s.search_batch(unit(1)[None], k=1)
+    s.search_batch(unit(2)[None], k=1)
+    s.add(unit(3), "q3", "a3")  # FIFO-of-recency: q0 touched first -> victim
+    victims = [e for e, _ in tier.snapshot_entries()]
+    assert len(victims) == 1
+    e = victims[0]
+    assert e.access_count == 3
+    assert e.expires_at - e.created_at == pytest.approx(3600.0, abs=5.0)
+
+
+def test_promote_restores_identity_and_prefers_home_slot():
+    s, tier = _sharded(capacity=4)
+    keys = [s.add(unit(i), f"q{i}", f"a{i}") for i in range(4)]
+    for _ in range(2):
+        s.search_batch(unit(0)[None], k=1)
+    home_idx = s._key_to_slot[keys[0]]
+    s.remove(keys[0])  # frees the slot without demoting (explicit delete)
+    assert len(tier) == 0
+    # hand-demote q0 as if it had been evicted, then promote it back
+    s._restore_batch(
+        unit(0)[None],
+        [TierEntry(
+            key=keys[0], query="q0", response="a0",
+            meta={"home_shard": home_idx // s.cap_local},
+            created_at=s.bank.to_abs(0.0) + 5.0,
+            expires_at=float("inf"),
+            access_count=7,
+        )],
+    )
+    idx = s._key_to_slot[keys[0]]
+    assert idx == home_idx  # freed home-lane slot reused, nobody evicted
+    assert s.payloads[idx] == ("q0", "a0")
+    assert len(s) == 4 and all(p is not None for p in s.payloads[:4])
+    lane, within = s._lane_within(idx)
+    assert int(s.bank.access_count[lane, within]) == 7
+    sc, idxs = s.search(unit(0)[None])
+    assert sc[0, 0] == pytest.approx(1.0, abs=1e-5) and int(idxs[0, 0]) == idx
+
+
+def test_demote_restore_roundtrip_via_tier_pop():
+    s, tier = _sharded(capacity=2)
+    ka = s.add(unit(0), "qa", "ra")
+    s.add(unit(1), "qb", "rb")
+    s.search_batch(unit(0)[None], k=1)  # count 1 on qa
+    s.add(unit(2), "qc", "rc")  # evicts qb; qa survives
+    s.add(unit(3), "qd", "rd")  # now qa demotes too
+    assert ka not in s._key_to_slot and len(tier) == 2
+    sc, slots = tier.search(unit(0), k=1)
+    e, vec = tier.pop(int(slots[0, 0]))
+    s._restore_batch(vec[None], [e])
+    idx = s._key_to_slot[ka]
+    assert s.payloads[idx] == ("qa", "ra")
+    lane, within = s._lane_within(idx)
+    assert int(s.bank.access_count[lane, within]) == 1
+    # restoring displaced a live entry: it demoted into the tier, not dropped
+    assert len(tier) == 2
+
+
+def test_clear_cascades_into_tier1():
+    s, tier = _sharded(capacity=2)
+    for i in range(4):
+        s.add(unit(i), f"q{i}", f"a{i}")
+    assert len(tier) == 2
+    dropped = s.clear()
+    assert dropped == 4 and len(s) == 0 and len(tier) == 0
+
+
+def test_consult_tier1_promotes_through_semantic_cache():
+    """The sharded store keeps (query, response) payloads instead of Entry
+    rows; consult_tier1 must reconstruct the hit from the TierEntry."""
+    emb = NgramHashEmbedder(dim=DIM)
+    mesh = make_test_mesh(shape=(len(jax.devices()),), axes=("data",))
+    tier = HostRamTier(DIM, capacity=16)
+    store = ShardedVectorStore(mesh, dim=DIM, capacity=2, k=2, tier1=tier)
+    cache = SemanticCache(emb, threshold=0.85, store=store)
+    va = emb.embed(["oldest question"])[0]
+    store.add(va, "oldest question", "oldest answer")
+    store.add(emb.embed(["middle question"])[0], "middle question", "middle answer")
+    store.add(emb.embed(["newest question"])[0], "newest question", "newest answer")
+    assert len(tier) == 1  # oldest demoted
+    out = cache.consult_tier1(
+        ["oldest question"], np.asarray(va)[None], [0.85], [0]
+    )
+    assert 0 in out
+    r = out[0]
+    assert r.hit and r.level == "tier1" and r.response == "oldest answer"
+    # promoted out of the ring; the entry it displaced demoted into it
+    assert {e.response for e, _ in tier.snapshot_entries()} != {"oldest answer"}
+    sc, _ = store.search(np.asarray(va)[None])
+    assert sc[0, 0] == pytest.approx(1.0, abs=1e-4)  # back on device
