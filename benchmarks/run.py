@@ -9,7 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
   sec61_*     — §6.1: GenerativeCache vs GPTCache-like baseline
   hitrate_*   — §3: threshold sweep + generative uplift
   adaptive_*  — §3.1: controller convergence
-  serve_*     — end-to-end serving with/without cache (smoke model)
+  traffic_*   — end-to-end serving under replayed Zipfian/bursty load
   batchpipe_* — batched pipeline: per-query latency vs batch size
 """
 from __future__ import annotations
@@ -23,7 +23,7 @@ def main() -> None:
         embedders,
         gptcache_compare,
         hitrate,
-        serve_throughput,
+        traffic_replay,
     )
 
     print("name,us_per_call,derived")
@@ -32,7 +32,7 @@ def main() -> None:
     gptcache_compare.main()
     hitrate.main()
     adaptive_bench.main()
-    serve_throughput.main()
+    traffic_replay.main()
     batch_pipeline.main(["--smoke"])
 
 

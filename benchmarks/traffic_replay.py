@@ -1,0 +1,52 @@
+"""End-to-end serving under realistic load: the traffic-replay harness
+(``repro.gateway.traffic``) run at bench scale, replacing the old
+``serve_throughput`` section. One Zipfian/bursty workload replays against a
+prewarmed MockLLM-backed ``CacheService``; rows report the hit/miss latency
+split and throughput the gate in CI pins (hit p50 >= 5x below miss p50,
+zero futures dropped at drain).
+
+The full harness (both replay modes, JSON report) is
+``PYTHONPATH=src python -m repro.gateway.traffic``.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+
+
+def main(requests: int = 192) -> None:
+    from repro.gateway.traffic import (
+        TrafficConfig,
+        _warm,
+        build_stack,
+        generate_workload,
+        make_corpus,
+        prewarm,
+        run_inprocess,
+    )
+
+    cfg = TrafficConfig(
+        n_requests=requests, n_users=16, corpus_size=32, seed=0
+    )
+    workload = generate_workload(cfg)
+    service, client, cache = build_stack(
+        backend_latency_s=0.08, tier1_capacity=8 * cfg.corpus_size,
+        capacity=2 * cfg.corpus_size, max_inflight=256,
+    )
+    _warm(service, cache)
+    prewarm(cache, make_corpus(cfg), churn=2 * cfg.corpus_size)
+    rep = run_inprocess(service, workload).to_dict()
+
+    hit_us = rep["hit_p50_ms"] * 1e3
+    miss_us = rep["miss_p50_ms"] * 1e3
+    emit("traffic_hit_p50", hit_us,
+         f"n={sum(rep['latency_ms'][c]['n'] for c in ('hit', 'generative', 'tier1'))}")
+    emit("traffic_miss_p50", miss_us,
+         f"n={rep['latency_ms']['miss']['n']};"
+         f"ratio={rep['hit_vs_miss_p50_ratio']:.1f}x")
+    emit("traffic_replay", 1e6 / max(rep["throughput_rps"], 1e-9),
+         f"req_per_s={rep['throughput_rps']:.1f};shed={rep['shed']};"
+         f"expired={rep['expired']};dropped={rep['dropped_at_drain']}")
+
+
+if __name__ == "__main__":
+    main()

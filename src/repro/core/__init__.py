@@ -26,8 +26,10 @@ from repro.core.request import (  # noqa: F401
     DEADLINE_EXCEEDED,
     GENERATED,
     HIT,
+    CacheChunk,
     CacheRequest,
     CacheResponse,
+    split_stream_tokens,
 )
 from repro.core.semantic_cache import CacheResult, GPTCacheLike, SemanticCache  # noqa: F401
 from repro.core.store_bank import StoreBank  # noqa: F401

@@ -11,11 +11,19 @@ with. Hits and generated answers carry text; a miss whose deadline expired
 in queue resolves with ``status == DEADLINE_EXCEEDED`` and ``text=None``
 instead of generating — the caller gets a typed result, never a silent
 stall behind a slow backend.
+
+``CacheChunk`` is the streaming unit: ``CacheService.astream`` replays a
+resolved response token-by-token as chunks whose concatenated ``text`` is
+byte-identical to the non-streamed ``CacheResponse.text`` — the HTTP
+gateway serves hits and misses over the same SSE surface, so a client
+cannot tell a millisecond cache replay from a live generation except by
+reading the ``X-Cache`` header.
 """
 from __future__ import annotations
 
+import re
 from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, Any, Dict, Optional
+from typing import TYPE_CHECKING, Any, Dict, List, Optional
 
 if TYPE_CHECKING:  # typing only — avoids a runtime cycle with repro.core.client
     from repro.core.client import LLMResponse
@@ -41,6 +49,7 @@ class CacheRequest:
     priority: int = 0  # higher is scheduled sooner
     deadline_s: Optional[float] = None  # relative to submit; expired misses don't generate
     ttl_s: Optional[float] = None  # backfilled answer's cache lifetime; None = store default
+    stream: bool = False  # caller wants chunked delivery (CacheService.astream / SSE)
     metadata: Dict[str, Any] = field(default_factory=dict)
 
 
@@ -59,3 +68,67 @@ class CacheResponse:
     @property
     def expired(self) -> bool:
         return self.status == DEADLINE_EXCEEDED
+
+    @property
+    def cache_status(self) -> str:
+        """Where the answer came from, as the gateway's ``X-Cache`` value:
+        ``hit`` (plain semantic tier-0), ``generative`` (synthesized from
+        several sources, §3), ``tier1`` (promoted from the host-RAM ring),
+        or ``miss`` (a backend generated it — including expiries, which the
+        gateway maps to an error status before this header matters)."""
+        if self.status == HIT and self.cache_result is not None:
+            level = self.cache_result.level or ""
+            if "tier1" in level:
+                return "tier1"
+            if self.cache_result.generative or "generative" in level:
+                return "generative"
+            return "hit"
+        return "miss"
+
+    @property
+    def similarity(self) -> Optional[float]:
+        """Winning similarity score for cache hits, None for misses."""
+        if self.cache_result is None:
+            return None
+        return float(self.cache_result.similarity)
+
+    @property
+    def resolved_level(self) -> str:
+        """The hierarchy level that answered (``semantic``, ``L2:tier1``,
+        ``generative``, ...) or ``miss``/``deadline_exceeded`` for the rest."""
+        if self.status == HIT and self.cache_result is not None:
+            return self.cache_result.level or "semantic"
+        return "miss" if self.status == GENERATED else self.status
+
+
+def split_stream_tokens(text: str) -> List[str]:
+    """Split ``text`` into replayable streaming tokens (a word plus its
+    trailing whitespace each) such that ``"".join(...)`` reproduces the
+    input byte-for-byte — the invariant the gateway's SSE parity contract
+    (and its tests) rest on. Leading whitespace rides the first token."""
+    if not text:
+        return []
+    runs = re.findall(r"\s+|\S+", text)  # alternating runs; join(runs) == text
+    tokens: List[str] = []
+    for run in runs:
+        if tokens and run.isspace():
+            tokens[-1] += run
+        else:
+            tokens.append(run)
+    return tokens
+
+
+@dataclass
+class CacheChunk:
+    """One streamed piece of a resolved response (``CacheService.astream``).
+
+    ``response`` carries the full ``CacheResponse`` on EVERY chunk so a
+    consumer (the gateway writes cache-status headers before the first SSE
+    event) never waits for the stream's end to learn hit/miss, similarity,
+    or latency. ``final`` marks the last chunk; an empty response yields a
+    single final chunk with ``text == ""``."""
+
+    text: str
+    index: int
+    final: bool
+    response: CacheResponse

@@ -1,0 +1,23 @@
+"""HTTP gateway + traffic-replay harness: the serving surface over
+``CacheService``.
+
+Two halves (see README "HTTP gateway"):
+
+  * ``repro.gateway.app.Gateway`` — a stdlib-asyncio OpenAI-compatible
+    front end (``/v1/chat/completions``, ``/v1/completions``, ``/healthz``,
+    ``/v1/cache/stats``) with SSE streaming for hits and misses,
+    cache-status headers, typed error mapping, and graceful drain;
+  * ``repro.gateway.traffic`` — reproducible Zipfian/bursty workload
+    generation and replay (in-process or over real HTTP), reporting
+    p50/p95/p99 per cache class into ``BENCH_traffic.json`` — the
+    end-to-end load gate every scale-out PR must move.
+"""
+from repro.gateway.app import (  # noqa: F401
+    Gateway,
+    GatewayStats,
+    GatewayThread,
+    serve_in_thread,
+)
+from repro.gateway.client import GatewayClient, GatewayReply, parse_sse  # noqa: F401
+from repro.gateway.http import GatewayHttpServer, HttpRequest, Response  # noqa: F401
+from repro.gateway.protocol import ProtocolError  # noqa: F401

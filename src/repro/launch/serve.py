@@ -47,6 +47,12 @@ def main(argv=None):
                     help="simulated concurrent users (--coalesce only)")
     ap.add_argument("--deadline-ms", type=float, default=0.0,
                     help="per-request deadline; 0 disables (--coalesce only)")
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve the OpenAI-compatible HTTP gateway on PORT "
+                         "instead of running the replay driver")
+    ap.add_argument("--http-pace-ms", type=float, default=0.0,
+                    help="SSE pacing between streamed chunks of a cached "
+                         "replay (--http only)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=True)
@@ -70,6 +76,33 @@ def main(argv=None):
     )
     client = EnhancedClient(cache=cache)
     client.register_backend(backend, ModelCostInfo(0.5, 1.5, 3.0))
+
+    if args.http is not None:
+        # real serving surface: the gateway owns the service and drains it
+        # (in-flight futures resolve) on Ctrl-C
+        from repro.gateway.app import serve_in_thread
+
+        service = CacheService(
+            client, max_batch=args.coalesce_batch, max_wait_ms=args.max_wait_ms
+        )
+        runner = serve_in_thread(
+            service, port=args.http, pace_ms=args.http_pace_ms, own_service=True
+        )
+        host, port = runner.gateway.http.host, runner.gateway.port
+        print(f"gateway listening on http://{host}:{port}")
+        print(f"  POST http://{host}:{port}/v1/chat/completions")
+        print(f"  POST http://{host}:{port}/v1/completions")
+        print(f"  GET  http://{host}:{port}/healthz")
+        print(f"  GET  http://{host}:{port}/v1/cache/stats")
+        try:
+            while True:
+                time.sleep(0.5)
+        except KeyboardInterrupt:
+            pass
+        clean = runner.stop()
+        print(f"drained {'clean' if clean else 'DIRTY'}; "
+              f"served={runner.gateway.http.requests_served}")
+        return
 
     qa = squad_like_qa(n_clusters=max(args.requests // 4, 2), paraphrases=4)
     queries = [q for q, _, _ in qa][: args.requests]

@@ -65,8 +65,10 @@ from repro.core.request import (
     DEADLINE_EXCEEDED,
     GENERATED,
     HIT,
+    CacheChunk,
     CacheRequest,
     CacheResponse,
+    split_stream_tokens,
 )
 from repro.serving.coalescer import (  # noqa: F401 — re-exported service errors
     AdmissionRejected,
@@ -207,6 +209,44 @@ class CacheService:
             request = CacheRequest(request, **hints)
         return await self.asubmit(request)
 
+    async def astream(
+        self,
+        request: CacheRequest,
+        *,
+        pace_s: float = 0.0,
+        chunk_tokens: int = 1,
+    ):
+        """Streamed delivery: resolve ``request`` through the normal
+        submit path, then replay the answer as ``CacheChunk``s whose
+        concatenated text is byte-identical to the non-streamed response.
+
+        Cache hits resolve in milliseconds but replay through the SAME
+        chunked surface as generated misses — with ``pace_s`` > 0 sleeping
+        between chunks, a client watching the stream cannot tell a replayed
+        hit from a live generation (the paper's drop-in-proxy story; the
+        gateway surfaces the truth in its ``X-Cache`` header instead).
+        ``chunk_tokens`` groups several tokens per chunk for long answers.
+        Typed failures (deadline expiry) still yield exactly one final
+        chunk carrying the typed response, so every stream terminates.
+        Submission errors (``AdmissionRejected``/``ServiceClosed``) raise
+        before the first chunk — nothing has streamed yet, so the caller
+        can still map them to a clean error response."""
+        resp = await self.asubmit(request)
+        tokens = split_stream_tokens(resp.text or "")
+        if chunk_tokens > 1:
+            tokens = [
+                "".join(tokens[i : i + chunk_tokens])
+                for i in range(0, len(tokens), chunk_tokens)
+            ]
+        if not tokens:
+            yield CacheChunk("", 0, True, resp)
+            return
+        last = len(tokens) - 1
+        for i, tok in enumerate(tokens):
+            yield CacheChunk(tok, i, i == last, resp)
+            if pace_s > 0.0 and i != last:
+                await asyncio.sleep(pace_s)
+
     # -- sync compatibility path ------------------------------------------------
 
     def complete(self, requests: Sequence[CacheRequest]) -> List[CacheResponse]:
@@ -279,6 +319,18 @@ class CacheService:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+    @property
+    def inflight(self) -> int:
+        """Accepted-but-unresolved futures right now — the gateway's
+        graceful drain watches this reach zero before closing the service."""
+        with self._lock:
+            return self._inflight
+
+    @property
+    def closed(self) -> bool:
+        with self._lock:
+            return self._closed
 
     @property
     def scheduler_stats(self) -> Tuple:

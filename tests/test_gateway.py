@@ -1,0 +1,335 @@
+"""HTTP gateway e2e over real sockets: OpenAI-shaped bodies, the X-Cache
+header contract (all four values), streamed-vs-non-streamed byte parity,
+typed error mapping (400/404/405/429/503/504), concurrent admission
+control, and drain-resolves-everything on shutdown. Plus the astream
+facade's parity with the sync path."""
+import asyncio
+import json
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import pytest
+
+from repro.core import (
+    CacheRequest,
+    EnhancedClient,
+    GenerativeCache,
+    MockLLM,
+    NgramHashEmbedder,
+)
+from repro.core.request import split_stream_tokens
+from repro.core.tiers import HostRamTier
+from repro.core.vector_store import InMemoryVectorStore
+from repro.gateway import GatewayClient, serve_in_thread
+from repro.serving.service import CacheService
+
+from tests.test_service import GatedLLM
+
+Q_A = "how does the storage subsystem behave under heavy load"
+Q_B = "how does the routing subsystem behave under heavy load"
+
+
+def _service(backend=None, *, tier1: bool = False, threshold: float = 0.8,
+             **svc_kw) -> CacheService:
+    emb = NgramHashEmbedder()
+    store = None
+    if tier1:
+        store = InMemoryVectorStore(
+            emb.dim, capacity=2, eviction="lru",
+            tier1=HostRamTier(emb.dim, capacity=16),
+        )
+    cache = GenerativeCache(
+        emb, threshold=threshold, t_single=0.45, t_combined=1.0,
+        store=store, cache_synthesized=False,
+    )
+    client = EnhancedClient(cache=cache)
+    client.register_backend(backend or MockLLM("backend", latency_s=0.0))
+    return CacheService(client, max_batch=8, max_wait_ms=1.0, **svc_kw)
+
+
+@pytest.fixture()
+def gw():
+    """A live gateway over a fast MockLLM service; yields (runner, client)."""
+    runner = serve_in_thread(_service(), own_service=True)
+    with GatewayClient("127.0.0.1", runner.gateway.port) as http:
+        yield runner, http
+    runner.stop()
+
+
+# -- the OpenAI surface --------------------------------------------------------
+
+
+def test_chat_miss_then_hit_headers_and_body_shape(gw):
+    _, http = gw
+    cold = http.chat(Q_A)
+    assert cold.status == 200
+    body = cold.json()
+    assert body["object"] == "chat.completion"
+    assert body["choices"][0]["message"]["role"] == "assistant"
+    assert cold.headers["x-cache"] == "miss"
+    assert "x-request-id" in cold.headers
+    assert float(cold.headers["x-service-latency-ms"]) >= 0
+
+    warm = http.chat(Q_A)
+    assert warm.headers["x-cache"] == "hit"
+    assert float(warm.headers["x-cache-similarity"]) >= 0.99
+    assert warm.headers["x-cache-level"] == "semantic"
+    assert warm.text == cold.text
+
+
+def test_completions_surface_and_echoed_model(gw):
+    _, http = gw
+    r = http.completion("a plain completion prompt", max_tokens=16)
+    assert r.status == 200
+    body = r.json()
+    assert body["object"] == "text_completion"
+    assert body["choices"][0]["text"] == r.text
+    assert body["model"]  # resolved model echoes back
+
+
+def test_streamed_hit_byte_identical_to_nonstreamed(gw):
+    _, http = gw
+    plain = http.chat(Q_A)  # prime the cache
+    plain = http.chat(Q_A)
+    assert plain.headers["x-cache"] == "hit"
+
+    sse = http.chat(Q_A, stream=True)
+    assert sse.status == 200
+    assert sse.headers["content-type"].startswith("text/event-stream")
+    assert sse.headers["x-cache"] == "hit"  # headers resolved before stream
+    assert sse.done  # saw data: [DONE]
+    assert sse.text == plain.text  # byte parity after SSE reassembly
+    assert len(sse.events) >= len(split_stream_tokens(plain.text))
+    # chat stream frame contract: role delta first, finish_reason last
+    assert sse.events[0]["choices"][0]["delta"].get("role") == "assistant"
+    assert sse.events[-1]["choices"][0]["finish_reason"] == "stop"
+    assert all(e["object"] == "chat.completion.chunk" for e in sse.events)
+
+
+def test_streamed_miss_byte_identical_to_repeat(gw):
+    _, http = gw
+    sse = http.completion("streamed cold prompt never seen", stream=True)
+    assert sse.status == 200 and sse.headers["x-cache"] == "miss"
+    plain = http.completion("streamed cold prompt never seen")
+    assert plain.headers["x-cache"] == "hit"
+    assert sse.text == plain.text
+
+
+def test_all_four_x_cache_values_over_http():
+    # threshold high enough that the combined prompt matches neither source
+    # outright (each lands in the (t_single, t_s) band, summing past
+    # t_combined -> the generative rule fires)
+    runner = serve_in_thread(_service(tier1=True, threshold=0.93),
+                             own_service=True)
+    try:
+        with GatewayClient("127.0.0.1", runner.gateway.port) as http:
+            # miss, then hit
+            assert http.completion(Q_A).headers["x-cache"] == "miss"
+            assert http.completion(Q_A).headers["x-cache"] == "hit"
+            # generative: both sources cached, combined prompt synthesizes
+            assert http.completion(Q_B).headers["x-cache"] == "miss"
+            combo = http.completion(f"{Q_A} and also {Q_B}")
+            assert combo.headers["x-cache"] == "generative"
+            # tier1: capacity-2 tier 0 demoted Q_A by now; its re-ask promotes
+            tier1 = http.completion("some third filler prompt")  # churn
+            assert tier1.headers["x-cache"] == "miss"
+            promoted = http.completion(Q_A)
+            assert promoted.headers["x-cache"] == "tier1"
+            assert "tier1" in promoted.headers["x-cache-level"]
+    finally:
+        assert runner.stop()
+
+
+# -- ops endpoints -------------------------------------------------------------
+
+
+def test_healthz_and_cache_stats(gw):
+    _, http = gw
+    h = http.healthz()
+    assert h.status == 200 and h.json()["status"] == "ok"
+
+    http.chat(Q_A)
+    http.chat(Q_A)
+    stats = http.cache_stats().json()
+    assert stats["gateway"]["by_cache_class"]["miss"] == 1
+    assert stats["gateway"]["by_cache_class"]["hit"] == 1
+    assert stats["service"]["submitted"] >= 2
+    assert stats["gateway"]["hit_fraction"] == pytest.approx(0.5)
+
+
+# -- typed error mapping -------------------------------------------------------
+
+
+def test_malformed_json_is_400(gw):
+    runner, http = gw
+    conn = http._connection()
+    conn.request("POST", "/v1/chat/completions", body=b"{nope",
+                 headers={"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    body = json.loads(resp.read())
+    assert resp.status == 400
+    assert body["error"]["type"] == "invalid_request_error"
+    http.close()  # server closes after a parse-level 400
+
+
+def test_bad_fields_are_400(gw):
+    _, http = gw
+    assert http.request("POST", "/v1/chat/completions", {"messages": []}).status == 400
+    assert http.request("POST", "/v1/completions", {}).status == 400  # no prompt
+    r = http.request("POST", "/v1/completions",
+                     {"prompt": "x", "max_tokens": "many"})
+    assert r.status == 400 and "max_tokens" in r.json()["error"]["message"]
+    r = http.request("POST", "/v1/chat/completions",
+                     {"messages": [{"role": "user"}]})
+    assert r.status == 400
+
+
+def test_unknown_route_404_and_wrong_method_405(gw):
+    _, http = gw
+    assert http.request("GET", "/v2/everything").status == 404
+    r = http.request("POST", "/healthz", {})
+    assert r.status == 405 and r.headers["allow"] == "GET"
+    assert http.request("GET", "/v1/chat/completions").status == 405
+
+
+def test_deadline_exceeded_maps_to_504():
+    runner = serve_in_thread(
+        _service(MockLLM("slow", latency_s=0.5)), own_service=True
+    )
+    try:
+        with GatewayClient("127.0.0.1", runner.gateway.port) as http:
+            r = http.completion("too slow to make it", deadline_ms=30)
+            assert r.status == 504
+            assert r.json()["error"]["code"] == "deadline_exceeded"
+            sse = http.completion("still too slow to make it", deadline_ms=30,
+                                  stream=True)
+            assert sse.status == 504  # typed error, not a broken stream
+    finally:
+        assert runner.stop()
+
+
+def test_admission_rejected_maps_to_429_with_retry_after():
+    backend = GatedLLM()
+    runner = serve_in_thread(
+        _service(backend, max_inflight=1), own_service=True
+    )
+    try:
+        port = runner.gateway.port
+
+        def one(i: int):
+            with GatewayClient("127.0.0.1", port, timeout=30.0) as c:
+                return c.completion(f"admission probe {i}")
+
+        with ThreadPoolExecutor(max_workers=6) as pool:
+            first = pool.submit(one, 0)
+            assert backend.entered.wait(timeout=10)  # slot taken, gate shut
+            rest = [pool.submit(one, i) for i in range(1, 6)]
+            shed = [f.result() for f in rest]
+            backend.gate.set()
+            ok = first.result()
+        assert ok.status == 200
+        assert {r.status for r in shed} == {429}
+        assert all(r.headers["retry-after"] == "1" for r in shed)
+        assert all(r.json()["error"]["code"] == "admission_rejected"
+                   for r in shed)
+    finally:
+        assert runner.stop()
+
+
+def test_draining_gateway_returns_503_and_close_is_clean():
+    runner = serve_in_thread(_service(), own_service=True)
+    with GatewayClient("127.0.0.1", runner.gateway.port) as http:
+        assert http.completion("before drain").status == 200
+        assert runner.stop()
+        with pytest.raises(Exception):  # listener closed: refused/reset
+            http.completion("after drain")
+
+
+def test_drain_resolves_every_inflight_request():
+    backend = GatedLLM()
+    runner = serve_in_thread(_service(backend), own_service=True)
+    port = runner.gateway.port
+    results = []
+
+    def one(i: int):
+        with GatewayClient("127.0.0.1", port, timeout=30.0) as c:
+            results.append(c.completion(f"inflight during drain {i}"))
+
+    threads = [threading.Thread(target=one, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    assert backend.entered.wait(timeout=10)  # requests are inside the service
+    stopper = threading.Thread(target=lambda: results.append(runner.stop()))
+    stopper.start()
+    time.sleep(0.1)  # drain is now waiting on the gated backend
+    backend.gate.set()
+    for t in threads:
+        t.join(timeout=30)
+    stopper.join(timeout=30)
+    statuses = sorted(r.status for r in results if hasattr(r, "status"))
+    assert statuses == [200, 200, 200, 200]  # nobody dropped mid-drain
+    assert True in [r for r in results if isinstance(r, bool)]  # clean drain
+
+
+# -- astream facade ------------------------------------------------------------
+
+
+def test_astream_reassembles_byte_identical_to_sync():
+    service = _service()
+    try:
+        prompt = "a multi token answer  with doubled spaces\nand a newline"
+        sync = service.submit(CacheRequest(prompt)).result()
+
+        async def collect():
+            chunks = []
+            async for ch in service.astream(CacheRequest(prompt)):
+                chunks.append(ch)
+            return chunks
+
+        chunks = asyncio.run(collect())
+        assert "".join(c.text for c in chunks) == sync.text
+        assert [c.index for c in chunks] == list(range(len(chunks)))
+        assert [c.final for c in chunks] == [False] * (len(chunks) - 1) + [True]
+        assert chunks[0].response.status == "hit"  # same resolved response
+    finally:
+        service.close()
+
+
+def test_astream_chunk_tokens_groups_without_changing_bytes():
+    service = _service()
+    try:
+        prompt = "another prompt with several words in the answer"
+        sync = service.submit(CacheRequest(prompt)).result()
+
+        async def collect(n):
+            return [c async for c in service.astream(CacheRequest(prompt),
+                                                     chunk_tokens=n)]
+
+        one = asyncio.run(collect(1))
+        grouped = asyncio.run(collect(3))
+        assert len(grouped) < len(one)
+        assert "".join(c.text for c in grouped) == sync.text
+    finally:
+        service.close()
+
+
+def test_astream_shed_raises_before_first_chunk():
+    backend = GatedLLM()
+    service = _service(backend, max_inflight=1)
+    try:
+        blocker = service.submit(CacheRequest("occupy the only slot"))
+        assert backend.entered.wait(timeout=10)
+
+        async def go():
+            agen = service.astream(CacheRequest("shed me"))
+            await agen.__anext__()
+
+        from repro.serving.coalescer import AdmissionRejected
+
+        with pytest.raises(AdmissionRejected):
+            asyncio.run(go())
+        backend.gate.set()
+        blocker.result(timeout=10)
+    finally:
+        service.close()
