@@ -108,17 +108,17 @@ class ReadDecision:
     generative: np.ndarray  # [n, L] generative-hit mask (subset of hit)
 
 
-@functools.lru_cache(maxsize=64)
-def _build_program(forward, specs: Tuple[LevelSpec, ...], K: int,
-                   metrics: Tuple[str, ...], prenorm: Tuple[bool, ...],
-                   use_pallas: bool, interpret: bool, block_n: int,
-                   grid_order: str, lifecycle: bool = False):
-    """Compile-cached fused read program. Keyed on the forward fn identity
-    (stable per embedder instance — host embedders share one module-level
-    identity forward), the level specs, and the bank layout; jax.jit adds
-    the shape bucketing on top. Bounded: the key pins the forward closure
-    (and through it the embedder), so an unbounded cache would leak
-    programs in processes that churn through cache/embedder instances."""
+def make_decide(specs: Tuple[LevelSpec, ...], K: int):
+    """Shared trace of the decide stage: the ``_decide_batch`` semantics as
+    [B, L] masks, the L1 > L2 > peers winner walk, and the probed-levels
+    touch mask. ONE body with two callers — the single-host fused program
+    below and the sharded shard_map program
+    (``repro.distributed.sharded_read``) — so their decisions cannot drift.
+
+    Returns ``decide(s, thresholds, qmask) -> (winner, hit, generative,
+    tmask)`` where ``s`` is [B, L, K] score-desc candidates and ``tmask``
+    is the [B, L, K] bump mask (levels a sequential walk would have probed,
+    finite candidates only, capped at each level's own k)."""
     L = len(specs)
     t_single = np.asarray([s.t_single for s in specs], np.float32)
     t_comb = np.asarray(
@@ -128,21 +128,8 @@ def _build_program(forward, specs: Tuple[LevelSpec, ...], K: int,
     ks = np.asarray([s.k for s in specs], np.int32)
     gen_l = np.asarray([s.generative for s in specs])
     sec_l = np.asarray([(not s.generative) or s.secondary for s in specs])
-    mixed = len(set(metrics)) > 1
 
-    def search(q, buf, valid):
-        if use_pallas:
-            from repro.kernels.similarity_topk.ops import _similarity_topk_lanes
-
-            return _similarity_topk_lanes(
-                buf, valid, q, k=K, metric=metrics, block_n=block_n,
-                interpret=interpret,
-                prenormalized=True if mixed else all(prenorm),
-                grid_order=grid_order,
-            )
-        return fused_search_body(buf, valid, q, K, metrics, prenorm)
-
-    def decide_and_touch(s, idx, thresholds, qmask, last, cnt, tick):
+    def decide(s, thresholds, qmask):
         # -- decide: the _decide_batch semantics as [B, L] masks -------------
         colK = jnp.arange(K)
         finite = s > jnp.float32(_NEG_FINITE)
@@ -170,6 +157,40 @@ def _build_program(forward, specs: Tuple[LevelSpec, ...], K: int,
             & finite
             & (colK[None, None, :] < jnp.asarray(ks)[None, :, None])
         )
+        return winner, hit, generative, tmask
+
+    return decide
+
+
+@functools.lru_cache(maxsize=64)
+def _build_program(forward, specs: Tuple[LevelSpec, ...], K: int,
+                   metrics: Tuple[str, ...], prenorm: Tuple[bool, ...],
+                   use_pallas: bool, interpret: bool, block_n: int,
+                   grid_order: str, lifecycle: bool = False):
+    """Compile-cached fused read program. Keyed on the forward fn identity
+    (stable per embedder instance — host embedders share one module-level
+    identity forward), the level specs, and the bank layout; jax.jit adds
+    the shape bucketing on top. Bounded: the key pins the forward closure
+    (and through it the embedder), so an unbounded cache would leak
+    programs in processes that churn through cache/embedder instances."""
+    L = len(specs)
+    mixed = len(set(metrics)) > 1
+    decide = make_decide(specs, K)
+
+    def search(q, buf, valid):
+        if use_pallas:
+            from repro.kernels.similarity_topk.ops import _similarity_topk_lanes
+
+            return _similarity_topk_lanes(
+                buf, valid, q, k=K, metric=metrics, block_n=block_n,
+                interpret=interpret,
+                prenormalized=True if mixed else all(prenorm),
+                grid_order=grid_order,
+            )
+        return fused_search_body(buf, valid, q, K, metrics, prenorm)
+
+    def decide_and_touch(s, idx, thresholds, qmask, last, cnt, tick):
+        winner, hit, generative, tmask = decide(s, thresholds, qmask)
         lanes3 = jnp.broadcast_to(jnp.arange(L)[None, :, None], s.shape)
         cnt = cnt.at[lanes3, idx].add(tmask.astype(jnp.int32))
         stamp = jnp.where(tmask, tick, jnp.int32(_INT32_MIN))

@@ -610,11 +610,19 @@ class StoreBank:
 
     # -- device updates --------------------------------------------------------
 
-    def set_rows(self, lane: int, idxs: List[int], rows: np.ndarray) -> None:
+    def set_rows(self, lane: int, idxs: List[int], rows: np.ndarray,
+                 *, pinned: bool = False) -> None:
         """Scatter N raw rows into one lane (ONE donated device update that
         also applies the pending insert-counter/lifecycle resets; rows are
-        unit-normalized in-jit for cosine lanes)."""
+        unit-normalized in-jit for cosine lanes). ``pinned=True`` stages the
+        row block through pinned host memory when the backend has it (tier-1
+        promotions overlap their H2D copy with the read dispatch they ride
+        alongside); pageable numpy fallback on CPU."""
         sel, scatter_idx = prepare_scatter(idxs, np.asarray(rows, np.float32))
+        if pinned:
+            from repro.kernels.backend import stage_pinned
+
+            sel = stage_pinned(sel)
         cl, ci, ct, cs, cc, ccr, cex = self._drain_pending()
         (
             self.buf, self.valid,

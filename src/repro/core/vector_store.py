@@ -301,7 +301,9 @@ class InMemoryVectorStore:
             idxs.append(idx)
             if self._host_rows is not None:
                 self._host_rows[idx] = rows[j]
-        self._bank.set_rows(self._lane, idxs, rows)
+        # promotions stage through pinned host memory where available so the
+        # restore scatter's H2D copy overlaps the read dispatch (CPU: pageable)
+        self._bank.set_rows(self._lane, idxs, rows, pinned=True)
 
     def search(self, q_vec: np.ndarray, k: int = 4) -> List[Tuple[float, Entry]]:
         return self.search_batch(np.asarray(q_vec)[None], k)[0]

@@ -44,6 +44,50 @@ def _shard_axes(mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def shard_id(mesh, axes: Tuple[str, ...]):
+    """This device's linear shard index over ``axes`` inside a shard_map body
+    (row-major over the axis order; matches the lane-axis sharding layout)."""
+    sid = jnp.zeros((), jnp.int32)
+    mul = 1
+    for a in reversed(axes):
+        sid = sid + jax.lax.axis_index(a) * mul
+        mul = mul * mesh.shape[a]  # static axis size (jax.lax.axis_size needs jax>=0.5)
+    return sid
+
+
+def all_gather_merge_topk(axes, gs, gi, k: int, *, hierarchical: bool = True):
+    """Merge per-shard [Q, k'] candidate (score, idx) sets into the global
+    top-k inside a shard_map body — the ONE collective reduction shared by
+    the flat lookup, the banked lookup, and the fused sharded read program.
+
+    ``hierarchical=True`` gathers k candidates per shard over the in-pod
+    (ICI) axis first, merges back down to k, THEN crosses the pod (DCN) axis
+    with only Q*k candidates instead of n_data_shards*Q*k — the paper's L1
+    (pod-local) / L2 (cross-pod) hierarchy expressed as a collective
+    schedule (§Perf). ``hierarchical=False`` is the flat baseline: gather
+    every shard's candidates everywhere, one merge."""
+    q_n = gs.shape[0]
+    if hierarchical:
+        for a in reversed(axes):  # innermost (ICI) first, DCN last
+            all_s = jax.lax.all_gather(gs, a, axis=0, tiled=False)
+            all_i = jax.lax.all_gather(gi, a, axis=0, tiled=False)
+            flat_s = jnp.moveaxis(all_s, 0, 1).reshape(q_n, -1)
+            flat_i = jnp.moveaxis(all_i, 0, 1).reshape(q_n, -1)
+            k_eff = min(k, flat_s.shape[1])
+            gs, pos = jax.lax.top_k(flat_s, k_eff)
+            gi = jnp.take_along_axis(flat_i, pos, axis=1)
+        return gs, gi
+    k_in = gs.shape[-1]
+    for a in axes:
+        gs = jax.lax.all_gather(gs, a, axis=0, tiled=False)
+        gi = jax.lax.all_gather(gi, a, axis=0, tiled=False)
+    flat_s = jnp.moveaxis(gs.reshape(-1, q_n, k_in), 0, 1).reshape(q_n, -1)
+    flat_i = jnp.moveaxis(gi.reshape(-1, q_n, k_in), 0, 1).reshape(q_n, -1)
+    gs, pos = jax.lax.top_k(flat_s, min(k, flat_s.shape[1]))
+    gi = jnp.take_along_axis(flat_i, pos, axis=1)
+    return gs, gi
+
+
 def make_sharded_lookup(mesh, *, k: int, metric: str = "cosine", hierarchical: bool = True):
     """Builds the jitted sharded lookup: (db, valid, q) -> (scores, global idx).
 
@@ -71,41 +115,10 @@ def make_sharded_lookup(mesh, *, k: int, metric: str = "cosine", hierarchical: b
         s = jnp.where(valid_l[None, :], s, -jnp.inf)
         k_eff = min(k, cap_local)
         top_s, top_i = jax.lax.top_k(s, k_eff)  # local indices
-        # translate to global ids
-        shard_id = jnp.zeros((), jnp.int32)
-        mul = 1
-        for a in reversed(axes):
-            shard_id = shard_id + jax.lax.axis_index(a) * mul
-            mul = mul * mesh.shape[a]  # static axis size (jax.lax.axis_size needs jax>=0.5)
-        top_i = top_i + shard_id * cap_local
-        if hierarchical:
-            # hierarchical candidate exchange: gather k per shard over the
-            # in-pod (ICI) axis first, merge back down to k, THEN cross the
-            # pod (DCN) axis with only Q*k candidates instead of
-            # n_data_shards*Q*k — the paper's L1 (pod-local) / L2 (cross-pod)
-            # hierarchy expressed as a collective schedule (§Perf).
-            gs, gi = top_s, top_i
-            for a in reversed(axes):  # innermost (ICI) first, DCN last
-                all_s = jax.lax.all_gather(gs, a, axis=0, tiled=False)
-                all_i = jax.lax.all_gather(gi, a, axis=0, tiled=False)
-                flat_s = jnp.moveaxis(all_s, 0, 1).reshape(q.shape[0], -1)
-                flat_i = jnp.moveaxis(all_i, 0, 1).reshape(q.shape[0], -1)
-                k_eff2 = min(k, flat_s.shape[1])
-                gs, pos = jax.lax.top_k(flat_s, k_eff2)
-                gi = jnp.take_along_axis(flat_i, pos, axis=1)
-            return gs, gi
-        # flat baseline: gather every shard's candidates everywhere, one merge
-        all_s, all_i = top_s, top_i
-        for a in axes:
-            all_s = jax.lax.all_gather(all_s, a, axis=0, tiled=False)
-            all_i = jax.lax.all_gather(all_i, a, axis=0, tiled=False)
-        all_s = all_s.reshape(-1, *top_s.shape[-2:])
-        all_i = all_i.reshape(-1, *top_i.shape[-2:])
-        flat_s = jnp.moveaxis(all_s, 0, 1).reshape(q.shape[0], -1)
-        flat_i = jnp.moveaxis(all_i, 0, 1).reshape(q.shape[0], -1)
-        gs, pos = jax.lax.top_k(flat_s, k)
-        gi = jnp.take_along_axis(flat_i, pos, axis=1)
-        return gs, gi
+        # translate to global ids, then one shared collective merge
+        top_i = top_i + shard_id(mesh, axes) * cap_local
+        return all_gather_merge_topk(axes, top_s, top_i, k,
+                                     hierarchical=hierarchical)
 
     db_spec = P(axis_tuple, None)
     valid_spec = P(axis_tuple)
@@ -160,34 +173,10 @@ def make_banked_lookup(
         s = jnp.where(v2[None, :], qn @ dbn.T, -jnp.inf)  # [Q, cap_shard]
         k_eff = min(k, cap_shard)
         top_s, top_i = jax.lax.top_k(s, k_eff)  # shard-local flat indices
-        shard_id = jnp.zeros((), jnp.int32)
-        mul = 1
-        for a in reversed(axes):
-            shard_id = shard_id + jax.lax.axis_index(a) * mul
-            mul = mul * mesh.shape[a]
         # shard-local flat idx -> bank-global flat idx (lane-major layout)
-        top_i = top_i + shard_id * cap_shard
-        gs, gi = top_s, top_i
-        if hierarchical:
-            for a in reversed(axes):  # innermost (ICI) first, DCN last
-                all_s = jax.lax.all_gather(gs, a, axis=0, tiled=False)
-                all_i = jax.lax.all_gather(gi, a, axis=0, tiled=False)
-                flat_s = jnp.moveaxis(all_s, 0, 1).reshape(q.shape[0], -1)
-                flat_i = jnp.moveaxis(all_i, 0, 1).reshape(q.shape[0], -1)
-                k_eff2 = min(k, flat_s.shape[1])
-                gs, pos = jax.lax.top_k(flat_s, k_eff2)
-                gi = jnp.take_along_axis(flat_i, pos, axis=1)
-            return gs, gi
-        for a in axes:
-            gs = jax.lax.all_gather(gs, a, axis=0, tiled=False)
-            gi = jax.lax.all_gather(gi, a, axis=0, tiled=False)
-        gs = gs.reshape(-1, *top_s.shape[-2:])
-        gi = gi.reshape(-1, *top_i.shape[-2:])
-        flat_s = jnp.moveaxis(gs, 0, 1).reshape(q.shape[0], -1)
-        flat_i = jnp.moveaxis(gi, 0, 1).reshape(q.shape[0], -1)
-        gs, pos = jax.lax.top_k(flat_s, k)
-        gi = jnp.take_along_axis(flat_i, pos, axis=1)
-        return gs, gi
+        top_i = top_i + shard_id(mesh, axes) * cap_shard
+        return all_gather_merge_topk(axes, top_s, top_i, k,
+                                     hierarchical=hierarchical)
 
     fn = shard_map(
         local_lookup,
@@ -210,6 +199,7 @@ class ShardedVectorStore:
         default_ttl_s: Optional[float] = None,
         staleness_weight: float = 0.0,
         tier1=None,  # HostRamTier: eviction victims demote here, keyed by home shard
+        fused: bool = True,  # serve reads via the collective fused program
     ):
         assert eviction in ("lru", "lfu", "fifo")
         self.mesh = mesh
@@ -236,9 +226,18 @@ class ShardedVectorStore:
         # the bank owns rows/masks/counters; this store is its sharded lane view
         self.bank = StoreBank(dim, [self.cap_local] * n_shards, metric=metric,
                               buf=buf, valid=valid)
+        # counters and lifecycle stamps shard with the lanes they describe —
+        # the fused read program's touch scatters land on the owning shard's
+        # device slice without any cross-device counter traffic
+        for name in ("d_last_access", "d_access_count", "d_insert_seq",
+                     "d_created", "d_expires"):
+            setattr(self.bank, name,
+                    jax.device_put(getattr(self.bank, name), self._valid_sharding))
         self._lookup = make_banked_lookup(
             mesh, k=k, metric=metric, prenormalized=self.bank.prenormalized
         )
+        self.fused = bool(fused) and bool(axes)
+        self._srb = None  # lazy single-member ShardedReadBank (fused reads)
         self.default_ttl_s = default_ttl_s
         self.staleness_weight = float(staleness_weight)
         for lane in range(n_shards):
@@ -263,11 +262,11 @@ class ShardedVectorStore:
                 expires.at[c_lanes, c_withins].set(c_expires),
             )
 
+        vsh = self._valid_sharding
         self._add_many = jax.jit(
             _scatter,
             donate_argnums=(0, 1, 2, 3, 4, 5, 6),
-            out_shardings=(self._db_sharding, self._valid_sharding,
-                           None, None, None, None, None),
+            out_shardings=(self._db_sharding, vsh, vsh, vsh, vsh, vsh, vsh),
         )
 
         def _free(valid, last, cnt, seq, created, expires, lanes, withins):
@@ -282,14 +281,17 @@ class ShardedVectorStore:
                 expires.at[lanes, withins].set(jnp.inf),
             )
 
-        # the bank's free path must re-shard the validity mask like ours
+        # the bank's free path must re-shard the mask AND counters like ours
         self.bank._free_jit = jax.jit(
             _free,
             donate_argnums=(0, 1, 2, 3, 4, 5),
-            out_shardings=(self._valid_sharding, None, None, None, None, None),
+            out_shardings=(vsh, vsh, vsh, vsh, vsh, vsh),
         )
         self.size = 0
         self.payloads: List[Optional[tuple]] = [None] * self.capacity
+        # per-slot meta dicts (hierarchy promotion flags etc.) — payloads stay
+        # bare (query, response) tuples for the legacy search_batch contract
+        self._metas: List[Optional[dict]] = [None] * self.capacity
         self._rr = 0  # round-robin placement cursor for the first fill
         self._seq = 0  # insertion counter feeding the fifo policy
         # key -> slot map + freed-slot reuse (shared scheme with
@@ -345,7 +347,7 @@ class ShardedVectorStore:
                 key=key,
                 query=payload[0],
                 response=payload[1],
-                meta={"home_shard": lane},
+                meta={**(self._metas[idx] or {}), "home_shard": lane},
                 created_at=self.bank.to_abs(float(self.bank.h_created[lane, within])),
                 expires_at=self.bank.to_abs(expires_rel),
                 access_count=int(self.bank.access_count[lane, within]),
@@ -390,6 +392,11 @@ class ShardedVectorStore:
             else:
                 self.size += 1
             self.payloads[idx] = (te.query, te.response)
+            # home_shard is placement routing, not entry state — strip it so a
+            # later demotion records the slot's CURRENT lane, not a stale one
+            meta = {k: v for k, v in dict(te.meta or {}).items()
+                    if k != "home_shard"}
+            self._metas[idx] = meta or None
             self._slot_key[idx] = te.key
             self._key_to_slot[te.key] = idx
             self._next_key = max(self._next_key, te.key + 1)
@@ -410,7 +417,10 @@ class ShardedVectorStore:
                 # mirror immediately (not after the loop): a later placement
                 # in this same batch may evict this row and demote its vector
                 self._host_rows[idx] = rows[j]
-        self._scatter_rows(idxs, rows)
+        # tier-1 promotions stage through pinned host memory when the backend
+        # supports it: the restore scatter's H2D copy can then overlap the
+        # read dispatch it rides alongside (pageable fallback on CPU)
+        self._scatter_rows(idxs, rows, pinned=True)
 
     # flat views of the banked buffers (the pre-bank [N, D] layout; lane-major
     # flattening preserves the old global slot numbering)
@@ -451,7 +461,8 @@ class ShardedVectorStore:
         )
 
     def _claim_slot(
-        self, idx: int, query: str, response: str, ttl_s: Optional[float] = None
+        self, idx: int, query: str, response: str,
+        meta: Optional[dict] = None, ttl_s: Optional[float] = None,
     ) -> int:
         """Host-side bookkeeping for one placement (shared by add/add_batch)."""
         old = self._slot_key[idx]
@@ -463,6 +474,7 @@ class ShardedVectorStore:
         key = self._next_key
         self._next_key += 1
         self.payloads[idx] = (query, response)
+        self._metas[idx] = dict(meta) if meta else None
         self._slot_key[idx] = key
         self._key_to_slot[key] = idx
         lane, within = self._lane_within(idx)
@@ -476,8 +488,13 @@ class ShardedVectorStore:
         self._seq += 1
         return key
 
-    def _scatter_rows(self, idxs: List[int], rows: np.ndarray) -> None:
+    def _scatter_rows(self, idxs: List[int], rows: np.ndarray,
+                      pinned: bool = False) -> None:
         sel_rows, sel_idx = prepare_scatter(idxs, rows)
+        if pinned:
+            from repro.kernels.backend import stage_pinned
+
+            sel_rows = stage_pinned(sel_rows)
         lanes = (sel_idx // self.cap_local).astype(np.int32)
         withins = (sel_idx % self.cap_local).astype(np.int32)
         # the claims' counter + lifecycle resets ride the same donated update
@@ -497,9 +514,9 @@ class ShardedVectorStore:
         )
 
     def add(self, vec: np.ndarray, query: str, response: str,
-            ttl_s: Optional[float] = None) -> int:
+            meta: Optional[dict] = None, ttl_s: Optional[float] = None) -> int:
         idx = self._next_index()
-        key = self._claim_slot(idx, query, response, ttl_s)
+        key = self._claim_slot(idx, query, response, meta, ttl_s)
         row = np.asarray(vec, np.float32).reshape(1, self.dim)
         if self._host_rows is not None:
             self._host_rows[idx] = row[0]
@@ -507,6 +524,7 @@ class ShardedVectorStore:
         return key
 
     def add_batch(self, vecs: np.ndarray, queries, responses,
+                  metas: Optional[List[Optional[dict]]] = None,
                   ttls: Optional[List[Optional[float]]] = None) -> List[int]:
         """N placements in ONE donated scatter into the sharded bank.
 
@@ -514,18 +532,22 @@ class ShardedVectorStore:
         matches N sequential ``add`` calls, freed-slot reuse and policy
         eviction included; if the batch overwrites one slot twice, the last
         write wins — exactly what the sequential loop would leave behind.
-        ``ttls`` carries an optional per-entry TTL (None = default_ttl_s).
+        ``metas``/``ttls`` carry optional per-entry meta dicts and TTLs
+        (None = no meta / default_ttl_s) — the ``InMemoryVectorStore``
+        signature, so ``SemanticCache`` levels can sit on a sharded store.
         """
         n = len(queries)
         if n == 0:
             return []
         rows = np.asarray(vecs, np.float32).reshape(n, self.dim)
+        metas = list(metas) if metas is not None else [None] * n
         ttls = list(ttls) if ttls is not None else [None] * n
         idxs: List[int] = []
         keys: List[int] = []
         for j in range(n):
             idx = self._next_index()
-            keys.append(self._claim_slot(idx, queries[j], responses[j], ttls[j]))
+            keys.append(self._claim_slot(idx, queries[j], responses[j],
+                                         metas[j], ttls[j]))
             idxs.append(idx)
             if self._host_rows is not None:
                 # mirror immediately (not after the loop): a later claim in
@@ -542,6 +564,7 @@ class ShardedVectorStore:
         if idx is None:
             return False
         self.payloads[idx] = None
+        self._metas[idx] = None
         self._slot_key[idx] = None
         lane, within = self._lane_within(idx)
         self.bank.free_slots([lane], [within])
@@ -565,6 +588,7 @@ class ShardedVectorStore:
             if older_than is None or created <= cutoff or expired:
                 self._key_to_slot.pop(key, None)
                 self.payloads[idx] = None
+                self._metas[idx] = None
                 self._slot_key[idx] = None
                 self._free.append(idx)
                 self.size -= 1
@@ -593,7 +617,44 @@ class ShardedVectorStore:
         if pairs:
             self.bank.touch_slots([p[0] for p in pairs], [p[1] for p in pairs])
 
+    # -- fused collective read path (1 dispatch / 0 host hops) -----------------
+
+    def _fused_decision(self, q: np.ndarray, thr, k_eff: int, touch: bool):
+        """One collective fused read over this store's lanes via a
+        single-member ``ShardedReadBank``: local top-k, candidate exchange,
+        pre-top-k lifecycle, threshold decide, and the in-program counter
+        touches — all in ONE dispatch with zero host hops in between."""
+        from repro.core.read_path import LevelSpec
+        from repro.distributed.sharded_read import ShardedReadBank
+
+        if self._srb is None or not self._srb.intact([self]):
+            self._srb = ShardedReadBank(self.mesh, [("sh", self)])
+        spec = LevelSpec(False, True, 0.0, float("inf"), 0, int(k_eff))
+        n = q.shape[0]
+        if thr is None:
+            thr_arr = np.full((n, 1), -np.inf, np.float32)
+        else:
+            thr_arr = np.broadcast_to(
+                np.asarray(thr, np.float32), (n,)
+            ).reshape(n, 1)
+        self.bank.dispatches += 1  # this store's share of the ONE dispatch
+        return self._srb.fused_read(None, [None] * n, thr_arr, (spec,),
+                                    vecs=q, touch=touch)
+
     def search(self, q_vecs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Top-k over every shard: (scores [Q, k], global flat idx [Q, k]).
+        Served by the collective fused program (lifecycle applied pre-top-k,
+        on device); ``fused=False`` stores keep the pre-PR host walk."""
+        if not self.fused:
+            return self.search_host(q_vecs)
+        q = np.atleast_2d(np.asarray(q_vecs, np.float32))
+        dec = self._fused_decision(q, None, self.k, touch=False)
+        return dec.scores[:, 0], dec.idx[:, 0]
+
+    def search_host(self, q_vecs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """The pre-fused read path — device search, HOST-side lifecycle
+        rescore (2 host hops) — kept as the parity-test / benchmark
+        reference and the ``fused=False`` escape hatch."""
         # Q padded to a power-of-two bucket so variable serving batch sizes
         # reuse O(log Q) compiled variants instead of retracing per size
         self.bank.flush_pending()
@@ -612,22 +673,46 @@ class ShardedVectorStore:
             s, i = self.bank.resort_desc(s_eff, i)
         return s, i
 
+    def _join_payloads(
+        self, scores: np.ndarray, idx: np.ndarray, k_eff: int,
+    ) -> List[List[Tuple[float, tuple]]]:
+        out: List[List[Tuple[float, tuple]]] = []
+        for srow, irow in zip(scores, idx):
+            row = []
+            for sc, i in zip(srow, irow):
+                payload = (
+                    self.payloads[int(i)] if 0 <= int(i) < self.capacity else None
+                )
+                if np.isfinite(sc) and payload is not None:
+                    row.append((float(sc), payload))
+            out.append(row[:k_eff])
+        return out
+
     def search_batch(
         self, q_vecs: np.ndarray, k: Optional[int] = None, touch: bool = True
     ) -> List[List[Tuple[float, tuple]]]:
-        """Batched payload-joined lookup for Q queries in ONE shard_map dot.
-
-        The replicated [Q, D] query block rides the same per-shard MXU matmul
-        and hierarchical candidate exchange as a single query — only the
-        all-gathered [Q, k] candidate sets grow with Q. Returns, per query,
-        the finite (score, (query, response)) candidates in score order, i.e.
-        the same join ``InMemoryVectorStore.search_batch`` performs. ``k``
-        caps the candidates per query (at most the configured search k);
-        ``touch=True`` bumps the bank's per-lane recency/frequency counters
-        for every returned candidate — the LRU/LFU signal the eviction
-        policy consumes (``touch=False`` defers to ``touch_keys``)."""
+        """Batched payload-joined lookup for Q queries in ONE shard_map
+        program — including, on the fused path, the LRU/LFU touch scatters
+        (each shard bumps the counters of the slots it owns, inside the same
+        dispatch). Returns, per query, the finite (score, (query, response))
+        candidates in score order — the same join
+        ``InMemoryVectorStore.search_batch`` performs. ``k`` caps the
+        candidates per query (at most the configured search k);
+        ``touch=False`` defers the counter bumps to ``touch_keys``."""
         q = np.atleast_2d(np.asarray(q_vecs, np.float32))
-        s, idx = self.search(q)
+        k_eff = self.k if k is None else min(k, self.k)
+        if not self.fused:
+            return self.search_batch_host(q, k=k_eff, touch=touch)
+        dec = self._fused_decision(q, None, k_eff, touch=touch)
+        return self._join_payloads(dec.scores[:, 0], dec.idx[:, 0], k_eff)
+
+    def search_batch_host(
+        self, q_vecs: np.ndarray, k: Optional[int] = None, touch: bool = True
+    ) -> List[List[Tuple[float, tuple]]]:
+        """Host-walk reference twin of ``search_batch``: device search, then
+        join + touch decided in host Python (one extra counter scatter)."""
+        q = np.atleast_2d(np.asarray(q_vecs, np.float32))
+        s, idx = self.search_host(q)
         k_eff = self.k if k is None else min(k, self.k)
         out: List[List[Tuple[float, tuple]]] = []
         touched: List[Tuple[int, int]] = []
@@ -649,10 +734,77 @@ class ShardedVectorStore:
         self, q_vecs: np.ndarray, thresholds
     ) -> List[Optional[Tuple[float, tuple]]]:
         """Apply per-query thresholds vectorized over the batched search:
-        returns the best (score, payload) when score > threshold, else None."""
+        returns the best (score, payload) when score > threshold, else None.
+        On the fused path the threshold compare happens IN the device
+        program (the decide stage's hit mask) — the host only joins
+        payloads for the winning rows."""
         q = np.atleast_2d(np.asarray(q_vecs, np.float32))
         thr = np.broadcast_to(np.asarray(thresholds, np.float32), (q.shape[0],))
-        rows = self.search_batch(q)
+        if not self.fused:
+            return self.lookup_batch_host(q, thr)
+        dec = self._fused_decision(q, thr, self.k, touch=True)
+        out: List[Optional[Tuple[float, tuple]]] = []
+        for qi in range(q.shape[0]):
+            if not dec.hit[qi, 0]:
+                out.append(None)
+                continue
+            i = int(dec.idx[qi, 0, 0])
+            payload = self.payloads[i] if 0 <= i < self.capacity else None
+            out.append(
+                (float(dec.scores[qi, 0, 0]), payload)
+                if payload is not None else None
+            )
+        return out
+
+    def lookup_batch_host(
+        self, q_vecs: np.ndarray, thresholds
+    ) -> List[Optional[Tuple[float, tuple]]]:
+        """Host-walk reference twin of ``lookup_batch`` (threshold compare
+        in host numpy over the host-joined candidate rows)."""
+        q = np.atleast_2d(np.asarray(q_vecs, np.float32))
+        thr = np.broadcast_to(np.asarray(thresholds, np.float32), (q.shape[0],))
+        rows = self.search_batch_host(q)
         best = np.asarray([r[0][0] if r else -np.inf for r in rows])
         hit = best > thr
         return [rows[i][0] if hit[i] else None for i in range(q.shape[0])]
+
+    def join_candidates(
+        self, scores: np.ndarray, idx: np.ndarray, touch: bool = True
+    ) -> List[List[Tuple[float, "object"]]]:
+        """Join raw (scores [Q, k], GLOBAL flat idx [Q, k]) search output
+        into (score, ``Entry``) rows — the hierarchy-facing twin of
+        ``InMemoryVectorStore.join_candidates``, reconstructing Entries from
+        the host payload/meta/lifecycle state the sharded store keeps.
+        ``touch=True`` bumps the joined slots' counters in one scatter (the
+        fused read path passes ``touch=False`` — its bumps already happened
+        inside the read program)."""
+        from repro.core.vector_store import Entry
+
+        out: List[List[Tuple[float, Entry]]] = []
+        touched: List[Tuple[int, int]] = []
+        for srow, irow in zip(scores, idx):
+            row = []
+            for sc, i in zip(srow, irow):
+                i = int(i)
+                if not 0 <= i < self.capacity:
+                    continue
+                payload = self.payloads[i]
+                key = self._slot_key[i]
+                if not np.isfinite(sc) or payload is None or key is None:
+                    continue
+                lane, within = self._lane_within(i)
+                if touch:
+                    touched.append((lane, within))
+                row.append((
+                    float(sc),
+                    Entry(
+                        key, payload[0], payload[1],
+                        dict(self._metas[i] or {}),
+                        self.bank.to_abs(float(self.bank.h_created[lane, within])),
+                        self.bank.to_abs(float(self.bank.h_expires[lane, within])),
+                    ),
+                ))
+            out.append(row)
+        if touched:
+            self.bank.touch_slots([p[0] for p in touched], [p[1] for p in touched])
+        return out

@@ -63,3 +63,41 @@ def resolve_interpret(interpret: Optional[bool] = None) -> bool:
     if env is not None:
         return env
     return jax.default_backend() == "cpu"
+
+
+# pinned-host staging support: None = not yet probed, else the cached verdict
+_pinned_ok: Optional[bool] = None
+
+
+def pinned_host_supported() -> bool:
+    """Whether this backend exposes a ``pinned_host`` memory space (TPU/GPU
+    runtimes do; CPU — and older runtimes — don't). Probed once per process
+    with a 1-element transfer; the verdict is cached."""
+    global _pinned_ok
+    if _pinned_ok is None:
+        try:
+            import numpy as np
+            from jax.sharding import SingleDeviceSharding
+
+            dev = jax.devices()[0]
+            sharding = SingleDeviceSharding(dev, memory_kind="pinned_host")
+            jax.device_put(np.zeros(1, np.float32), sharding)
+            _pinned_ok = True
+        except Exception:
+            _pinned_ok = False
+    return _pinned_ok
+
+
+def stage_pinned(rows):
+    """Stage a host block for an upcoming device scatter through pinned host
+    memory when the backend supports it (the DMA engine can then overlap the
+    H2D copy with compute on TPU/GPU instead of faulting pageable pages);
+    falls back to returning the pageable numpy block unchanged on CPU."""
+    if not pinned_host_supported():
+        return rows
+    from jax.sharding import SingleDeviceSharding
+
+    dev = jax.devices()[0]
+    return jax.device_put(
+        rows, SingleDeviceSharding(dev, memory_kind="pinned_host")
+    )

@@ -34,3 +34,12 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CI-scale sharding tests (requires >= prod(shape) devices)."""
     return _mesh(shape, axes)
+
+
+def make_cache_mesh(n_shards=None):
+    """1-axis ("data",) mesh for a sharded cache DB: the store's key-sharded
+    lanes spread over ``n_shards`` devices (default: all available). The
+    sharded read path only collectives over pod/data axes, so a cache-only
+    deployment never needs a model axis."""
+    n = len(jax.devices()) if n_shards is None else int(n_shards)
+    return _mesh((n,), ("data",))

@@ -53,6 +53,10 @@ def main(argv=None):
     ap.add_argument("--http-pace-ms", type=float, default=0.0,
                     help="SSE pacing between streamed chunks of a cached "
                          "replay (--http only)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="key-shard a shared L2 store over an N-device cache "
+                         "mesh behind the replicated L1 (0 = L1 only); reads "
+                         "go through the one-dispatch collective program")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=True)
@@ -74,7 +78,26 @@ def main(argv=None):
     cache = GenerativeCache(
         NgramHashEmbedder(), threshold=args.threshold, t_single=0.45, t_combined=1.0
     )
-    client = EnhancedClient(cache=cache)
+    hierarchy = None
+    if args.shards > 0:
+        # sharded deployment: the hot L1 stays replicated, the shared L2's
+        # DB lanes are key-sharded over a cache mesh, and the hierarchy
+        # serves both through ONE collective read program
+        # (repro.distributed.sharded_read)
+        import jax
+
+        from repro.core import HierarchicalCache
+        from repro.distributed.sharded_store import ShardedVectorStore
+        from repro.launch.mesh import make_cache_mesh
+
+        mesh = make_cache_mesh(min(args.shards, len(jax.devices())))
+        emb = cache.embedder
+        l2 = GenerativeCache(
+            emb, threshold=args.threshold, t_single=0.45, t_combined=1.0,
+            store=ShardedVectorStore(mesh, emb.dim, 4096, k=4),
+        )
+        hierarchy = HierarchicalCache(cache, l2)
+    client = EnhancedClient(cache=cache, hierarchy=hierarchy)
     client.register_backend(backend, ModelCostInfo(0.5, 1.5, 3.0))
 
     if args.http is not None:
