@@ -1,0 +1,124 @@
+"""Chaos-replay benchmark: the serving stack under injected backend faults.
+
+Replays ONE seeded Zipfian/bursty workload twice — once against the clean
+``build_stack`` (the baseline) and once against ``build_chaos_stack``,
+where a seeded ``FaultInjector`` makes one backend flap and drops/slows
+~30% of the primary's calls — then drives an all-backends-down window
+that must keep answering from the cache (valid entries -> ``hit``,
+expired entries -> ``stale`` byte-identically, never-cached -> typed 503
+with ``Retry-After``).
+
+Writes ``BENCH_chaos.json``; the CI ``chaos-replay`` job gates on
+
+  * hit-path isolation: chaos hit p50 <= 1.2x the clean replay's (faults
+    live on the dispatch path; the cache read path must not feel them),
+  * availability >= 0.99 while the faults fire (stale serving counts —
+    serving yesterday's answer IS the availability mechanism),
+  * the all-down window: every expired entry served ``stale`` with byte
+    parity, every valid entry served ``hit``, over HTTP too,
+  * fault evidence: the injector actually fired (a chaos bench that
+    injected nothing gates nothing),
+  * zero futures dropped at drain in either replay.
+
+Run:  PYTHONPATH=src python benchmarks/chaos_replay.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from dataclasses import asdict
+from typing import Any, Dict
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import emit  # noqa: E402
+
+
+def main(argv=None) -> Dict[str, Any]:
+    from repro.gateway.traffic import (
+        TrafficConfig,
+        _warm,
+        build_stack,
+        generate_workload,
+        make_corpus,
+        prewarm,
+        run_chaos_replay,
+        run_inprocess,
+    )
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--requests", type=int, default=0)
+    ap.add_argument("--users", type=int, default=0)
+    ap.add_argument("--time-scale", type=float, default=3.0,
+                    help="stretch arrivals so misses form many small "
+                         "dispatch groups (= many failover walks)")
+    ap.add_argument("--fault-rate", type=float, default=0.3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    args = ap.parse_args(argv)
+
+    cfg = TrafficConfig(
+        n_requests=args.requests or (192 if args.smoke else 384),
+        n_users=args.users or (16 if args.smoke else 24),
+        corpus_size=32 if args.smoke else 64,
+        seed=args.seed,
+    )
+    backend_s = 0.04
+    workload = generate_workload(cfg)
+
+    # clean baseline: same workload, same backend latency, no faults — the
+    # denominator of the hit-path-isolation gate
+    service, client, cache = build_stack(
+        backend_latency_s=backend_s, tier1_capacity=8 * cfg.corpus_size,
+        capacity=2 * cfg.corpus_size, max_inflight=256,
+    )
+    _warm(service, cache)
+    prewarm(cache, make_corpus(cfg), churn=2 * cfg.corpus_size)
+    base = run_inprocess(service, workload, time_scale=args.time_scale).to_dict()
+
+    chaos_out = run_chaos_replay(
+        cfg, backend_latency_s=backend_s, time_scale=args.time_scale,
+        fault_rate=args.fault_rate, seed=args.seed,
+    )
+    chaos = chaos_out["chaos"]
+    window = chaos_out["all_down_window"]
+
+    out: Dict[str, Any] = {
+        "config": asdict(cfg),
+        "backend_latency_ms": backend_s * 1e3,
+        "time_scale": args.time_scale,
+        "baseline": base,
+        **chaos_out,
+        "hit_p50_chaos_over_clean": (
+            chaos["hit_p50_ms"] / base["hit_p50_ms"]
+            if base["hit_p50_ms"] > 0  # False for the empty-hits NaN too
+            else float("nan")
+        ),
+        "availability": chaos["availability"],
+        "dropped_at_drain": max(base["dropped_at_drain"], chaos["dropped_at_drain"]),
+    }
+
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+
+    emit("chaos_hit_p50", chaos["hit_p50_ms"] * 1e3,
+         f"clean={base['hit_p50_ms'] * 1e3:.0f};"
+         f"ratio={out['hit_p50_chaos_over_clean']:.2f}x")
+    emit("chaos_availability", chaos["availability"] * 1e6,
+         f"fault_share={chaos_out['fault_share']:.2f};"
+         f"injected={chaos_out['chaos_faults']['total_injected']};"
+         f"unavailable={chaos['backend_unavailable']}")
+    emit("chaos_all_down_stale", window["stale_serve_rate"] * 1e6,
+         f"stale={window['stale']}/{window['n_expired']};"
+         f"hit={window['hit']}/{window['n_valid']};"
+         f"parity={window['stale_byte_parity']};"
+         f"http_stale={window['http']['stale']}")
+    print(f"-> {args.out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

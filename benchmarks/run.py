@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
   hitrate_*   — §3: threshold sweep + generative uplift
   adaptive_*  — §3.1: controller convergence
   traffic_*   — end-to-end serving under replayed Zipfian/bursty load
+  chaos_*     — same workload under injected backend faults + all-down window
   batchpipe_* — batched pipeline: per-query latency vs batch size
 """
 from __future__ import annotations
@@ -20,6 +21,7 @@ def main() -> None:
         adaptive_bench,
         batch_pipeline,
         cache_ops,
+        chaos_replay,
         embedders,
         gptcache_compare,
         hitrate,
@@ -33,6 +35,7 @@ def main() -> None:
     hitrate.main()
     adaptive_bench.main()
     traffic_replay.main()
+    chaos_replay.main(["--smoke"])
     batch_pipeline.main(["--smoke"])
 
 

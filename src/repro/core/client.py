@@ -19,6 +19,7 @@ limits, and the feedback/cost controllers servoing t_s.
 """
 from __future__ import annotations
 
+import random
 import threading
 import time
 from dataclasses import dataclass
@@ -35,6 +36,9 @@ from repro.core.generative_cache import GenerativeCache
 from repro.core.hierarchy import HierarchicalCache
 from repro.core.request import CacheRequest, CacheResponse
 from repro.core.semantic_cache import CacheResult
+from repro.resilience.breaker import CircuitBreaker
+from repro.resilience.errors import AllBackendsFailed, BackendFailure
+from repro.resilience.retry import RetryBudget, RetryPolicy
 
 
 def accepts_kwarg(cls, method_name: str, kwarg: str) -> bool:
@@ -176,6 +180,10 @@ class ClientStats:
     cache_hits: int = 0
     llm_calls: int = 0
     llm_errors: int = 0
+    retries: int = 0  # backend calls repeated after a failure (same backend)
+    breaker_trips: int = 0  # closed/half-open -> open transitions
+    breaker_open_skips: int = 0  # backends skipped without a call (fast-fail)
+    all_backends_failed: int = 0  # failover walks that exhausted every backend
     total_cost_usd: float = 0.0
     total_latency_s: float = 0.0
 
@@ -194,6 +202,9 @@ class EnhancedClient:
         quality_target: float = 0.8,
         target_cost_per_request: Optional[float] = None,
         max_workers: int = 8,  # kept for signature compat; the service's schedulers replaced the pool
+        retry_policy: Optional[RetryPolicy] = None,
+        retry_budget: Optional[RetryBudget] = None,
+        breaker_factory: Optional[Callable[[str], CircuitBreaker]] = None,
     ):
         if policy is not None:
             self.policy = policy
@@ -227,6 +238,15 @@ class EnhancedClient:
         self._state_lock = threading.Lock()
         self._cache_lock = threading.RLock()
         self._preferred_level = 0  # guarded-by: _state_lock
+        # -- resilience (repro.resilience): per-backend breakers + retry --
+        # breakers/_breaker_factory mutate only at registration time (setup,
+        # single-threaded by convention); each CircuitBreaker is internally
+        # locked, so the dispatch path reads them lock-free
+        self.retry_policy = retry_policy or RetryPolicy()
+        self.retry_budget = retry_budget or RetryBudget()
+        self._breaker_factory = breaker_factory or (lambda name: CircuitBreaker(name))
+        self.breakers: Dict[str, CircuitBreaker] = {}
+        self._retry_rng = random.Random(0)  # guarded-by: _state_lock
 
     # -- service delegation ----------------------------------------------------
 
@@ -259,9 +279,15 @@ class EnhancedClient:
 
     def register_backend(self, backend: LLMBackend, price: Optional[ModelCostInfo] = None):
         self.backends[backend.name] = backend
-        self._order.append(backend.name)
+        if backend.name not in self._order:
+            self._order.append(backend.name)
+        self.breakers[backend.name] = self._breaker_factory(backend.name)
         if price is not None:
             self.price_table[backend.name] = price
+
+    def breaker_snapshot(self) -> Dict[str, dict]:
+        """Per-backend breaker state for /healthz and /v1/cache/stats."""
+        return {name: br.snapshot() for name, br in self.breakers.items()}
 
     def _price(self, model: str) -> ModelCostInfo:
         return self.price_table.get(model, ModelCostInfo())
@@ -362,30 +388,122 @@ class EnhancedClient:
             return bool(declared)
         return accepts_kwarg(type(backend), "generate_batch", "deadlines")
 
+    def _jitter_draw(self) -> float:
+        with self._state_lock:
+            return self._retry_rng.random()
+
     def _generate_batch_with_failover(
         self, model, prompts, max_tokens, temperature, deadlines=None
     ) -> List[LLMResponse]:
-        """Batched failover: the whole miss batch moves to the next backend.
-        ``deadlines`` (absolute stamps) reach deadline-aware backends, which
-        cancel mid-generation once a request's deadline passes; legacy
-        backends that do not declare the kwarg are called without it."""
-        tried = []
-        names = [model] + [n for n in self._order if n != model]
+        """Batched failover with per-backend retry + circuit breaking.
+
+        Rows whose deadline has ALREADY passed resolve in place as typed
+        ``expired`` responses — an expiry is the caller's clock running out,
+        not a backend failure, so it burns no call, no retry, no failover
+        hop, and no ``llm_errors`` bump. The live rows then walk the
+        escalation order: backends whose breaker is open are skipped without
+        a call; each admitted backend gets up to ``retry_policy.max_attempts``
+        tries with exponential backoff + jitter, gated by the global retry
+        budget and by deadline headroom (never sleep past the soonest live
+        deadline). Exhausting every backend raises a typed
+        ``AllBackendsFailed`` carrying structured per-backend causes.
+        """
+        n = len(prompts)
+        out: List[Optional[LLMResponse]] = [None] * n
+        stamps = list(deadlines) if deadlines is not None else [None] * n
+
+        def _expire_passed(now: float) -> None:
+            for i in range(n):
+                if out[i] is None and stamps[i] is not None and now > stamps[i]:
+                    out[i] = LLMResponse("", model or "", expired=True)
+
+        def _live() -> List[int]:
+            return [i for i in range(n) if out[i] is None]
+
+        _expire_passed(time.perf_counter())
+        if not _live():
+            return [r for r in out if r is not None]
+
+        self.retry_budget.deposit(len(_live()))
+        causes: List[BackendFailure] = []
+        names = [model] + [n_ for n_ in self._order if n_ != model]
         for name in names:
             backend = self.backends.get(name)
             if backend is None:
                 continue
+            _expire_passed(time.perf_counter())
+            live = _live()
+            if not live:
+                break
+            breaker = self.breakers.get(name)
+            if breaker is not None and not breaker.allow():
+                causes.append(BackendFailure(name, skipped=True))
+                with self._state_lock:
+                    self.stats.breaker_open_skips += 1
+                continue
+            failure = self._call_backend_with_retry(
+                backend, breaker, out, stamps, live, prompts, max_tokens, temperature
+            )
+            if failure is None:
+                return [r for r in out if r is not None]
+            causes.append(failure)
+        _expire_passed(time.perf_counter())
+        if not _live():
+            # every remaining row expired while we failed over: a typed
+            # per-row expiry beats an exception that would also poison the
+            # rows a backend DID answer earlier
+            return [r for r in out if r is not None]
+        with self._state_lock:
+            self.stats.all_backends_failed += 1
+        raise AllBackendsFailed(causes)
+
+    def _call_backend_with_retry(
+        self, backend, breaker, out, stamps, live, prompts, max_tokens, temperature
+    ) -> Optional[BackendFailure]:
+        """Try ONE backend for the ``live`` rows, retrying per policy.
+        Returns None on success (results written into ``out``), else the
+        structured failure record for the AllBackendsFailed envelope."""
+        name = backend.name
+        sub_prompts = [prompts[i] for i in live]
+        sub_stamps = [stamps[i] for i in live]
+        pass_deadlines = any(s is not None for s in sub_stamps) and self._accepts_deadlines(backend)
+        soonest = min((s for s in sub_stamps if s is not None), default=None)
+        failure = BackendFailure(name)
+        for attempt in range(1, self.retry_policy.max_attempts + 1):
+            failure.attempts = attempt
             try:
-                if deadlines is not None and self._accepts_deadlines(backend):
-                    return backend.generate_batch(
-                        prompts, max_tokens, temperature, deadlines=deadlines
+                if pass_deadlines:
+                    rows = backend.generate_batch(
+                        sub_prompts, max_tokens, temperature, deadlines=sub_stamps
                     )
-                return backend.generate_batch(prompts, max_tokens, temperature)
+                else:
+                    rows = backend.generate_batch(sub_prompts, max_tokens, temperature)
             except Exception as e:  # noqa: BLE001 — failover on any backend error
-                tried.append((name, repr(e)))
+                failure.errors.append(repr(e))
+                failure.kinds.append(type(e).__name__)
+                tripped = breaker.record_failure() if breaker is not None else False
                 with self._state_lock:
                     self.stats.llm_errors += 1
-        raise ConnectionError(f"all backends failed: {tried}")
+                    if tripped:
+                        self.stats.breaker_trips += 1
+                if attempt >= self.retry_policy.max_attempts:
+                    return failure
+                backoff = self.retry_policy.backoff_s(attempt, self._jitter_draw())
+                if soonest is not None and time.perf_counter() + backoff >= soonest:
+                    return failure  # no headroom: retrying would land past the deadline
+                if not self.retry_budget.try_spend():
+                    return failure  # global retry budget dry: move on immediately
+                with self._state_lock:
+                    self.stats.retries += 1
+                if backoff > 0:
+                    time.sleep(backoff)
+                continue
+            if breaker is not None:
+                breaker.record_success()
+            for i, row in zip(live, rows):
+                out[i] = row
+            return None
+        return failure  # unreachable, but keeps the type checker honest
 
     # -- parallel multi-LLM dispatch (§5.2) ---------------------------------------
 

@@ -180,6 +180,47 @@ class HierarchicalCache:
         self._sharded_bank = ShardedReadBank(meshes[0], members)
         return self._sharded_bank
 
+    # -- stale-if-error walk (degraded path; resilience subsystem) -------------
+
+    def lookup_stale(
+        self, queries, vecs, contexts, now=None, max_stale_s=None, l2_ok=None
+    ):
+        """Serve expired entries when every backend is down: walk the levels
+        in hierarchy order (L1 > L2 > peers — the same priority a live
+        lookup uses) and take the first level whose stale inventory clears
+        that level's threshold for a row. ``l2_ok`` (per-row bools) carries
+        the ``cache_l2`` privacy hint: a False row consults ONLY L1 — the
+        degraded path must not leak a private query into shared levels. No
+        promotion, no counter movement — see ``SemanticCache.lookup_stale``.
+        Returns row -> CacheResult with the level name folded into
+        ``level``."""
+        out = {}
+        for li, (name, cache) in enumerate(self._levels()):
+            remaining = [
+                r
+                for r in range(len(queries))
+                if r not in out and (li == 0 or l2_ok is None or l2_ok[r])
+            ]
+            if not remaining:
+                continue
+            thr = [
+                cache.effective_threshold(queries[r], contexts[r]) for r in remaining
+            ]
+            sub_vecs = np.asarray(vecs, np.float32)[remaining]
+            stales = (
+                max_stale_s
+                if max_stale_s is None or np.isscalar(max_stale_s)
+                else [max_stale_s[r] for r in remaining]
+            )
+            found = cache.lookup_stale(
+                [queries[r] for r in remaining], sub_vecs, thr,
+                now=now, max_stale_s=stales,
+            )
+            for j, res in found.items():
+                res.level = f"stale:{name}:{res.level.split(':', 1)[1]}"
+                out[remaining[j]] = res
+        return out
+
     # -- cross-level generative pool (§3 rule applied over every level) --------
 
     def _pool_candidates(self, level_matches: List[list]) -> List[tuple]:

@@ -33,6 +33,7 @@ if TYPE_CHECKING:  # typing only — avoids a runtime cycle with repro.core.clie
 HIT = "hit"  # served from cache (semantic or generative)
 GENERATED = "generated"  # miss: a backend generated the answer
 DEADLINE_EXCEEDED = "deadline_exceeded"  # miss expired in queue; no backend call
+STALE = "stale"  # stale-if-error: expired entry served because every backend was down
 
 
 @dataclass
@@ -50,6 +51,11 @@ class CacheRequest:
     deadline_s: Optional[float] = None  # relative to submit; expired misses don't generate
     ttl_s: Optional[float] = None  # backfilled answer's cache lifetime; None = store default
     stream: bool = False  # caller wants chunked delivery (CacheService.astream / SSE)
+    # stale-if-error (resilience): when every backend is open/down, a request
+    # that opted in may be answered from an EXPIRED cache entry instead of a
+    # 503 — bounded by max_stale_s past expiry (None = any age)
+    allow_stale: bool = False
+    max_stale_s: Optional[float] = None
     metadata: Dict[str, Any] = field(default_factory=dict)
 
 
@@ -74,8 +80,12 @@ class CacheResponse:
         """Where the answer came from, as the gateway's ``X-Cache`` value:
         ``hit`` (plain semantic tier-0), ``generative`` (synthesized from
         several sources, §3), ``tier1`` (promoted from the host-RAM ring),
-        or ``miss`` (a backend generated it — including expiries, which the
-        gateway maps to an error status before this header matters)."""
+        ``stale`` (expired entry served stale-if-error while backends were
+        down), or ``miss`` (a backend generated it — including expiries,
+        which the gateway maps to an error status before this header
+        matters)."""
+        if self.status == STALE:
+            return "stale"
         if self.status == HIT and self.cache_result is not None:
             level = self.cache_result.level or ""
             if "tier1" in level:

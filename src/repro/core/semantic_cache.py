@@ -37,6 +37,7 @@ class CacheStats:
     hits: int = 0
     generative_hits: int = 0
     tier1_hits: int = 0  # tier-0 misses served from the host-RAM tier
+    stale_hits: int = 0  # expired entries served stale-if-error (backends down)
     adds: int = 0
     embed_time_s: float = 0.0
     search_time_s: float = 0.0
@@ -164,6 +165,99 @@ class SemanticCache:
                 True, entry.response, s, s, False, [(s, entry)],
                 float(thresholds[i]), 0.0, "tier1",
             )
+        return out
+
+    # -- stale-if-error lookup (degraded path; resilience subsystem) ------------
+
+    def lookup_stale(
+        self,
+        queries: List[str],
+        vecs: np.ndarray,
+        thresholds,
+        now: Optional[float] = None,
+        max_stale_s=None,
+    ) -> Dict[int, CacheResult]:
+        """Serve EXPIRED entries when every backend is down (stale-if-error).
+
+        Host-side scan over tier 0's entry table plus the tier-1 ring —
+        deliberately off the fused path: this runs only after the failover
+        walk exhausted every backend, where a host matmul is noise next to
+        the outage. An entry qualifies when it expires (or expired) after
+        ``now - max_stale_s`` (``max_stale_s=None`` accepts any age; live
+        entries qualify trivially). The winner must still clear the row's
+        threshold. Nothing is promoted and no recency/frequency counters
+        move — a dead backend must not reshape the eviction order.
+        ``max_stale_s`` may be a scalar or a per-row sequence; returns
+        row -> CacheResult at level ``stale:tier0`` / ``stale:tier1``.
+        """
+        from repro.core.tiers import _host_scores, _normalize
+
+        q = np.atleast_2d(np.asarray(vecs, np.float32))
+        nq = q.shape[0]
+        now = time.time() if now is None else now
+        if max_stale_s is None or np.isscalar(max_stale_s):
+            stales = [max_stale_s] * nq
+        else:
+            stales = list(max_stale_s)
+        floors = np.array(
+            [-np.inf if s is None else now - float(s) for s in stales], np.float64
+        )
+
+        def _best(db, expires):  # [N, D] rows + [N] expiry stamps -> per-row best
+            if db.shape[0] == 0:
+                return np.full(nq, -np.inf, np.float32), np.full(nq, -1, np.int64)
+            rows = _normalize(db) if self.store.metric == "cosine" else db
+            s = _host_scores(rows, q, self.store.metric).astype(np.float32)
+            ok = expires[None, :] > floors[:, None]
+            s = np.where(ok, s, -np.inf)
+            j = np.argmax(s, axis=-1)
+            return s[np.arange(nq), j], j
+
+        out: Dict[int, CacheResult] = {}
+        # tier 0: the entry table keeps expired rows until eviction reclaims
+        # them — exactly the stale inventory this path serves
+        entries = getattr(self.store, "_entries", None)
+        if entries is not None:
+            t0_idx = [i for i, e in enumerate(entries) if e is not None]
+            if t0_idx:
+                host = self.store._host_rows
+                allrows = (
+                    host if host is not None else np.asarray(self.store._buf, np.float32)
+                )
+                db = np.asarray(allrows, np.float32)[t0_idx]
+                exp = np.array([entries[i].expires_at for i in t0_idx], np.float64)
+                best, j = _best(db, exp)
+                for r in range(nq):
+                    if np.isfinite(best[r]) and best[r] > float(thresholds[r]):
+                        e = entries[t0_idx[int(j[r])]]
+                        out[r] = CacheResult(
+                            True, e.response, float(best[r]), float(best[r]), False,
+                            [(float(best[r]), e)], float(thresholds[r]), 0.0,
+                            "stale:tier0",
+                        )
+        tier = getattr(self.store, "tier1", None)
+        if tier is not None and len(tier) > 0:
+            t1_idx = [i for i, e in enumerate(tier._entries) if e is not None]
+            if t1_idx:
+                db = np.asarray(tier._vecs, np.float32)[t1_idx]
+                exp = np.array([tier._entries[i].expires_at for i in t1_idx], np.float64)
+                best, j = _best(db, exp)
+                for r in range(nq):
+                    if r in out:
+                        continue  # tier 0 already answered this row
+                    if np.isfinite(best[r]) and best[r] > float(thresholds[r]):
+                        te = tier._entries[t1_idx[int(j[r])]]
+                        from repro.core.vector_store import Entry as _Entry
+
+                        e = _Entry(te.key, te.query, te.response, dict(te.meta),
+                                   te.created_at, te.expires_at)
+                        out[r] = CacheResult(
+                            True, e.response, float(best[r]), float(best[r]), False,
+                            [(float(best[r]), e)], float(thresholds[r]), 0.0,
+                            "stale:tier1",
+                        )
+        if out:
+            self.stats.stale_hits += len(out)
         return out
 
     # -- lookup / insert --------------------------------------------------------

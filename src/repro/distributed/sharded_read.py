@@ -112,7 +112,7 @@ def _build_sharded_program(
     tick_off = 1 if rep_levels else 0
 
     def body(embed_args, thr, qmask, router, rep_arrays, rep_life, sh_arrays,
-             sh_life, now, counters, ticks):
+             sh_life, now, counters, ticks, shard_ok):
         q = forward(*embed_args)  # replicated: embeds never leave the device
         level_s: List = [None] * L
         level_i: List = [None] * L
@@ -168,6 +168,11 @@ def _build_sharded_program(
                 )
                 s = s - jnp.where(jnp.isfinite(e2), w2 * frac, 0.0)[None, :]
             s = jnp.where(v2[None, :], s, -jnp.inf)
+            # shard-availability mask (resilience): a shard marked dead
+            # contributes only -inf candidates, so after the merge the
+            # surviving shards' winners serve the lookup instead of the
+            # whole collective failing — degraded, not down
+            s = jnp.where(shard_ok[shard_id(mesh, axes)], s, -jnp.inf)
             ts, ti = jax.lax.top_k(s, min(K, cap_shard))
             # shard-local flat idx -> store-global flat idx, then the tiny
             # [B, k] candidate exchange (ICI first, DCN last)
@@ -204,7 +209,10 @@ def _build_sharded_program(
                 idxg = idx_all[:, li]
                 within = idxg % cap_local
                 ll = idxg // cap_local - shard_id(mesh, axes) * lanes_loc
+                # a dead shard must not move its counters either (its -inf
+                # candidates never win, but tmask covers probed levels)
                 own = tmask[:, li] & (ll >= 0) & (ll < lanes_loc)
+                own = own & shard_ok[shard_id(mesh, axes)]
                 llc = jnp.clip(ll, 0, lanes_loc - 1)
                 cnt = cnt.at[llc, within].add(own.astype(jnp.int32))
                 stamp = jnp.where(own, ticks[tick_off + j], jnp.int32(_INT32_MIN))
@@ -227,7 +235,7 @@ def _build_sharded_program(
         body,
         mesh=mesh,
         in_specs=(P(), P(), P(), P(), rep_arr_spec, rep_life_spec,
-                  sh_arr_spec, sh_life_spec, P(), counters_spec, P()),
+                  sh_arr_spec, sh_life_spec, P(), counters_spec, P(), P()),
         out_specs=(P(), P(), P(), P(), P(), P(), counters_spec),
         check_rep=False,
     )
@@ -281,6 +289,18 @@ class ShardedReadBank:
         self.dispatches = 0
         self.host_hops = 0
         self.counter_scatters = 0
+        # resilience: reads served with >= 1 shard masked dead (survivors'
+        # candidates answered instead of the collective failing)
+        self.degraded_reads = 0
+
+    @property
+    def n_shards(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.axes]))
+
+    @property
+    def degraded(self) -> bool:
+        """True once any read ran with a shard masked out."""
+        return self.degraded_reads > 0
 
     def _replicate(self, bank: StoreBank) -> None:
         """Pin the hot bank's arrays to an every-device replicated layout so
@@ -326,11 +346,18 @@ class ShardedReadBank:
         vecs: Optional[np.ndarray] = None,
         router: Optional[np.ndarray] = None,  # [n, L] lane visibility
         touch: bool = True,
+        shard_mask: Optional[np.ndarray] = None,  # [n_shards] bool; False = dead
     ) -> ReadDecision:
         """One collective read over the whole sharded hierarchy. Returns the
         same ``ReadDecision`` contract as ``read_path.fused_read``; sharded
         levels report store-global flat slot indices (what their
-        ``join_candidates`` expects), replicated levels lane-local ones."""
+        ``join_candidates`` expects), replicated levels lane-local ones.
+
+        ``shard_mask`` marks shards unavailable (False): their candidates
+        score -inf inside the program and their counters stay untouched, so
+        a lookup degrades to the surviving shards' winners instead of the
+        whole collective failing — the read-path leg of the resilience
+        degradation ladder."""
         from repro.core.embeddings import _identity_forward
 
         n = len(texts)
@@ -386,10 +413,18 @@ class ShardedReadBank:
         else:
             ticks = ()
             counters = ((), ())
+        if shard_mask is None:
+            shard_ok = np.ones(self.n_shards, bool)
+        else:
+            shard_ok = np.asarray(shard_mask, bool).reshape(self.n_shards)
+            if not shard_ok.any():
+                raise ValueError("shard_mask marks every shard dead")
+            if not shard_ok.all():
+                self.degraded_reads += 1
         self.dispatches += 1
         q, s, idx, winner, hit, gen, new_counters = program(
             args, thr, qmask, rmask, rep_arrays, rep_life, sh_arrays, sh_life,
-            np.float32(StoreBank.rel_now()), counters, ticks,
+            np.float32(StoreBank.rel_now()), counters, ticks, shard_ok,
         )
         if touch:
             rep_c, sh_c = new_counters
@@ -470,6 +505,7 @@ def host_reference_read(
     specs: Sequence[LevelSpec],
     router: Optional[np.ndarray] = None,
     now: Optional[float] = None,
+    shard_mask: Optional[np.ndarray] = None,
 ) -> dict:
     """The host walk, kept as the parity reference: a pure-numpy mirror of
     the sharded fused program over device-fetched state. Computes the FULL
@@ -510,6 +546,12 @@ def host_reference_read(
             bank = store.bank
             buf = np.asarray(bank.buf).reshape(store.capacity, store.dim)
             valid = np.asarray(bank.valid).reshape(store.capacity).copy()
+            if shard_mask is not None:
+                # shard sid owns the contiguous global flat slots
+                # [sid*cap_shard, (sid+1)*cap_shard) — mirror the program's
+                # availability mask by invalidating dead shards' slots
+                m = np.asarray(shard_mask, bool).ravel()
+                valid &= np.repeat(m, store.capacity // m.size)
             s = _np_scores(buf, q, store.metric, bank.prenormalized)
             if lifecycle:
                 c = np.asarray(bank.d_created).reshape(-1)

@@ -142,11 +142,19 @@ class Gateway:
     # -- handlers --------------------------------------------------------------
 
     def _healthz(self) -> Response:
+        breakers = self.service.client.breaker_snapshot()
+        # the gateway stays "ok" while ANY backend is closed/half-open; all
+        # breakers open means new misses ride the stale ladder or get 503s
+        degraded = bool(breakers) and all(
+            b["state"] == "open" for b in breakers.values()
+        )
+        status = "draining" if self.http.draining else ("degraded" if degraded else "ok")
         payload = {
-            "status": "draining" if self.http.draining else "ok",
+            "status": status,
             "inflight_http": self.http.inflight,
             "inflight_service": self.service.inflight,
             "requests_served": self.http.requests_served,
+            "breakers": breakers,
         }
         self.stats.record(200, None, False)
         return Response.json_response(payload)
@@ -163,6 +171,8 @@ class Gateway:
                 "expired": svc.expired,
                 "rejected": svc.rejected,
                 "deduped": svc.deduped,
+                "stale_served": svc.stale_served,
+                "backend_unavailable": svc.backend_unavailable,
                 "inflight": self.service.inflight,
             },
             "client": {
@@ -170,8 +180,14 @@ class Gateway:
                 "cache_hits": client.cache_hits,
                 "llm_calls": client.llm_calls,
                 "llm_errors": client.llm_errors,
+                "retries": client.retries,
+                "breaker_trips": client.breaker_trips,
+                "breaker_open_skips": client.breaker_open_skips,
+                "all_backends_failed": client.all_backends_failed,
                 "total_cost_usd": client.total_cost_usd,
             },
+            "breakers": self.service.client.breaker_snapshot(),
+            "retry_budget": self.service.client.retry_budget.snapshot(),
             "schedulers": {
                 "lookup_avg_batch": lookup.avg_batch if lookup else 0.0,
                 "dispatch_avg_batch": dispatch.avg_batch if dispatch else 0.0,

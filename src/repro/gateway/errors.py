@@ -11,6 +11,7 @@ the status code without parsing bodies:
     unknown route               404
     wrong method on a route     405     ``Allow`` header
     ``AdmissionRejected``       429     ``Retry-After`` header (shed)
+    ``AllBackendsFailed``       503     ``Retry-After``; structured causes
     ``ServiceClosed``           503     draining/closed
     ``DEADLINE_EXCEEDED`` resp  504     typed response, not an exception
     anything else               500     repr'd, never a raw traceback
@@ -22,6 +23,7 @@ from typing import List, Optional, Tuple
 
 from repro.core.request import CacheResponse
 from repro.gateway.protocol import ProtocolError, error_body
+from repro.resilience.errors import AllBackendsFailed
 from repro.serving.coalescer import AdmissionRejected, ServiceClosed
 
 # (status, headers, body) — what the HTTP layer writes
@@ -44,6 +46,18 @@ def map_exception(exc: BaseException) -> ErrorTriple:
             [("Retry-After", str(RETRY_AFTER_S))],
             error_body(
                 f"server overloaded: {exc}", "rate_limit_error", "admission_rejected"
+            ),
+        )
+    if isinstance(exc, AllBackendsFailed):
+        # the degradation ladder's floor: every backend open/down AND no
+        # stale entry could answer — a retryable outage, not a client error
+        return (
+            503,
+            [("Retry-After", str(RETRY_AFTER_S))],
+            error_body(
+                f"no backend available: {exc}",
+                "service_unavailable",
+                "backend_unavailable",
             ),
         )
     if isinstance(exc, ServiceClosed):

@@ -11,7 +11,8 @@ plus the SSE framing; it never touches a socket.
 Cache-specific knobs ride as OPTIONAL top-level extension fields the
 OpenAI schema ignores: ``priority`` (int), ``deadline_ms`` (float),
 ``ttl_s`` (float), ``use_cache`` / ``force_fresh`` / ``cache_l1`` /
-``cache_l2`` (bools). Unknown fields are ignored, wrong TYPES are a 400 —
+``cache_l2`` / ``allow_stale`` (bools), ``max_stale_s`` (float, bounds
+the stale-if-error window). Unknown fields are ignored, wrong TYPES are a 400 —
 silently coercing them would serve an answer the client didn't ask for.
 """
 from __future__ import annotations
@@ -73,9 +74,15 @@ def _common_knobs(body: Dict[str, Any]) -> Dict[str, Any]:
         force_fresh=_field(body, "force_fresh", bool, False),
         cache_l1=_field(body, "cache_l1", bool, True),
         cache_l2=_field(body, "cache_l2", bool, True),
+        # stale-if-error opt-in (resilience): serve an expired entry instead
+        # of a 503 when every backend is down, bounded by max_stale_s
+        allow_stale=_field(body, "allow_stale", bool, False),
+        max_stale_s=_field(body, "max_stale_s", float, None),
     )
     if kw["max_tokens"] <= 0:
         raise ProtocolError(400, "'max_tokens' must be positive")
+    if kw["max_stale_s"] is not None and kw["max_stale_s"] < 0:
+        raise ProtocolError(400, "'max_stale_s' must be non-negative")
     return kw
 
 

@@ -20,8 +20,17 @@ zero). ``main`` writes ``BENCH_traffic.json``; CI blocks on hit-p50 being
 >=5x below miss-p50 under the mixed workload and on a clean drain. This is
 the end-to-end load gate every later scale-out PR must move.
 
+A third mode replays the SAME workload through ``build_chaos_stack`` — a
+seeded ``FaultInjector`` dropping/slowing ~30% of backend calls while one
+backend flaps — then kills every backend and keeps asking: the breaker +
+retry + stale-if-error ladder must hold availability while cached answers
+(valid -> ``hit``, expired -> ``stale``) keep flowing. ``--chaos`` writes
+``BENCH_chaos.json``; CI gates on availability, stale byte-parity, and
+hit-path isolation (chaos hit p50 vs the clean replay's).
+
 Run:  PYTHONPATH=src python -m repro.gateway.traffic --smoke
       PYTHONPATH=src python -m repro.gateway.traffic --mode http --requests 512
+      PYTHONPATH=src python -m repro.gateway.traffic --chaos --smoke
 """
 from __future__ import annotations
 
@@ -36,6 +45,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.request import CacheRequest, CacheResponse
+from repro.resilience.errors import AllBackendsFailed
 from repro.serving.coalescer import AdmissionRejected, ServiceClosed
 from repro.serving.service import CacheService
 
@@ -87,11 +97,14 @@ class TimedRequest:
     ttl_s: Optional[float] = None
     stream: bool = False
     max_tokens: int = 64
+    allow_stale: bool = False  # stale-if-error opt-in (chaos replays)
+    max_stale_s: Optional[float] = None
 
     def to_cache_request(self) -> CacheRequest:
         return CacheRequest(
             self.prompt, max_tokens=self.max_tokens, priority=self.priority,
             deadline_s=self.deadline_s, ttl_s=self.ttl_s, stream=self.stream,
+            allow_stale=self.allow_stale, max_stale_s=self.max_stale_s,
         )
 
     def to_payload(self) -> Dict[str, Any]:
@@ -103,6 +116,10 @@ class TimedRequest:
             body["deadline_ms"] = self.deadline_s * 1e3
         if self.ttl_s is not None:
             body["ttl_s"] = self.ttl_s
+        if self.allow_stale:
+            body["allow_stale"] = True
+            if self.max_stale_s is not None:
+                body["max_stale_s"] = self.max_stale_s
         return body
 
 
@@ -199,10 +216,28 @@ def generate_workload(cfg: TrafficConfig) -> List[TimedRequest]:
     return events
 
 
+def apply_stale_policy(
+    workload: Sequence[TimedRequest],
+    fraction: float = 1.0,
+    *,
+    max_stale_s: Optional[float] = None,
+    seed: int = 1,
+) -> None:
+    """Mark a seeded ``fraction`` of ``workload`` as ``allow_stale`` in
+    place — the opt-in the chaos replay uses. Drawn from its OWN rng so the
+    base workload stays byte-identical to the non-chaos replay (same seed
+    -> same prompts, arrivals, deadlines)."""
+    rng = np.random.default_rng(seed)
+    for tr in workload:
+        if rng.random() < fraction:
+            tr.allow_stale = True
+            tr.max_stale_s = max_stale_s
+
+
 # -- measurement ----------------------------------------------------------------
 
 
-CLASSES = ("hit", "generative", "tier1", "miss")
+CLASSES = ("hit", "generative", "tier1", "miss", "stale")
 
 
 @dataclass
@@ -216,6 +251,7 @@ class TrafficReport:
     shed: int = 0  # 429 / AdmissionRejected
     expired: int = 0  # 504 / DEADLINE_EXCEEDED
     errors: int = 0  # anything else that wasn't a served answer
+    backend_unavailable: int = 0  # 503 / AllBackendsFailed with no stale entry
     dropped_at_drain: int = 0  # accepted but unresolved after shutdown — MUST be 0
     drain_clean: bool = True
 
@@ -259,8 +295,19 @@ class TrafficReport:
             "shed": self.shed,
             "expired": self.expired,
             "errors": self.errors,
+            "backend_unavailable": self.backend_unavailable,
             "dropped_at_drain": self.dropped_at_drain,
             "drain_clean": self.drain_clean,
+            "stale_served": len(self.latencies_s.get("stale", [])),
+            # of requests that ran to a terminal outcome (sheds and queue
+            # expiries excluded — those are load/deadline policy, not
+            # failures), the fraction answered with content. Stale counts:
+            # serving yesterday's answer IS the availability mechanism.
+            "availability": (
+                served / (served + self.errors + self.backend_unavailable)
+                if served + self.errors + self.backend_unavailable
+                else 1.0
+            ),
         }
 
 
@@ -309,6 +356,12 @@ def run_inprocess(
             lat = time.perf_counter() - t_submit
             try:
                 resp = f.result()
+            except AllBackendsFailed:
+                # every backend open/down and no stale entry could answer —
+                # the degradation ladder's floor, counted apart from bugs
+                with lock:
+                    report.backend_unavailable += 1
+                return
             except Exception:  # noqa: BLE001 — counted, not raised mid-replay
                 with lock:
                     report.errors += 1
@@ -376,6 +429,8 @@ def run_http(
                         )
                     elif reply.status == 429:
                         report.shed += 1
+                    elif reply.status == 503:
+                        report.backend_unavailable += 1
                     elif reply.status == 504:
                         report.expired += 1
                     else:
@@ -435,6 +490,98 @@ def build_stack(
     return service, client, cache
 
 
+CHAOS_BACKENDS = ("chaos-flappy", "chaos-primary", "chaos-reserve")
+
+
+def build_chaos_stack(
+    *,
+    backend_latency_s: float = 0.04,
+    capacity: int = 2048,
+    tier1_capacity: int = 0,
+    max_inflight: int = 512,
+    threshold: float = 0.8,
+    fault_rate: float = 0.3,
+    flap_period: int = 6,
+    seed: int = 0,
+):
+    """``build_stack``'s resilience twin: three MockLLM backends behind ONE
+    seeded ``FaultInjector`` — a primary that drops/slows ~``fault_rate``
+    of calls, a flapping secondary (the mode that trips breakers via the
+    health score), and a mostly-healthy reserve so the escalation ladder
+    has a floor. Fast breaker recovery + tight backoffs keep the replay's
+    wall clock bench-sized. Returns ``(service, client, cache, injector)``;
+    replay the same workload against ``build_stack`` for the clean baseline
+    (same seed -> same faults, the whole point of the seeded injector)."""
+    from repro.core import (
+        EnhancedClient,
+        GenerativeCache,
+        MockLLM,
+        NgramHashEmbedder,
+    )
+    from repro.core.tiers import HostRamTier
+    from repro.core.vector_store import InMemoryVectorStore
+    from repro.resilience import CircuitBreaker, FaultInjector, FaultSpec, RetryPolicy
+
+    emb = NgramHashEmbedder()
+    store = None
+    if tier1_capacity:
+        store = InMemoryVectorStore(
+            emb.dim, capacity=capacity, eviction="lru",
+            tier1=HostRamTier(emb.dim, capacity=tier1_capacity),
+        )
+    cache = GenerativeCache(
+        emb, threshold=threshold, t_single=0.45, t_combined=1.0,
+        capacity=capacity, store=store, cache_synthesized=False,
+    )
+    client = EnhancedClient(
+        cache=cache,
+        retry_policy=RetryPolicy(max_attempts=2, base_backoff_s=0.004,
+                                 max_backoff_s=0.02),
+        breaker_factory=lambda name: CircuitBreaker(
+            name, failure_threshold=3, recovery_s=0.2
+        ),
+    )
+    # escalation order == registration order: the FLAPPING backend is first,
+    # so every miss walks into the flap schedule (down phases trip its
+    # breaker, up phases close it again), fails over to a lossy primary,
+    # and only then to the mostly-healthy reserve
+    injector = FaultInjector(seed=seed)
+    injector.schedule(
+        CHAOS_BACKENDS[0],
+        FaultSpec("flap", period=flap_period, message="flapping upstream"),
+        FaultSpec("error", p=0.1, message="injected connection reset"),
+    )
+    injector.schedule(
+        CHAOS_BACKENDS[1],
+        FaultSpec("error", p=fault_rate, message="injected connection reset"),
+        FaultSpec("latency", p=0.1, latency_s=3 * backend_latency_s),
+    )
+    injector.schedule(
+        CHAOS_BACKENDS[2],
+        FaultSpec("error", p=0.05, message="injected connection reset"),
+    )
+    for name in CHAOS_BACKENDS:
+        client.register_backend(
+            injector.wrap_backend(MockLLM(name, latency_s=backend_latency_s))
+        )
+    # lookup batching stays at build_stack's 16, but dispatch groups are
+    # capped small: each group is ONE failover walk, and the chaos replay
+    # wants many walks through the fault schedule, not a handful of big
+    # coalesced batches that dodge the injector
+    service = CacheService(client, max_batch=16, max_wait_ms=2.0,
+                           dispatch_batch=2, max_inflight=max_inflight)
+    return service, client, cache, injector
+
+
+def all_backends_down(injector) -> None:
+    """Rewrite every chaos backend's schedule to hard-fail from here on —
+    the total-outage window the stale-serving gate replays through."""
+    from repro.resilience import FaultSpec
+
+    for name in CHAOS_BACKENDS:
+        injector.schedule(name, FaultSpec("error", message="backend down"))
+
+
 def _warm(service: CacheService, cache) -> None:
     """Compile the per-bucket jit variants outside the timed replay."""
     for b in (1, 2, 4, 8, 16):
@@ -477,9 +624,158 @@ def prewarm(cache, corpus: Sequence[str], *, churn: int) -> None:
     cache.lookup_batch([corpus[0]])
 
 
+# -- chaos mode -----------------------------------------------------------------
+
+
+def _all_down_window(
+    service: CacheService, cache, client, injector, *, n: int = 24, ttl_s: float = 0.05
+) -> Dict[str, Any]:
+    """Total-outage replay: cache 2n fresh answers (half on a tiny TTL),
+    wait past expiry, kill every backend, then ask everything back plus a
+    slice of never-cached prompts. The gate: valid entries still answer
+    ``hit``, expired ones answer ``stale`` byte-identically (the ladder's
+    stale-if-error rung), and only the never-cached slice surfaces the
+    typed 503. Runs both in-process and through a live gateway so the
+    ``X-Cache: stale|hit`` header contract is what's actually measured."""
+    from repro.gateway.app import serve_in_thread
+    from repro.gateway.client import GatewayClient
+
+    # three textually DISJOINT prompt families (n-gram sim across families is
+    # far below t_single), so an expired prompt can only be answered by its
+    # own stale entry — never by a live hit or a generative synthesis from
+    # the valid family, which would mask the ladder rung under test
+    stale_prompts = [f"obsolete telemetry shard {i} checksum {i * 31 + 7}" for i in range(n)]
+    fresh_prompts = [f"healthy inventory ledger {i} balance {i * 17 + 3}" for i in range(n)]
+    novel_prompts = [f"uncharted frontier question {i} nobody ever asked" for i in range(max(2, n // 4))]
+    # valid entries FIRST: inserting them after the TTL'd batch can land past
+    # the short TTL, and the evictor reclaims expired slots before live ones —
+    # it would overwrite the very stale inventory this window serves
+    cache.insert_batch(fresh_prompts, [f"valid answer {i}" for i in range(n)])
+    cache.insert_batch(
+        stale_prompts, [f"expired answer {i}" for i in range(n)], ttls=[ttl_s] * n
+    )
+    time.sleep(2.5 * ttl_s)  # the TTL'd half is now past expiry
+    all_backends_down(injector)
+
+    win: Dict[str, Any] = {
+        "n_expired": n, "n_valid": n, "n_novel": len(novel_prompts),
+        "stale": 0, "hit": 0, "unavailable": 0, "other": 0,
+        "stale_byte_parity": True,
+    }
+    for i, p in enumerate(stale_prompts):
+        try:
+            resp = service.submit(CacheRequest(p, allow_stale=True)).result(timeout=30)
+        except AllBackendsFailed:
+            win["unavailable"] += 1
+            continue
+        if resp.cache_status == "stale":
+            win["stale"] += 1
+            if resp.text != f"expired answer {i}":
+                win["stale_byte_parity"] = False
+        else:
+            win["other"] += 1
+    for p in fresh_prompts:
+        resp = service.submit(CacheRequest(p, allow_stale=True)).result(timeout=30)
+        win["hit" if resp.from_cache and resp.cache_status != "stale" else "other"] += 1
+    for p in novel_prompts:
+        try:
+            service.submit(CacheRequest(p, allow_stale=True)).result(timeout=30)
+            win["other"] += 1
+        except AllBackendsFailed:
+            win["unavailable"] += 1
+
+    # the same contract over the wire: X-Cache is what clients dispatch on
+    runner = serve_in_thread(service)
+    http: Dict[str, Any] = {"stale": 0, "hit": 0, "503": 0, "other": 0}
+    try:
+        with GatewayClient("127.0.0.1", runner.gateway.port, timeout=30.0) as gw:
+            probes = (
+                [(p, "stale") for p in stale_prompts[: n // 2]]
+                + [(p, "hit") for p in fresh_prompts[: n // 2]]
+                + [(p, "503") for p in novel_prompts[:2]]
+            )
+            for p, want in probes:
+                reply = gw.request(
+                    "POST", "/v1/completions",
+                    {"prompt": p, "allow_stale": True, "max_tokens": 64},
+                )
+                if reply.status == 503:
+                    http["503"] += 1
+                elif reply.status == 200:
+                    xc = reply.headers.get("x-cache", "")
+                    http[xc if xc in ("stale", "hit") else "other"] += 1
+                else:
+                    http["other"] += 1
+                if want == "503":
+                    http.setdefault("novel_got_retry_after", True)
+                    if reply.status != 503 or not reply.headers.get("retry-after"):
+                        http["novel_got_retry_after"] = False
+    finally:
+        runner.stop()
+    win["http"] = http
+    win["stale_serve_rate"] = win["stale"] / max(1, win["n_expired"])
+    return win
+
+
+def run_chaos_replay(
+    cfg: TrafficConfig,
+    *,
+    backend_latency_s: float = 0.04,
+    time_scale: float = 1.0,
+    fault_rate: float = 0.3,
+    stale_fraction: float = 0.9,
+    seed: int = 0,
+) -> Dict[str, Any]:
+    """The fault-schedule replay mode: the SAME seeded workload as the
+    clean replay, driven through ``build_chaos_stack`` while ~``fault_rate``
+    of backend calls fault and one backend flaps, then an all-backends-down
+    window that must keep answering from the cache (``hit``/``stale``).
+    Deterministic end to end: workload seed + injector seed fix which calls
+    fault. Returns the chaos section of ``BENCH_chaos.json``."""
+    from dataclasses import asdict as _asdict
+
+    workload = generate_workload(cfg)
+    apply_stale_policy(workload, stale_fraction, seed=cfg.seed + 1)
+    service, client, cache, injector = build_chaos_stack(
+        backend_latency_s=backend_latency_s, tier1_capacity=8 * cfg.corpus_size,
+        capacity=2 * cfg.corpus_size, max_inflight=256,
+        fault_rate=fault_rate, seed=seed,
+    )
+    _warm(service, cache)
+    prewarm(cache, make_corpus(cfg), churn=2 * cfg.corpus_size)
+    rep = run_inprocess(service, workload, time_scale=time_scale,
+                        close_service=False)
+    chaos = rep.to_dict()
+    # fault accounting for the CHAOS phase only — the all-down window that
+    # follows injects on every call and would swamp the ~fault_rate share
+    chaos_faults = injector.snapshot()
+    window = _all_down_window(service, cache, client, injector)
+    service.close()
+    chaos["dropped_at_drain"] = rep.dropped_at_drain
+    faults = injector.snapshot()
+    total_calls = sum(chaos_faults["calls"].values())
+    return {
+        "fault_rate": fault_rate,
+        "stale_fraction": stale_fraction,
+        "chaos": chaos,
+        "all_down_window": window,
+        "faults": faults,
+        "chaos_faults": chaos_faults,
+        "fault_share": chaos_faults["total_injected"] / max(1, total_calls),
+        "breakers": client.breaker_snapshot(),
+        "retry_budget": client.retry_budget.snapshot(),
+        "client_stats": _asdict(client.stats),
+        "service_stats": _asdict(service.stats),
+    }
+
+
 def main(argv=None) -> Dict[str, Any]:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-schedule replay: faulting/flapping backends, "
+                         "stale serving, and an all-backends-down window")
+    ap.add_argument("--fault-rate", type=float, default=0.3)
     ap.add_argument("--mode", choices=("inprocess", "http", "both"), default="both")
     ap.add_argument("--requests", type=int, default=0)
     ap.add_argument("--users", type=int, default=0)
@@ -507,6 +803,27 @@ def main(argv=None) -> Dict[str, Any]:
 
     out: Dict[str, Any] = {"config": asdict(cfg),
                            "backend_latency_ms": backend_s * 1e3}
+
+    if args.chaos:
+        res = run_chaos_replay(
+            cfg, backend_latency_s=backend_s, time_scale=args.time_scale,
+            fault_rate=args.fault_rate, seed=args.seed,
+        )
+        out.update(res)
+        d, w = res["chaos"], res["all_down_window"]
+        print(f"[chaos]     availability={d['availability']:.4f} | "
+              f"fault_share={res['fault_share']:.2f} | "
+              f"stale_served={d['stale_served']} "
+              f"unavailable={d['backend_unavailable']} "
+              f"dropped={d['dropped_at_drain']}")
+        print(f"[all-down]  stale={w['stale']}/{w['n_expired']} "
+              f"hit={w['hit']}/{w['n_valid']} 503={w['unavailable']} "
+              f"byte_parity={w['stale_byte_parity']} http={w['http']}")
+        path = args.out if args.out != "BENCH_traffic.json" else "BENCH_chaos.json"
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"-> {path}")
+        return out
 
     if args.mode in ("inprocess", "both"):
         service, client, cache = build_stack(

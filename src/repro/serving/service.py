@@ -65,11 +65,13 @@ from repro.core.request import (
     DEADLINE_EXCEEDED,
     GENERATED,
     HIT,
+    STALE,
     CacheChunk,
     CacheRequest,
     CacheResponse,
     split_stream_tokens,
 )
+from repro.resilience.errors import AllBackendsFailed
 from repro.serving.coalescer import (  # noqa: F401 — re-exported service errors
     AdmissionRejected,
     BatchCoalescer,
@@ -107,6 +109,8 @@ class ServiceStats:
     expired: int = 0
     rejected: int = 0
     deduped: int = 0  # queued misses resolved from another miss's generation
+    stale_served: int = 0  # expired entries served stale-if-error (backends down)
+    backend_unavailable: int = 0  # misses that hit AllBackendsFailed with no stale answer
 
 
 class CacheService:
@@ -589,6 +593,20 @@ class CacheService:
                     raise RuntimeError(
                         f"backend returned {len(resps)} responses for {len(idxs)} prompts"
                     )
+            except AllBackendsFailed as e:
+                # degradation ladder: every backend open/down -> rows that
+                # opted in (allow_stale) try the expired-inventory lookup
+                # before the typed backend_unavailable error reaches a future
+                served = self._serve_stale([pendings[i] for i in idxs])
+                for j, i in enumerate(idxs):
+                    stale = served.get(j)
+                    if stale is not None:
+                        outcomes[i] = stale
+                    else:
+                        with self._lock:
+                            self.stats.backend_unavailable += 1
+                        outcomes[i] = e
+                continue
             except Exception as e:  # noqa: BLE001 — the group's futures carry it
                 for i in idxs:
                     outcomes[i] = e
@@ -673,6 +691,59 @@ class CacheService:
             for i, out in zip(regen, redo):
                 outcomes[i] = out
         return outcomes  # type: ignore[return-value]
+
+    def _serve_stale(self, pendings: List[_Pending]) -> Dict[int, CacheResponse]:
+        """Stale-if-error: after ``AllBackendsFailed``, rows that opted in
+        (``allow_stale`` + ``use_cache``) consult the expired inventory
+        (tier-0 entry table + tier-1 ring, via the hierarchy walk when one
+        is mounted). Returns local index -> STALE CacheResponse for the rows
+        a stale entry answered; the rest keep the typed error."""
+        client = self.client
+        target = client.hierarchy if client.hierarchy is not None else client.cache
+        if target is None:
+            return {}
+        elig = [
+            j
+            for j, p in enumerate(pendings)
+            if p.request.allow_stale and p.request.use_cache and p.vec is not None
+        ]
+        if not elig:
+            return {}
+        queries = [pendings[j].request.prompt for j in elig]
+        vecs = np.stack([np.asarray(pendings[j].vec, np.float32) for j in elig])
+        contexts = [
+            client._context_for(pendings[j].request, pendings[j].chosen) for j in elig
+        ]
+        stales = [pendings[j].request.max_stale_s for j in elig]
+        with self._cache_lock:
+            if client.hierarchy is not None:
+                found = client.hierarchy.lookup_stale(
+                    queries, vecs, contexts, max_stale_s=stales,
+                    l2_ok=[pendings[j].request.cache_l2 for j in elig],
+                )
+            else:
+                thr = [
+                    client.cache.effective_threshold(q, c)
+                    for q, c in zip(queries, contexts)
+                ]
+                found = client.cache.lookup_stale(
+                    queries, vecs, thr, max_stale_s=stales
+                )
+        out: Dict[int, CacheResponse] = {}
+        now = time.perf_counter()
+        for k, res in found.items():
+            j = elig[k]
+            p = pendings[j]
+            resp = CacheResponse(
+                res.response, STALE, True, res, None, "cache", 0.0,
+                now - p.t_submit, p.rid,
+            )
+            with self._lock:
+                self.stats.stale_served += 1
+            with client._state_lock:
+                client._results[p.rid] = client._to_client_result(resp)
+            out[j] = resp
+        return out
 
     def _backfill(
         self, pendings: List[_Pending], resps: List[LLMResponse]

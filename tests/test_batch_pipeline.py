@@ -245,13 +245,21 @@ def test_complete_batch_matches_sequential_query_decisions():
 
 
 def test_complete_batch_failover():
+    from repro.resilience import RetryPolicy
+
     emb = NgramHashEmbedder()
-    client = EnhancedClient(cache=SemanticCache(emb, threshold=0.9))
+    client = EnhancedClient(
+        cache=SemanticCache(emb, threshold=0.9),
+        retry_policy=RetryPolicy(max_attempts=2, base_backoff_s=0.0, jitter=0.0),
+    )
     client.register_backend(MockLLM("dead", fail=True))
     client.register_backend(MockLLM("alive"))
     rs = client.complete_batch(["hello", "world"])
     assert [r.model for r in rs] == ["alive", "alive"]
-    assert client.stats.llm_errors == 1  # one batched failover, not per prompt
+    # errors are counted per failover ATTEMPT on the batch, never per prompt:
+    # 2 attempts against the dead backend, regardless of batch width
+    assert client.stats.llm_errors == 2
+    assert client.stats.retries == 1
 
 
 def test_coalescer_batches_concurrent_requests():

@@ -88,12 +88,18 @@ def test_client_force_fresh_adds_second_response(emb):
 
 
 def test_client_failover(emb):
-    client = EnhancedClient(cache=_gc(emb))
+    from repro.resilience import RetryPolicy
+
+    client = EnhancedClient(
+        cache=_gc(emb),
+        retry_policy=RetryPolicy(max_attempts=2, base_backoff_s=0.0, jitter=0.0),
+    )
     client.register_backend(MockLLM("dead", fail=True))
     client.register_backend(MockLLM("alive"))
     r = client.query("hello there")
     assert r.model == "alive"
-    assert client.stats.llm_errors == 1
+    assert client.stats.llm_errors == 2  # both attempts against the dead backend
+    assert client.stats.retries == 1
 
 
 def test_client_parallel_dispatch(emb):

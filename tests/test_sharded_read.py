@@ -330,6 +330,59 @@ def test_pinned_staging_cpu_fallback():
         assert staged is rows
 
 
+def test_shard_mask_degrades_to_survivors():
+    """Resilience leg: a dead shard's candidates score -inf inside the
+    collective program and its counters stay untouched, so lookups degrade
+    to the surviving shards' winners — verified against the masked host
+    reference walk. (On the 1-device mesh the only shard can't be masked;
+    the 8-device subprocess rerun covers the real degradation.)"""
+    _, _, sh, srb = _mixed_bank()
+    q, thr = _queries()
+    n_shards = srb.n_shards
+    if n_shards == 1:
+        with pytest.raises(ValueError):
+            srb.fused_read(None, [None] * len(q), thr, SPECS, vecs=q,
+                           shard_mask=np.zeros(1, bool))
+        ref = host_reference_read(srb, q, thr, SPECS)
+        dec = srb.fused_read(None, [None] * len(q), thr, SPECS, vecs=q,
+                             touch=False, shard_mask=np.ones(1, bool))
+        np.testing.assert_array_equal(dec.winner, ref["winner"])
+        np.testing.assert_array_equal(dec.scores, ref["scores"])
+        assert not srb.degraded  # an all-alive mask is not a degraded read
+        return
+
+    # kill the shard owning unit(10)'s L2 entry (the row-1 exact hit)
+    clean = host_reference_read(srb, q, thr, SPECS)
+    cap_shard = sh.capacity // n_shards
+    dead = int(clean["idx"][1, 1, 0]) // cap_shard
+    mask = np.ones(n_shards, bool)
+    mask[dead] = False
+
+    ref = host_reference_read(srb, q, thr, SPECS, shard_mask=mask)
+    before = _counters(srb)
+    dec = srb.fused_read(None, [None] * len(q), thr, SPECS, vecs=q,
+                         shard_mask=mask)
+    after = _counters(srb)
+
+    assert srb.degraded and srb.degraded_reads == 1
+    np.testing.assert_array_equal(dec.winner, ref["winner"])
+    np.testing.assert_array_equal(dec.hit, ref["hit"])
+    np.testing.assert_array_equal(dec.generative, ref["generative"])
+    finite = np.isfinite(ref["scores"])
+    np.testing.assert_array_equal(dec.scores[finite], ref["scores"][finite])
+    np.testing.assert_array_equal(dec.idx[finite], ref["idx"][finite])
+    # row 1 lost its exact L2 hit with the shard; row 0's L1 hit survives
+    assert bool(clean["hit"][1, 1]) and not bool(dec.hit[1, 1])
+    assert bool(dec.hit[0, 0])
+    # counters: exactly the masked reference's touch mask, nothing on the
+    # dead shard's slots
+    expected = _expected_count_delta(srb, ref)
+    for (l0, c0), (l1, c1), exp in zip(before, after, expected):
+        np.testing.assert_array_equal(
+            c1.astype(np.int64) - c0.astype(np.int64), exp
+        )
+
+
 def test_eight_device_collective():
     """The whole file again on a forced 8-virtual-device mesh: real
     cross-shard candidate exchange, ownership-masked counter scatters."""
